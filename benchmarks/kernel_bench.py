@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks (correctness-scale; §4.4 support).
+
+On CPU, Pallas interpret mode is an emulator — wall-clock there is
+meaningless. This bench (a) re-validates each kernel against its oracle
+on larger shapes than the unit tests, (b) times the *jnp reference path*
+(what the dry-run lowers) for dense-vs-dequant overhead visibility, and
+(c) reports the analytic VMEM working set per kernel tile configuration
+(the quantity that governs TPU occupancy).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizers import quantize_to_packed
+from repro.kernels import ref
+from repro.kernels.quant_matmul import quant_matmul_pallas
+
+from .common import csv_row
+
+
+def _vmem_bytes(bm, bn, bk, bits, group):
+    x = bm * bk * 4
+    w = bk * bn * bits // 8
+    deq = bk * bn * 4
+    sc = 2 * (bk // group) * bn * 4
+    acc = bm * bn * 4
+    return x + w + deq + sc + acc
+
+
+def run(quick: bool = False):
+    print("== kernel_bench ==")
+    rows = []
+    rng = np.random.default_rng(0)
+    m, k, n = (64, 512, 512) if quick else (128, 1024, 1024)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    reps = 3 if quick else 10
+
+    dense = jax.jit(lambda a, b: a @ b)
+    _ = jax.block_until_ready(dense(x, w))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(dense(x, w))
+    t_dense = (time.time() - t0) / reps
+    rows.append(csv_row("kernel/dense_matmul", t_dense * 1e6, f"m{m}k{k}n{n}"))
+
+    for bits in (1, 2, 3, 4):
+        pt = quantize_to_packed(w, bits, group=128, refine=False)
+        f = jax.jit(lambda a, d=pt.data, s=pt.scale, z=pt.zero: ref.quant_matmul_ref(
+            a, d, s, z, bits=bits, group=128))
+        y = jax.block_until_ready(f(x))
+        t0 = time.time()
+        for _ in range(reps):
+            jax.block_until_ready(f(x))
+        t_q = (time.time() - t0) / reps
+        # correctness vs pallas interpret on a sub-tile
+        y_pl = quant_matmul_pallas(
+            x[:32], pt.data, pt.scale, pt.zero, bits=bits, group=128,
+            bm=32, bn=min(n, 256), bk=min(k, 512), interpret=True,
+        )
+        err = float(jnp.max(jnp.abs(y_pl - f(x[:32]))))
+        vmem = _vmem_bytes(256, 256, 512, bits, 128)
+        rows.append(csv_row(
+            f"kernel/quant_matmul_{bits}b", t_q * 1e6,
+            f"vs_dense={t_q/t_dense:.2f};pallas_maxerr={err:.2e};"
+            f"vmem_tile_kb={vmem//1024}"))
+        assert err < 1e-3, f"{bits}-bit kernel mismatch {err}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig. 13 reproduction: sparsity-constraint λ vs learned mask ratio.
+
+Trains the OTP router at several λ and records the mask-ratio
+trajectory; the paper's claim is monotone: larger λ → higher pruning.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import pipeline
+from repro.core.otp_train import OTPTrainConfig, train_otp
+from repro.data.pipeline import make_calibration_tokens
+
+from .common import calibration, csv_row, trained_model
+
+
+def run(quick: bool = False):
+    print("== lambda_sweep (Fig. 13) ==")
+    cfg, params = trained_model()
+    calib = calibration(cfg, params)
+    eps = pipeline.compute_eps(params, calib, cfg, eps_tokens=256)
+    plan = pipeline.run_pmq(params, calib, cfg, target_avg_bits=2.0, eps=eps)
+    blocks_c, top = pipeline.compress_model(params, calib, plan, cfg,
+                                            use_gptq=False)
+    data = make_calibration_tokens(cfg.vocab_size, 96, 64, seed=11)
+    lams = [1.0, 2.0] if quick else [0.5, 1.0, 2.0]
+    steps = 20 if quick else 60
+    rows, finals = [], {}
+    for lam in lams:
+        t0 = time.time()
+        _, hist = train_otp(
+            blocks_c, top, cfg, data,
+            OTPTrainConfig(steps=steps, batch=4, lr=5e-3, lam=lam, seed=1),
+        )
+        traj = [h["mask_ratio"] for h in hist]
+        finals[lam] = sum(traj[-5:]) / 5
+        rows.append(csv_row(
+            f"lambda_sweep/lam{lam}", (time.time() - t0) * 1e6,
+            f"final_ratio={finals[lam]:.3f};start_ratio={traj[0]:.3f}"))
+    ordered = sorted(finals)
+    mono = all(finals[a] <= finals[b] + 0.05
+               for a, b in zip(ordered, ordered[1:]))
+    print(f"  mask ratio by λ: {finals} monotone≈{mono}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,178 @@
+"""Roofline report (assignment deliverable (g)).
+
+Reads the per-cell dry-run JSONs (repro.launch.dryrun) and emits the
+§Roofline table: three terms per (arch × shape × mesh), dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and per-device fit.
+
+Byte model (DESIGN.md §8 / EXPERIMENTS.md):
+* compute term — while-aware parsed HLO dot-FLOPs (per device);
+* memory  term — max(analytic floor, XLA cost_analysis bytes). The
+  analytic floor counts parameter + optimizer + KV-cache + residual-
+  stash traffic (formulas below); the parsed-HLO byte model is reported
+  as an upper bound (it charges flash-attention interiors that live in
+  VMEM on TPU);
+* collective term — parsed collective operand bytes (while-aware).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(cfg, shape) -> float:
+    """Assignment MODEL_FLOPS: 6·N·D train / 2·N·D prefill / 2·N_act·B
+    decode (N_act for MoE; D = tokens processed), GLOBAL."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    return 2.0 * n_act * shape.global_batch  # decode: one token per seq
+
+
+def _weight_bytes(cfg, precision: str) -> float:
+    p_total = cfg.param_count()
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    body = p_total - emb
+    if precision != "quant":
+        return 2.0 * p_total  # bf16
+    if cfg.is_moe:
+        expert = cfg.num_layers * cfg.num_experts * 3 * cfg.d_model * cfg.d_ff_expert
+        rest = body - expert
+        return expert * 2.25 / 8 + rest * 4 / 8 + emb * 2.0
+    return body * 4 / 8 + emb * 2.0
+
+
+def _cache_bytes(cfg, shape) -> float:
+    if cfg.family == "ssm":
+        # recurrent state only
+        return cfg.num_layers * shape.global_batch * (
+            cfg.num_heads * 256 * 256 * 4 + cfg.d_model * 16
+        )
+    l_attn = cfg.num_layers
+    if cfg.family == "hybrid":
+        l_attn = cfg.num_layers // 3
+    s_eff = shape.seq_len
+    if cfg.local_window and cfg.local_global_ratio:
+        n_glob = cfg.num_layers // (cfg.local_global_ratio + 1)
+        n_loc = cfg.num_layers - n_glob
+        return (
+            (n_glob * s_eff + n_loc * min(cfg.local_window, s_eff))
+            * shape.global_batch * cfg.num_kv_heads * cfg.head_dim * 2 * 2
+        )
+    if cfg.local_window:
+        s_eff = min(cfg.local_window, s_eff)
+    return l_attn * shape.global_batch * s_eff * cfg.num_kv_heads * cfg.head_dim * 2 * 2
+
+
+def analytic_bytes(cfg, shape, meta: Dict, chips: int) -> float:
+    """Per-device analytic HBM-traffic floor."""
+    kind = shape.kind
+    precision = meta.get("precision", "bf16")
+    wb = _weight_bytes(cfg, precision)
+    tokens = shape.global_batch * shape.seq_len
+    act = tokens * cfg.d_model * 2  # one residual tensor, bf16
+    if kind == "train":
+        if meta.get("train_mode") == "otp":
+            # frozen compressed weights read twice (student+teacher)
+            total = 2 * wb + 6 * cfg.num_layers * act
+        else:
+            # fwd + bwd + update reads/writes + Adam m/v rw (f32)
+            p = cfg.param_count()
+            total = 3 * 2 * p + 16 * p + 4 * cfg.num_layers * act
+        return total / chips
+    if kind == "prefill":
+        total = wb + 2 * _cache_bytes(cfg, shape) + 4 * cfg.num_layers * act
+        return total / chips
+    # decode: weights + cache read + tiny activations
+    total = wb + _cache_bytes(cfg, shape)
+    return total / chips
+
+
+def load_cells(result_dir: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def summarize(cell: Dict) -> Dict:
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    chips = cell["chips"]
+    mf = model_flops(cfg, shape) / chips  # per device
+    hlo_f = cell["hlo_flops_per_dev"]
+    ana_b = analytic_bytes(cfg, shape, cell.get("meta", {}), chips)
+    mem_b = max(ana_b, cell.get("xla_bytes_accessed", 0.0))
+    compute = hlo_f / PEAK_FLOPS
+    memory = mem_b / HBM_BW
+    coll = sum(cell["collective_bytes_per_dev"].values()) / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dom = max(terms, key=terms.get)
+    # roofline fraction = fundamental work / total modeled time: the ideal
+    # step does either peak-rate math or the analytic-floor weight/cache
+    # movement; everything else (excess bytes, collectives) is overhead.
+    # 1.0 = at the roofline. (compute-bound train ≈ compute/sum; decode ≈
+    # weight-read floor/sum.)
+    fundamental = max(min(compute, mf / PEAK_FLOPS), ana_b / HBM_BW)
+    frac = fundamental / max(sum(terms.values()), 1e-12)
+    return {
+        **{f"{k}_s": v for k, v in terms.items()},
+        "dominant": dom,
+        "roofline_fraction": frac,
+        "model_flops_ratio": mf / max(hlo_f, 1.0),
+        "mem_upper_s": cell["hbm_bytes_per_dev"] / HBM_BW,
+        "fits": cell["memory"]["fits_16gb"],
+        "per_dev_gib": cell["memory"]["per_device_total"] / 2**30,
+    }
+
+
+def run(result_dir: str = "results/dryrun", out_md: str = "results/roofline.md"):
+    print("== roofline ==")
+    cells = load_cells(result_dir)
+    if not cells:
+        print("  (no dry-run results found — run repro.launch.dryrun first)")
+        return []
+    lines = [
+        "| arch | shape | mesh | step | compute (ms) | memory (ms) | "
+        "collective (ms) | dominant | roofline frac | MODEL/HLO flops | "
+        "fits 16G | GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    rows = []
+    for cell in cells:
+        s = summarize(cell)
+        lines.append(
+            f"| {cell['arch']} | {cell['shape']} | {cell['mesh']} | "
+            f"{cell['step']} | {s['compute_s']*1e3:.2f} | {s['memory_s']*1e3:.2f} | "
+            f"{s['collective_s']*1e3:.2f} | {s['dominant']} | "
+            f"{s['roofline_fraction']:.3f} | {s['model_flops_ratio']:.2f} | "
+            f"{'✓' if s['fits'] else '✗'} | {s['per_dev_gib']:.2f} |"
+        )
+        rows.append(
+            f"roofline/{cell['arch']}/{cell['shape']}/{cell['mesh']},"
+            f"{s['compute_s']*1e6:.1f},"
+            f"dom={s['dominant']};frac={s['roofline_fraction']:.3f}"
+        )
+        print(rows[-1])
+    os.makedirs(os.path.dirname(out_md), exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote {out_md} ({len(cells)} cells)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,75 @@
+"""OTP router training on a PMQ-compressed checkpoint (paper §3.4).
+
+    PYTHONPATH=src python examples/otp_training.py --ckpt results/ckpt_moe100m
+
+Loads the 100M MoE checkpoint (train it first with train_moe_100m.py, or
+the script falls back to a random model), compresses with PMQ, trains the
+per-layer DM routers with different sparsity weights λ and reports the
+mask-ratio trajectories (paper Fig. 13).
+"""
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import pipeline
+from repro.core.otp_train import OTPTrainConfig, train_otp
+from repro.data.pipeline import make_calibration_tokens
+from repro.models.registry import get_model
+from train_moe_100m import CFG_100M
+
+
+def load_params(ckpt_dir):
+    bundle = get_model(CFG_100M)
+    params = bundle.init(jax.random.PRNGKey(0))
+    try:
+        ckpt = Checkpointer(ckpt_dir)
+        last = ckpt.latest_step()
+        if last is not None:
+            from repro.optim.adamw import AdamWConfig, adamw_init
+
+            opt = adamw_init(params, AdamWConfig())
+            st = ckpt.restore(last, {"params": params, "opt": opt})
+            print(f"loaded checkpoint step {last}")
+            return st["params"]
+    except FileNotFoundError:
+        pass
+    print("WARNING: no checkpoint found — using random init")
+    return params
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--ckpt", default="results/ckpt_moe100m")
+    p.add_argument("--steps", type=int, default=60)
+    p.add_argument("--lams", default="0.5,1.0,2.0")
+    p.add_argument("--bits", type=float, default=2.25)
+    args = p.parse_args()
+
+    cfg = CFG_100M
+    params = load_params(args.ckpt)
+    calib_tokens = jnp.asarray(make_calibration_tokens(cfg.vocab_size, 8, 128))
+    calib = pipeline.calibrate(params, calib_tokens, cfg)
+    eps = pipeline.compute_eps(params, calib, cfg, eps_tokens=512)
+    plan = pipeline.run_pmq(params, calib, cfg, target_avg_bits=args.bits, eps=eps)
+    print(f"PMQ: avg {plan.avg_bits:.3f} bits {plan.histogram()}")
+    blocks_c, top = pipeline.compress_model(
+        params, calib, plan, cfg, use_gptq=False
+    )
+    data = make_calibration_tokens(cfg.vocab_size, 128, 64, seed=3)
+    out = {}
+    for lam in [float(x) for x in args.lams.split(",")]:
+        tcfg = OTPTrainConfig(steps=args.steps, batch=4, lr=5e-3, lam=lam)
+        _, hist = train_otp(blocks_c, top, cfg, data, tcfg)
+        traj = [h["mask_ratio"] for h in hist]
+        out[lam] = {"final_mask_ratio": traj[-1], "final_kl": hist[-1]["kl"]}
+        print(f"λ={lam}: mask ratio {traj[0]:.3f} → {traj[-1]:.3f} "
+              f"(KL {hist[-1]['kl']:.4f})")
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Config registry: ``get_config("<arch-id>")`` for all assigned archs."""
+from __future__ import annotations
+
+from .base import ModelConfig, SHAPES, ShapeConfig, supported_shapes
+
+from .qwen3_14b import CONFIG as _qwen3
+from .gemma3_27b import CONFIG as _gemma3
+from .command_r_35b import CONFIG as _commandr
+from .tinyllama_1_1b import CONFIG as _tinyllama
+from .whisper_small import CONFIG as _whisper
+from .moonshot_v1_16b_a3b import CONFIG as _moonshot
+from .kimi_k2_1t_a32b import CONFIG as _kimi
+from .recurrentgemma_2b import CONFIG as _rgemma
+from .llava_next_mistral_7b import CONFIG as _llava
+from .xlstm_350m import CONFIG as _xlstm
+
+CONFIGS = {
+    c.name: c
+    for c in [
+        _qwen3,
+        _gemma3,
+        _commandr,
+        _tinyllama,
+        _whisper,
+        _moonshot,
+        _kimi,
+        _rgemma,
+        _llava,
+        _xlstm,
+    ]
+}
+
+ARCH_IDS = tuple(sorted(CONFIGS))
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return CONFIGS[name]
+
+
+def all_cells():
+    """Every (arch, shape) dry-run cell, with skips applied (DESIGN §4)."""
+    for name in ARCH_IDS:
+        cfg = CONFIGS[name]
+        for shape_name in supported_shapes(cfg):
+            yield name, shape_name

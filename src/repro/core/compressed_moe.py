@@ -1,0 +1,316 @@
+"""PMQ-compressed MoE experts: bit-bucketed storage + EP-chunked compute.
+
+After :func:`repro.core.pmq.allocate_model` assigns per-expert bit-widths,
+experts are **permuted so equal-width experts are contiguous** and stacked
+into ≤3 *buckets* (one per bit-width). Each bucket is padded to a multiple
+of the expert-parallel shard count so the compute scans one local expert
+per shard per step — dequantized weights exist only as a
+[ep, D, F]-transient in bf16, never the whole bucket (DESIGN.md §5.4).
+
+On TPU the scan body is replaced by the ``moe_gmm`` Pallas kernel; the
+jnp path below is its oracle-equivalent and the dry-run path.
+
+The router remap (original expert id → permuted slot) rides the routing
+top-k output, so the rest of the MoE layer (capacity dispatch, OTP
+masking, combine) is unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ref as kref
+from ..models.moe import capacity_dispatch, combine, route_topk
+from ..models.layers import mlp
+from ..parallel.sharding import model_axis_size, shard
+from . import otp as otp_mod
+from .packing import packed_nbytes
+from .quantizers import quantize_to_packed
+
+__all__ = [
+    "BucketMeta",
+    "CompressedExperts",
+    "build_compressed_experts",
+    "compressed_expert_ffn",
+    "compressed_moe_layer",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketMeta:
+    bits: int
+    start: int  # first permuted slot
+    count: int  # padded expert count (multiple of ep)
+
+
+@dataclasses.dataclass
+class CompressedExperts:
+    """Static metadata + array pytree for one layer's quantized experts."""
+
+    meta: Tuple[BucketMeta, ...]  # static
+    slot_of_expert: jnp.ndarray  # [E] original id -> permuted slot
+    arrays: Dict  # {bucket_i: {w_gate/w_up/w_down: {data|hi|lo, scale, zero}}}
+    num_slots: int  # total padded slots
+    group: int
+    d_model: int
+    d_ff: int
+
+    @property
+    def weight_bytes(self) -> int:
+        tot = 0
+        for i, m in enumerate(self.meta):
+            for w in ("w_gate", "w_up", "w_down"):
+                a = self.arrays[f"b{i}"][w]
+                for key in ("data", "hi", "lo", "scale", "zero"):
+                    if key in a:
+                        arr = a[key]
+                        tot += arr.size * arr.dtype.itemsize
+        return tot
+
+
+def _flatten(xs):
+    return [x for x in xs]
+
+
+jax.tree_util.register_pytree_node(
+    CompressedExperts,
+    lambda ce: (
+        (ce.slot_of_expert, ce.arrays),
+        (ce.meta, ce.num_slots, ce.group, ce.d_model, ce.d_ff),
+    ),
+    lambda aux, ch: CompressedExperts(
+        meta=aux[0], slot_of_expert=ch[0], arrays=ch[1], num_slots=aux[1],
+        group=aux[2], d_model=aux[3], d_ff=aux[4],
+    ),
+)
+
+
+def _pack_stack(ws: List[np.ndarray], bits: int, group: int,
+                codes_list=None, scales=None, zeros=None,
+                refine: bool = True) -> Dict:
+    """Stack per-expert packed tensors of one bucket (shared bit-width)."""
+    pts = []
+    for i, w in enumerate(ws):
+        kw = {}
+        if codes_list is not None:
+            kw = {
+                "codes": jnp.asarray(codes_list[i]),
+                "scale": jnp.asarray(scales[i]),
+                "zero": jnp.asarray(zeros[i]),
+            }
+        pts.append(
+            quantize_to_packed(jnp.asarray(w), bits, group=group, refine=refine, **kw)
+        )
+    out: Dict = {
+        "scale": jnp.stack([p.scale for p in pts]),
+        "zero": jnp.stack([p.zero for p in pts]),
+    }
+    if bits == 3:
+        out["hi"] = jnp.stack([p.data[0] for p in pts])
+        out["lo"] = jnp.stack([p.data[1] for p in pts])
+    else:
+        out["data"] = jnp.stack([p.data for p in pts])
+    return out
+
+
+def build_compressed_experts(
+    experts: Dict,
+    bits_per_expert: Sequence[int],
+    *,
+    group: int = 128,
+    ep: int = 1,
+    gptq_results: Optional[Dict] = None,
+    refine: bool = True,
+) -> CompressedExperts:
+    """Quantize + bucket one layer's experts.
+
+    ``experts`` = {"w_gate": [E, D, F], "w_up": [E, D, F], "w_down": [E, F, D]}.
+    ``gptq_results[(expert, name)]`` optionally carries GPTQ codes/scales
+    (:class:`repro.core.gptq.GPTQResult`) — otherwise RTN/HQQ packing.
+    ``ep`` = expert-parallel shard count (buckets padded to multiples).
+    """
+    e = len(bits_per_expert)
+    bits_arr = np.asarray(bits_per_expert)
+    order = np.argsort(bits_arr, kind="stable")  # ascending bit groups
+    meta: List[BucketMeta] = []
+    arrays: Dict = {}
+    slot_of_expert = np.full(e, -1, np.int64)
+    wg = np.asarray(experts["w_gate"], np.float32)
+    wu = np.asarray(experts["w_up"], np.float32)
+    wd = np.asarray(experts["w_down"], np.float32)
+    d, f = wg.shape[1], wg.shape[2]
+    slot = 0
+    for bits in sorted(set(bits_arr.tolist())):
+        ids = [int(i) for i in order if bits_arr[i] == bits]
+        for j, eid in enumerate(ids):
+            slot_of_expert[eid] = slot + j
+        count = len(ids)
+        pad = (-count) % ep
+        padded = count + pad
+        pick = ids + [ids[-1]] * pad  # dummy slots clone the last expert
+        bdict = {}
+        for name, w in (("w_gate", wg), ("w_up", wu), ("w_down", wd)):
+            if gptq_results is not None:
+                codes = [gptq_results[(i, name)].codes for i in pick]
+                scales = [gptq_results[(i, name)].scale for i in pick]
+                zeros = [gptq_results[(i, name)].zero for i in pick]
+                bdict[name] = _pack_stack(
+                    [w[i] for i in pick], bits, group, codes, scales, zeros,
+                    refine=refine,
+                )
+            else:
+                bdict[name] = _pack_stack(
+                    [w[i] for i in pick], bits, group, refine=refine
+                )
+        arrays[f"b{len(meta)}"] = bdict
+        meta.append(BucketMeta(bits=bits, start=slot, count=padded))
+        slot += padded
+    return CompressedExperts(
+        meta=tuple(meta),
+        slot_of_expert=jnp.asarray(slot_of_expert, jnp.int32),
+        arrays=arrays,
+        num_slots=slot,
+        group=group,
+        d_model=d,
+        d_ff=f,
+    )
+
+
+def _bmm_ep(x3, wd, bits: int, group: int):
+    """Dequant-matmul vmapped over the (model-sharded) ep axis.
+
+    ``x3 [ep, cap, K]``, ``wd`` packed arrays sliced to one local expert:
+    [ep, K/per, N] (+ scale/zero [ep, ngroups, N]).
+    """
+    if bits == 3:
+        packed = (wd["hi"], wd["lo"])
+    else:
+        packed = wd["data"]
+    fn = lambda x2, pk, s, z: kref.quant_matmul_ref(
+        x2, pk, s, z, bits=bits, group=group
+    )
+    return jax.vmap(fn)(x3, packed, wd["scale"], wd["zero"])
+
+
+def compressed_expert_ffn(
+    ce: CompressedExperts, xp: jnp.ndarray, cap: int
+) -> jnp.ndarray:
+    """SwiGLU over permuted capacity layout ``xp [num_slots*cap, D]``.
+
+    Expert-parallel execution (DESIGN.md §5.4): each bucket's experts are
+    reshaped ``[count·cap, D] → [ep, local, cap, D]`` (ep = model-axis
+    extent, baked into bucket padding at build time) and a ``lax.scan``
+    walks the *local* expert index — every step runs one expert per model
+    shard concurrently, so only one [K, N] dequantized tile exists per
+    shard at a time. The capacity dim additionally shards over ``data``
+    ("moe_elcd") so dispatch buffers never replicate.
+    """
+    d = ce.d_model
+    ys = []
+    for i, m in enumerate(ce.meta):
+        b = ce.arrays[f"b{i}"]
+        ep = model_axis_size()
+        if m.count % ep:
+            ep = 1
+        local = m.count // ep
+        xb = jax.lax.slice_in_dim(xp, m.start * cap, (m.start + m.count) * cap)
+        x4 = xb.reshape(ep, local, cap, d)
+        x4 = shard(x4, "moe_elcd")
+        w4 = jax.tree.map(
+            lambda a: jnp.moveaxis(a.reshape(ep, local, *a.shape[1:]), 1, 0),
+            b,
+        )  # leaves [local, ep, ...]
+
+        def step(_, inp, bits=m.bits):
+            x3, wg, wu, wd_ = inp
+            h = jax.nn.silu(_bmm_ep(x3, wg, bits, ce.group)) * _bmm_ep(
+                x3, wu, bits, ce.group
+            )
+            return None, _bmm_ep(h, wd_, bits, ce.group)
+
+        _, y = jax.lax.scan(
+            step,
+            None,
+            (jnp.moveaxis(x4, 1, 0), w4["w_gate"], w4["w_up"], w4["w_down"]),
+        )  # y [local, ep, cap, D]
+        y = jnp.moveaxis(y, 0, 1).reshape(m.count * cap, d)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=0)
+
+
+def compressed_moe_layer(
+    p: Dict,
+    ce: CompressedExperts,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    otp_params: Optional[Dict] = None,
+    otp_rng=None,
+    otp_tau: float = 1.0,
+    capacity_factor: Optional[float] = None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """MoE block with PMQ experts (+ optional OTP pruning).
+
+    ``p`` carries the (full-precision or 4-bit) router and shared experts.
+    Returns ``(y [B,S,D], info)`` where info holds the OTP mask & router
+    outputs (for distillation / calibration). ``info["mask_l1"]`` is the
+    Eq. 14 ℓ1 statistic in both code paths.
+
+    Inside a mesh context the routed region runs the shard_map EP path
+    (zero all-to-all — see :mod:`repro.parallel.ep_shardmap`).
+    """
+    from ..models.moe import ep_shardmap_ok
+    from ..parallel.sharding import current_mesh
+
+    mesh = current_mesh()
+    if (
+        mesh is not None
+        and ep_shardmap_ok(cfg, mesh, x, ce.num_slots)
+        and all(m.count % mesh.shape["model"] == 0 for m in ce.meta)
+    ):
+        from ..parallel.ep_shardmap import compressed_moe_region_sharded
+
+        y, mask_l1 = compressed_moe_region_sharded(
+            p, ce, x, cfg, mesh,
+            otp_params=otp_params, otp_rng=otp_rng, otp_tau=otp_tau,
+            capacity_factor=capacity_factor,
+        )
+        if "shared" in p:
+            b, s, d = x.shape
+            y = y + mlp(p["shared"], x.reshape(b * s, d)).reshape(b, s, d)
+        info = {
+            "probs": None, "idx": None, "gates": None, "mask": None,
+            "mask_l1": mask_l1 if otp_params is not None else None,
+        }
+        return y, info
+    b, s, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, d)
+    e, k = cfg.num_experts, cfg.top_k
+    probs, idx, gates = route_topk(p["router"], x2, k)
+    mask = None
+    if otp_params is not None:
+        mask = otp_mod.otp_mask(
+            otp_params, x2, idx, gates, rng=otp_rng, tau=otp_tau
+        )
+    # remap original expert ids -> permuted slots (dummy pads never hit)
+    slots = ce.slot_of_expert[idx]
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    cap = max(8, ((int(cf * t * k / e) + 7) // 8) * 8)
+    xp, dest, valid, gflat = capacity_dispatch(
+        x2, slots, gates, ce.num_slots, cap, mask
+    )
+    xp = shard(xp, "moe_ed")
+    yp = compressed_expert_ffn(ce, xp, cap)
+    y = combine(yp, dest, valid, gflat, t, k)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x2)
+    info = {
+        "probs": probs, "idx": idx, "gates": gates, "mask": mask,
+        "mask_l1": mask.mean() if mask is not None else None,
+    }
+    return y.reshape(b, s, d), info

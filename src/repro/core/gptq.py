@@ -1,0 +1,146 @@
+"""GPTQ post-training quantization (Frantar et al. [11]) — paper §3.1.
+
+The paper uses GPTQ as the foundational PTQ tool for PMQ: Hessian-based
+estimation ``H = 2·X·Xᵀ`` plus column-wise quantization-error compensation.
+This is an offline (pre-loading) procedure, so it is implemented in numpy
+(float64 Cholesky for stability) rather than inside a jit.
+
+Layout convention: ``W ∈ R[K, N]`` with ``y = x @ W`` (K = input/reduction
+dim). GPTQ walks the K axis in order, compensating not-yet-quantized rows.
+
+Supports affine 2/3/4/8-bit group-wise quantization and 1-bit sign
+binarization (per-channel L1 scale, Eq. 4) so that every PMQ bit-width
+{1,2,3} flows through the same error-compensated pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = ["GPTQResult", "hessian_from_inputs", "gptq_quantize"]
+
+
+@dataclasses.dataclass
+class GPTQResult:
+    codes: np.ndarray  # uint8 [K, N] integer codes (binary: {0,1})
+    scale: np.ndarray  # float32 [K//group, N]
+    zero: np.ndarray  # float32 [K//group, N]
+    bits: int
+    group: int
+    quant_error: float  # sum of per-row compensated MSE (diagnostic)
+
+
+def hessian_from_inputs(x: np.ndarray) -> np.ndarray:
+    """``H = 2·XᵀX`` over calibration activations ``x [nsamples, K]``."""
+    x = np.asarray(x, np.float64)
+    return 2.0 * (x.T @ x)
+
+
+def _affine_group_params(wg: np.ndarray, bits: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Min/max affine params for one K-group ``wg [g, N]`` (Eq. 3)."""
+    wmax = wg.max(axis=0)
+    wmin = wg.min(axis=0)
+    qmax = 2.0**bits - 1.0
+    scale = np.maximum((wmax - wmin) / qmax, 1e-8)
+    zero = -wmin / scale
+    return scale, zero
+
+
+def gptq_quantize(
+    w: np.ndarray,
+    hessian: np.ndarray,
+    bits: int,
+    group: int = 128,
+    percdamp: float = 0.01,
+    blocksize: int = 128,
+    binary_scale: Optional[np.ndarray] = None,
+) -> GPTQResult:
+    """Quantize ``w [K, N]`` with GPTQ error compensation.
+
+    ``hessian`` is ``H = 2XᵀX`` of shape ``[K, K]``. For ``bits == 1`` the
+    quantizer is ``sign`` with per-column scale (L1 mean of the *original*
+    weights, or ``binary_scale`` if given); codes are the ``{0,1}``
+    transform of Eq. 8 and ``(scale, zero) = (2α, 0.5)`` so the shared
+    affine dequant ``(q - z)·s`` reproduces ``±α``.
+    """
+    w = np.array(w, np.float64, copy=True)
+    k, n = w.shape
+    h = np.array(hessian, np.float64, copy=True)
+    assert h.shape == (k, k)
+
+    # dead rows: never-activated inputs contribute nothing — freeze them
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w[dead, :] = 0.0
+
+    # dampen + inverse via Cholesky, then upper Cholesky of the inverse
+    damp = percdamp * float(np.mean(np.diag(h)))
+    h[np.diag_indices(k)] += max(damp, 1e-10)
+    l = np.linalg.cholesky(h)
+    hinv = np.linalg.inv(l).T @ np.linalg.inv(l)  # H^-1 = L^-T L^-1
+    l_inv = np.linalg.cholesky(hinv)
+    hinv_u = l_inv.T  # upper-triangular U with UᵀU = H^-1
+
+    qmax = 2.0**bits - 1.0
+    codes = np.zeros((k, n), np.uint8)
+    ngroups = (k + group - 1) // group
+    scales = np.zeros((ngroups, n), np.float32)
+    zeros = np.zeros((ngroups, n), np.float32)
+
+    if bits == 1:
+        alpha = (
+            np.asarray(binary_scale, np.float64).reshape(1, n)
+            if binary_scale is not None
+            else np.mean(np.abs(w), axis=0, keepdims=True)
+        )
+        scales[:] = (2.0 * alpha).astype(np.float32)
+        zeros[:] = 0.5
+
+    total_err = 0.0
+    for b0 in range(0, k, blocksize):
+        b1 = min(b0 + blocksize, k)
+        wb = w[b0:b1, :].copy()
+        errb = np.zeros_like(wb)
+        hu = hinv_u[b0:b1, b0:b1]
+        for i in range(b1 - b0):
+            kk = b0 + i
+            d = hu[i, i]
+            g = kk // group
+            if bits == 1:
+                q = (wb[i, :] >= 0).astype(np.float64)
+                s = scales[g].astype(np.float64)
+                z = zeros[g].astype(np.float64)
+            else:
+                if kk % group == 0:
+                    # params from the error-compensated weights of this group
+                    g1 = min(kk + group, k)
+                    wg = np.concatenate(
+                        [wb[i : min(i + group, b1 - b0), :], w[b1:g1, :]], axis=0
+                    )
+                    s_g, z_g = _affine_group_params(wg, bits)
+                    scales[g] = s_g.astype(np.float32)
+                    zeros[g] = z_g.astype(np.float32)
+                s = scales[g].astype(np.float64)
+                z = zeros[g].astype(np.float64)
+                q = np.clip(np.round(wb[i, :] / s + z), 0.0, qmax)
+            codes[kk, :] = q.astype(np.uint8)
+            wq = (q - z) * s
+            err = (wb[i, :] - wq) / d
+            total_err += float(np.sum(((wb[i, :] - wq)) ** 2))
+            # compensate the remaining rows of this block
+            if i + 1 < b1 - b0:
+                wb[i + 1 :, :] -= np.outer(hu[i, i + 1 :], err)
+            errb[i, :] = err
+        # lazy batch update of all rows after the block
+        if b1 < k:
+            w[b1:, :] -= hinv_u[b0:b1, b1:].T @ errb
+    return GPTQResult(
+        codes=codes,
+        scale=scales,
+        zero=zeros,
+        bits=bits,
+        group=group,
+        quant_error=total_err,
+    )

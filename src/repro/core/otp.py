@@ -1,0 +1,135 @@
+"""OTP — Online Top-any Pruning (paper §3.4, Eqs. 10–14, Fig. 8).
+
+A tiny learnable router ``DM(·)`` per MoE layer (two linear layers, Tab. 1:
+FC1 [d_model → k], FC2 [2k → k], mask table [k, k]) scores the *prefix
+mask* candidates
+
+    C_k = {[1...1], [1...1,0], ..., [1, 0...0]}        (Eq. 10)
+
+over the top-k experts **sorted by gate weight** (strongest kept first).
+Training samples a candidate with Gumbel-Softmax (Eq. 13, temperature τ)
+so the discrete choice is differentiable; the loss (Eq. 14) distills the
+masked model against the un-masked one plus a λ‖M‖₁ sparsity term.
+Inference takes the argmax candidate (τ → 0 limit) — deterministic, no
+noise.
+
+The resulting mask multiplies gate weights *before* dispatch, so pruned
+experts consume no capacity and no FLOPs (`repro.models.moe.moe_layer`'s
+``gate_mask_fn`` hook).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "candidate_masks",
+    "init_otp_router",
+    "dm_logits",
+    "otp_mask",
+    "sample_mask_gumbel",
+    "otp_losses",
+    "mask_ratio",
+]
+
+
+def candidate_masks(k: int) -> jnp.ndarray:
+    """Eq. 10 prefix-mask candidate set ``C_k [k, k]`` (keep-m-strongest).
+
+    Row j keeps the top (k − j) experts: row 0 = all ones … row k−1 keeps
+    only the strongest.
+    """
+    keep = k - jnp.arange(k)  # [k] : k, k-1, ..., 1
+    return (jnp.arange(k)[None, :] < keep[:, None]).astype(jnp.float32)
+
+
+def init_otp_router(rng, d_model: int, k: int, dtype=jnp.float32) -> Dict:
+    """Learnable router DM(·) per Tab. 1: FC1 [d, k], FC2 [2k, k]."""
+    k1, k2 = jax.random.split(rng)
+    return {
+        "fc1": jax.random.normal(k1, (d_model, k), dtype) * (d_model**-0.5),
+        "fc2": jax.random.normal(k2, (2 * k, k), dtype) * ((2 * k) ** -0.5),
+    }
+
+
+def dm_logits(p: Dict, x2: jnp.ndarray, gates_sorted: jnp.ndarray) -> jnp.ndarray:
+    """Categorical logits over C_k: DM(t_i, w) (Eq. 13 input).
+
+    ``x2 [T, D]`` tokens, ``gates_sorted [T, k]`` the (descending) top-k
+    gate weights — both token content and routing confidence inform the
+    pruning decision.
+    """
+    h = x2.astype(jnp.float32) @ p["fc1"].astype(jnp.float32)  # [T, k]
+    h = jnp.concatenate([jax.nn.silu(h), gates_sorted.astype(jnp.float32)], -1)
+    return h @ p["fc2"].astype(jnp.float32)  # [T, k]
+
+
+def sample_mask_gumbel(
+    rng, logits: jnp.ndarray, k: int, tau: float = 1.0
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gumbel-Softmax sample over candidates (Eq. 12/13).
+
+    Returns ``(soft_onehot [T, k], mask [T, k])`` where
+    ``mask = ŷ · C_k`` (soft during training; straight-through hard mask
+    keeps downstream dispatch exact while gradients flow through ŷ).
+    """
+    u = jax.random.uniform(rng, logits.shape, minval=1e-6, maxval=1.0 - 1e-6)
+    g = -jnp.log(-jnp.log(u))
+    y_soft = jax.nn.softmax((logits + g) / tau, axis=-1)  # [T, k]
+    # straight-through: hard one-hot forward, soft gradient
+    idx = jnp.argmax(y_soft, axis=-1)
+    y_hard = jax.nn.one_hot(idx, logits.shape[-1], dtype=y_soft.dtype)
+    y = y_hard + y_soft - jax.lax.stop_gradient(y_soft)
+    mask = y @ candidate_masks(k)  # [T, k] (sorted-order mask)
+    return y, mask
+
+
+def otp_mask(p: Dict, x2: jnp.ndarray, idx, gates, *, rng=None, tau: float = 1.0):
+    """Full OTP mask for the MoE hook.
+
+    ``idx/gates [T, k]`` come from the frozen top-k router. Gates are
+    sorted descending; the prefix mask is then unsorted back to the
+    original top-k slot order. With ``rng=None`` → deterministic argmax
+    (inference); else Gumbel sampling (training).
+    """
+    t, k = gates.shape
+    # ordering is piecewise-constant — never differentiate through the sort
+    # (also works around a broken sort-JVP in this jax build)
+    order = jnp.argsort(jax.lax.stop_gradient(-gates), axis=-1)  # strongest first
+    gates_sorted = jnp.take_along_axis(gates, order, axis=-1)
+    logits = dm_logits(p, x2, gates_sorted)
+    if rng is None:
+        choice = jnp.argmax(logits, axis=-1)
+        mask_sorted = candidate_masks(k)[choice]
+    else:
+        _, mask_sorted = sample_mask_gumbel(rng, logits, k, tau)
+    # unsort: slot order[j] gets mask_sorted[j]
+    inv = jnp.argsort(jax.lax.stop_gradient(order), axis=-1)
+    return jnp.take_along_axis(mask_sorted, inv, axis=-1)
+
+
+def mask_ratio(mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of (token, expert) slots pruned (paper's 'pruning ratio')."""
+    return 1.0 - mask.mean()
+
+
+def otp_losses(
+    student_logits: jnp.ndarray,
+    teacher_logits: jnp.ndarray,
+    masks: jnp.ndarray,
+    lam: float = 1.0,
+) -> Tuple[jnp.ndarray, Dict]:
+    """Eq. 14: distillation KL + λ·mean|M|.
+
+    ``masks`` is the concatenation of per-layer masks (any shape); the
+    paper's ℓ1 over the training batch normalizes by element count so λ is
+    scale-free.
+    """
+    t = jax.nn.log_softmax(teacher_logits.astype(jnp.float32), axis=-1)
+    s = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    kl = jnp.sum(jnp.exp(t) * (t - s), axis=-1).mean()
+    sparsity = jnp.abs(masks).mean()
+    loss = kl + lam * sparsity
+    return loss, {"kl": kl, "mask_l1": sparsity, "mask_ratio": 1.0 - sparsity}

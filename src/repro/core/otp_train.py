@@ -1,0 +1,94 @@
+"""OTP router training (paper §3.4.2, Eq. 14, Fig. 13).
+
+End-to-end distillation of the per-layer DM routers on a *frozen,
+PMQ-compressed* backbone: the student runs with Gumbel-sampled masks, the
+teacher is the same compressed model without masks (paper: "non-masked
+MoE models"). Only the DM routers (a few thousand params) receive
+gradients — this is the paper's only training phase and the `train_4k`
+mode for the 1T kimi config (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from . import otp as otp_mod
+from .pipeline import compressed_logits
+
+__all__ = ["OTPTrainConfig", "init_otp_params", "train_otp"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OTPTrainConfig:
+    steps: int = 100
+    batch: int = 8
+    lr: float = 2e-3
+    lam: float = 1.0  # sparsity weight λ (Eq. 14)
+    tau: float = 1.0  # Gumbel temperature
+    seed: int = 0
+
+
+def init_otp_params(rng, cfg) -> List[Dict]:
+    ks = jax.random.split(rng, cfg.num_layers)
+    return [
+        otp_mod.init_otp_router(k, cfg.d_model, cfg.top_k) for k in ks
+    ]
+
+
+def train_otp(
+    blocks_c, top, cfg, tokens: np.ndarray, tcfg: OTPTrainConfig
+) -> Tuple[List[Dict], List[Dict]]:
+    """Train DM routers. ``tokens [N, S]`` calibration samples.
+
+    Returns ``(otp_params, history)`` with per-step kl/mask_ratio logs.
+    """
+    rng = jax.random.PRNGKey(tcfg.seed)
+    rng, k0 = jax.random.split(rng)
+    otp_params = init_otp_params(k0, cfg)
+    ocfg = AdamWConfig(lr=tcfg.lr, weight_decay=0.0)
+    opt_state = adamw_init(otp_params, ocfg)
+
+    def loss_fn(op, batch_tokens, step_rng):
+        rngs = jax.random.split(step_rng, cfg.num_layers)
+        student, masks = compressed_logits(
+            blocks_c, top, batch_tokens, cfg,
+            otp_params=op, otp_rngs=list(rngs), otp_tau=tcfg.tau,
+            collect_masks=True,
+        )
+        teacher, _ = compressed_logits(blocks_c, top, batch_tokens, cfg)
+        teacher = jax.lax.stop_gradient(teacher)
+        mask_cat = jnp.concatenate([m.reshape(-1) for m in masks])
+        loss, aux = otp_mod.otp_losses(student, teacher, mask_cat, tcfg.lam)
+        return loss, aux
+
+    @jax.jit
+    def step_fn(op, opt_state, batch_tokens, step_rng):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            op, batch_tokens, step_rng
+        )
+        op, opt_state = adamw_update(op, grads, opt_state, ocfg)
+        return op, opt_state, loss, aux
+
+    history = []
+    n = tokens.shape[0]
+    for step in range(tcfg.steps):
+        rng, ks, kb = jax.random.split(rng, 3)
+        sel = jax.random.randint(kb, (tcfg.batch,), 0, n)
+        batch_tokens = jnp.asarray(tokens)[sel]
+        otp_params, opt_state, loss, aux = step_fn(
+            otp_params, opt_state, batch_tokens, ks
+        )
+        history.append(
+            {
+                "step": step,
+                "loss": float(loss),
+                "kl": float(aux["kl"]),
+                "mask_ratio": float(aux["mask_ratio"]),
+            }
+        )
+    return otp_params, history

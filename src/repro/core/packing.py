@@ -1,0 +1,199 @@
+"""Bit-packing for ultra-low-bit weight storage (paper §3.3).
+
+Storage layout
+--------------
+Quantized integer codes ``q ∈ [0, 2^b)`` are packed along the *K* (reduction)
+axis so that a fused-dequant matmul kernel reads contiguous packed rows:
+
+* 1-bit: 8 codes / uint8          (paper Eq. 8: ``B~ = (sign(W)+1)/2``)
+* 2-bit: 4 codes / uint8
+* 4-bit: 2 codes / uint8
+* 3-bit: stored as a 2-bit plane + 1-bit plane, ``q = (hi << 1) | lo``.
+  This is the TPU-native alternative to HQQ's padded 32-bit containers:
+  exactly 3.0 bits/weight and both planes are power-of-two packed
+  (DESIGN.md §5.3).
+
+All functions are pure ``jnp`` and jittable; the packed axis must be a
+multiple of the pack factor (pad with ``pad_to_multiple`` first).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pack_bits",
+    "unpack_bits",
+    "packed_nbytes",
+    "pad_to_multiple",
+    "PackedTensor",
+]
+
+
+def pad_to_multiple(x: jnp.ndarray, multiple: int, axis: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to a multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _pack_pow2(q: jnp.ndarray, bits: int, axis: int) -> jnp.ndarray:
+    """Pack codes with power-of-two ``bits`` (1, 2, 4) along ``axis``."""
+    per = 8 // bits
+    q = jnp.asarray(q, jnp.uint8)
+    if q.shape[axis] % per != 0:
+        raise ValueError(
+            f"axis {axis} size {q.shape[axis]} not a multiple of {per} "
+            f"for {bits}-bit packing; call pad_to_multiple first"
+        )
+    axis = axis % q.ndim
+    new_shape = (
+        q.shape[:axis] + (q.shape[axis] // per, per) + q.shape[axis + 1 :]
+    )
+    q = q.reshape(new_shape)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).reshape(
+        (1,) * axis + (1, per) + (1,) * (q.ndim - axis - 2)
+    )
+    packed = jnp.sum(
+        (q & ((1 << bits) - 1)).astype(jnp.uint8) << shifts,
+        axis=axis + 1,
+        dtype=jnp.uint8,
+    )
+    return packed
+
+
+def _unpack_pow2(packed: jnp.ndarray, bits: int, axis: int) -> jnp.ndarray:
+    per = 8 // bits
+    axis = axis % packed.ndim
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).reshape(
+        (1,) * (axis + 1) + (per,) + (1,) * (packed.ndim - axis - 1)
+    )
+    vals = (jnp.expand_dims(packed, axis + 1) >> shifts) & ((1 << bits) - 1)
+    new_shape = (
+        packed.shape[:axis]
+        + (packed.shape[axis] * per,)
+        + packed.shape[axis + 1 :]
+    )
+    # move the unpacked sub-axis next to the packed axis then flatten
+    vals = jnp.moveaxis(vals, axis + 1, axis + 1)  # already adjacent
+    return vals.reshape(new_shape)
+
+
+def pack_bits(q: jnp.ndarray, bits: int, axis: int = -1):
+    """Pack integer codes into compact storage.
+
+    Returns a single uint8 array for bits in {1,2,4,8} or a tuple
+    ``(hi_plane, lo_plane)`` for bits == 3.
+    """
+    if bits == 8:
+        return jnp.asarray(q, jnp.uint8)
+    if bits in (1, 2, 4):
+        return _pack_pow2(q, bits, axis)
+    if bits == 3:
+        q = jnp.asarray(q, jnp.uint8)
+        hi = (q >> 1) & 0x3  # 2-bit plane
+        lo = q & 0x1  # 1-bit plane
+        return (_pack_pow2(hi, 2, axis), _pack_pow2(lo, 1, axis))
+    raise ValueError(f"unsupported bit-width {bits}")
+
+
+def unpack_bits(packed, bits: int, axis: int = -1) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits` (returns uint8 codes)."""
+    if bits == 8:
+        return jnp.asarray(packed, jnp.uint8)
+    if bits in (1, 2, 4):
+        return _unpack_pow2(packed, bits, axis)
+    if bits == 3:
+        hi_p, lo_p = packed
+        hi = _unpack_pow2(hi_p, 2, axis)
+        lo = _unpack_pow2(lo_p, 1, axis)
+        return (hi << 1) | lo
+    raise ValueError(f"unsupported bit-width {bits}")
+
+
+def packed_nbytes(shape: Tuple[int, ...], bits: int, axis: int = -1) -> int:
+    """Exact byte count of the packed representation of ``shape``."""
+    n = int(np.prod(shape))
+    k = shape[axis]
+    per_row = n // k
+    if bits in (1, 2, 4, 8):
+        return per_row * ((k * bits + 7) // 8)
+    if bits == 3:
+        return per_row * (((k * 2 + 7) // 8) + ((k + 7) // 8))
+    raise ValueError(f"unsupported bit-width {bits}")
+
+
+@dataclasses.dataclass
+class PackedTensor:
+    """A bit-packed quantized tensor + its dequantization parameters.
+
+    ``data`` is the packed uint8 array (or (hi, lo) planes for 3-bit).
+    ``scale``/``zero`` are group-wise along the packed (K) axis with
+    group size ``group``; shape ``(K // group, *other_dims)``-broadcastable.
+    """
+
+    data: object
+    scale: jnp.ndarray
+    zero: jnp.ndarray
+    bits: int
+    shape: Tuple[int, ...]  # logical (unpacked) shape
+    group: int
+    axis: int = 0  # packed/grouped axis in the logical shape
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        q = unpack_bits(self.data, self.bits, self.axis)
+        # strip potential padding introduced by pack alignment
+        take = [slice(None)] * len(self.shape)
+        take[self.axis] = slice(0, self.shape[self.axis])
+        q = q[tuple(take)].astype(dtype)
+        k = self.shape[self.axis]
+        g = self.group
+        ngroups = (k + g - 1) // g
+        # reshape K axis into (ngroups, g) to apply group params
+        ax = self.axis % len(self.shape)
+        new_shape = self.shape[:ax] + (ngroups, g) + self.shape[ax + 1 :]
+        if k % g != 0:
+            pad = [(0, 0)] * len(self.shape)
+            pad[ax] = (0, ngroups * g - k)
+            q = jnp.pad(q, pad)
+        qg = q.reshape(new_shape)
+        scale = jnp.expand_dims(self.scale, ax + 1)
+        zero = jnp.expand_dims(self.zero, ax + 1)
+        w = (qg - zero) * scale
+        w = w.reshape(
+            self.shape[:ax] + (ngroups * g,) + self.shape[ax + 1 :]
+        )
+        take = [slice(None)] * len(self.shape)
+        take[ax] = slice(0, k)
+        return w[tuple(take)].astype(dtype)
+
+    @property
+    def nbytes(self) -> int:
+        base = packed_nbytes(self.shape, self.bits, self.axis)
+        return base + self.scale.size * self.scale.dtype.itemsize + (
+            self.zero.size * self.zero.dtype.itemsize
+        )
+
+
+def _pt_flatten(pt: PackedTensor):
+    return (pt.data, pt.scale, pt.zero), (pt.bits, pt.shape, pt.group, pt.axis)
+
+
+def _pt_unflatten(aux, children):
+    data, scale, zero = children
+    bits, shape, group, axis = aux
+    return PackedTensor(
+        data=data, scale=scale, zero=zero, bits=bits, shape=shape,
+        group=group, axis=axis,
+    )
+
+
+jax.tree_util.register_pytree_node(PackedTensor, _pt_flatten, _pt_unflatten)

@@ -1,0 +1,198 @@
+"""Weight quantizers (paper §3.1 Eqs. 3/4 and §3.3 Eqs. 8/9).
+
+Three families:
+
+* :func:`quantize_affine` — group-wise asymmetric uniform quantization
+  (the ``Q(·)`` of Eq. 3) used for 2/3/4/8-bit experts and the uniform 4-bit
+  attention/gate/shared-expert weights.
+* :func:`quantize_binary` — 1-bit sign quantization with per-column L1
+  scales (Eqs. 4/8): ``B = sign(W)``, ``s = ||W||_1 / d`` per output channel,
+  stored as the ``{0,1}`` transform ``B~ = (sign(W)+1)/2``.
+* :func:`hqq_refine` — HQQ-style half-quadratic refinement of the zero point
+  (the paper stores weights with the HQQ tool [50]); optional, improves RTN.
+
+Conventions: weights are ``W ∈ R[K, N]`` (reduction axis first — i.e. the
+layout consumed by ``y = x @ W``); quantization groups run along K.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .packing import PackedTensor, pack_bits, pad_to_multiple
+
+__all__ = [
+    "affine_params",
+    "quantize_affine",
+    "dequantize_affine",
+    "quantize_binary",
+    "hqq_refine",
+    "quantize_to_packed",
+    "rtn_codes",
+]
+
+
+def _group_reshape(w: jnp.ndarray, group: int) -> jnp.ndarray:
+    """[K, N] -> [K//group, group, N] (pads K if needed)."""
+    k = w.shape[0]
+    ngroups = (k + group - 1) // group
+    if k % group:
+        w = jnp.pad(w, ((0, ngroups * group - k), (0, 0)))
+    return w.reshape(ngroups, group, w.shape[-1])
+
+
+def affine_params(
+    w: jnp.ndarray, bits: int, group: int = 128
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-(group, column) scale & zero per Eq. 3.
+
+    Returns ``scale, zero`` of shape ``[K//group, N]`` (float32 scale, float
+    zero kept unrounded for HQQ compatibility; rounding happens in
+    :func:`rtn_codes`).
+    """
+    wg = _group_reshape(w, group)
+    wmax = jnp.max(wg, axis=1)
+    wmin = jnp.min(wg, axis=1)
+    qmax = 2.0**bits - 1.0
+    scale = (wmax - wmin) / qmax
+    scale = jnp.maximum(scale, 1e-8)
+    zero = -wmin / scale
+    return scale.astype(jnp.float32), zero.astype(jnp.float32)
+
+
+def rtn_codes(
+    w: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    bits: int,
+    group: int = 128,
+) -> jnp.ndarray:
+    """Round-to-nearest codes: ``clamp(round(w/s) + z, 0, 2^b-1)`` (Eq. 3)."""
+    wg = _group_reshape(w, group)
+    q = jnp.round(wg / scale[:, None, :] + zero[:, None, :])
+    q = jnp.clip(q, 0.0, 2.0**bits - 1.0)
+    q = q.reshape(-1, w.shape[-1])[: w.shape[0]]
+    return q.astype(jnp.uint8)
+
+
+def quantize_affine(
+    w: jnp.ndarray, bits: int, group: int = 128, refine: bool = False
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full RTN affine quantization. Returns ``(codes, scale, zero)``."""
+    scale, zero = affine_params(w, bits, group)
+    if refine:
+        scale, zero = hqq_refine(w, scale, zero, bits, group)
+    codes = rtn_codes(w, scale, zero, bits, group)
+    return codes, scale, zero
+
+
+def dequantize_affine(
+    codes: jnp.ndarray,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    group: int = 128,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    k, n = codes.shape
+    qg = _group_reshape(codes.astype(jnp.float32), group)
+    w = (qg - zero[:, None, :]) * scale[:, None, :]
+    return w.reshape(-1, n)[:k].astype(dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "group", "iters"))
+def _hqq_iter(w, scale, zero, bits, group, iters):
+    """Half-quadratic zero-point refinement (HQQ [50], p=0.7 shrinkage)."""
+    qmax = 2.0**bits - 1.0
+    wg = _group_reshape(w, group)
+    beta, kappa, p = 10.0, 1.01, 0.7
+
+    def body(carry, _):
+        zero, beta = carry
+        q = jnp.clip(jnp.round(wg / scale[:, None, :] + zero[:, None, :]), 0.0, qmax)
+        wq = (q - zero[:, None, :]) * scale[:, None, :]
+        err = wg - wq
+        # generalized soft-threshold toward |err|^p sparsity
+        mag = jnp.abs(err)
+        shrunk = jnp.sign(err) * jnp.maximum(
+            mag - (mag ** (p - 1.0) + 1e-8) / beta, 0.0
+        )
+        we = wg - shrunk
+        zero_new = jnp.mean(
+            q - we / scale[:, None, :], axis=1
+        )
+        return (zero_new, beta * kappa), None
+
+    (zero, _), _ = jax.lax.scan(body, (zero, beta), None, length=iters)
+    return scale, zero
+
+
+def hqq_refine(w, scale, zero, bits, group=128, iters=20):
+    """Refine ``zero`` to minimize a robust (|.|^0.7) reconstruction loss."""
+    return _hqq_iter(w, scale, zero, bits, group, iters)
+
+
+def quantize_binary(
+    w: jnp.ndarray, per_channel: bool = True
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """1-bit sign quantization (Eqs. 4/8).
+
+    Returns ``(b01, scale)``: ``b01 ∈ {0,1}[K,N]`` (the ``B~`` storage
+    transform) and ``scale``: per output channel ``||W[:,j]||_1 / K`` when
+    ``per_channel`` (paper's channel-wise binarization scales [46]),
+    else a scalar ``||W||_1 / (K·N)``.
+    """
+    b01 = (w >= 0).astype(jnp.uint8)
+    if per_channel:
+        scale = jnp.mean(jnp.abs(w), axis=0, keepdims=True)  # [1, N]
+    else:
+        scale = jnp.mean(jnp.abs(w)).reshape(1, 1)
+    return b01, scale.astype(jnp.float32)
+
+
+def dequantize_binary(b01: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32):
+    return ((b01.astype(jnp.float32) * 2.0 - 1.0) * scale).astype(dtype)
+
+
+def quantize_to_packed(
+    w: jnp.ndarray,
+    bits: int,
+    group: int = 128,
+    refine: bool = True,
+    codes: jnp.ndarray | None = None,
+    scale: jnp.ndarray | None = None,
+    zero: jnp.ndarray | None = None,
+) -> PackedTensor:
+    """Quantize ``W[K,N]`` to a :class:`PackedTensor` ready for the kernels.
+
+    ``bits == 1`` uses sign binarization (zero encodes nothing; we store the
+    per-channel scale in ``scale`` and ``zero = 0.5`` so the shared affine
+    dequant path ``(q - z)*s`` yields ``±0.5·s_eff`` with ``s_eff = 2·s`` —
+    i.e. 1-bit rides the same kernel with scale doubled and zero 0.5).
+
+    Pre-computed ``codes/scale/zero`` (e.g. from GPTQ) are packed as-is.
+    """
+    k, n = w.shape
+    if bits == 1 and codes is None:
+        b01, s = quantize_binary(w)
+        ngroups = (k + group - 1) // group
+        scale_g = jnp.broadcast_to(2.0 * s, (ngroups, n)).astype(jnp.float32)
+        zero_g = jnp.full((ngroups, n), 0.5, jnp.float32)
+        codes = b01
+        scale, zero = scale_g, zero_g
+    elif codes is None:
+        codes, scale, zero = quantize_affine(w, bits, group, refine=refine)
+    per = {1: 8, 2: 4, 3: 8, 4: 2, 8: 1}[bits]
+    codes = pad_to_multiple(codes, per, axis=0)
+    data = pack_bits(codes, bits, axis=0)
+    return PackedTensor(
+        data=data,
+        scale=jnp.asarray(scale, jnp.float32),
+        zero=jnp.asarray(zero, jnp.float32),
+        bits=bits,
+        shape=(k, n),
+        group=group,
+        axis=0,
+    )

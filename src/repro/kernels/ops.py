@@ -1,0 +1,138 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle platform selection (TPU → compiled kernel, CPU → interpret or
+reference), padding to block multiples, and the `PackedTensor` container
+from :mod:`repro.core.packing`. Models call these; they never touch
+`pallas_call` directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packing import PackedTensor
+from . import ref
+from .binary_matmul import binary_matmul_pallas
+from .moe_gmm import moe_gmm_pallas, pad_groups, sort_by_expert
+from .quant_matmul import quant_matmul_pallas
+
+__all__ = [
+    "quant_matmul",
+    "binary_matmul",
+    "moe_gmm",
+    "pad_groups",
+    "sort_by_expert",
+    "default_backend",
+]
+
+
+def default_backend() -> str:
+    """'pallas' on TPU, 'ref' elsewhere (tests opt into 'interpret')."""
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
+    rem = (-x.shape[axis]) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def quant_matmul(
+    x: jnp.ndarray,
+    pt: PackedTensor,
+    *,
+    backend: str | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """``y = x @ dequant(pt)`` for any leading x shape; K = pt.shape[0]."""
+    backend = backend or default_backend()
+    k, n = pt.shape
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if backend == "ref":
+        y = ref.quant_matmul_ref(
+            x2, pt.data, pt.scale, pt.zero, bits=pt.bits, group=pt.group
+        )
+        return y.reshape(*lead, n)
+    m = x2.shape[0]
+    bm_ = min(bm, _next_mult(m, 8))
+    x2p = _pad_to(x2, bm_, 0)
+    y = quant_matmul_pallas(
+        x2p,
+        pt.data,
+        pt.scale,
+        pt.zero,
+        bits=pt.bits,
+        group=pt.group,
+        bm=bm_,
+        bn=bn,
+        bk=bk,
+        interpret=(backend == "interpret"),
+    )
+    return y[:m].reshape(*lead, n)
+
+
+def binary_matmul(
+    x: jnp.ndarray,
+    b_packed: jnp.ndarray,
+    alpha: jnp.ndarray,
+    *,
+    backend: str | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    backend = backend or default_backend()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if backend == "ref":
+        return ref.binary_matmul_ref(x2, b_packed, alpha).reshape(
+            *lead, b_packed.shape[1]
+        )
+    m = x2.shape[0]
+    bm_ = min(bm, _next_mult(m, 8))
+    x2p = _pad_to(x2, bm_, 0)
+    y = binary_matmul_pallas(
+        x2p, b_packed, alpha, bm=bm_, bn=bn, bk=bk,
+        interpret=(backend == "interpret"),
+    )
+    return y[:m].reshape(*lead, b_packed.shape[1])
+
+
+def moe_gmm(
+    x_padded: jnp.ndarray,
+    w_packed,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    block_expert: jnp.ndarray,
+    *,
+    bits: int,
+    group: int = 128,
+    backend: str | None = None,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.moe_gmm_ref(
+            x_padded, w_packed, scale, zero, block_expert,
+            bits=bits, group=group, bm=bm,
+        )
+    return moe_gmm_pallas(
+        x_padded, w_packed, scale, zero, block_expert,
+        bits=bits, group=group, bm=bm, bn=bn, bk=bk,
+        interpret=(backend == "interpret"),
+    )
+
+
+def _next_mult(x: int, base: int) -> int:
+    return ((x + base - 1) // base) * base

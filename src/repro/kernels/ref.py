@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+These are also the *model* code path used for CPU smoke tests and the
+multi-pod dry-run: mathematically identical to the kernels, and XLA:TPU
+fuses the dequant chain into the GEMM operand, so cost_analysis FLOPs match
+the kernel path (memory terms for quantized weights are additionally
+computed analytically — see EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.packing import unpack_bits
+
+__all__ = [
+    "dequant_ref",
+    "quant_matmul_ref",
+    "binary_matmul_ref",
+    "moe_gmm_ref",
+]
+
+
+def dequant_ref(
+    w_packed, scale: jnp.ndarray, zero: jnp.ndarray, bits: int, k: int,
+    group: int = 128, dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Unpack + group-wise affine dequant to ``[K, N]``."""
+    codes = unpack_bits(w_packed, bits, axis=0 if bits != 3 else 0)
+    codes = codes[:k].astype(jnp.float32)
+    n = codes.shape[1]
+    ng = (k + group - 1) // group
+    if k % group:
+        codes = jnp.pad(codes, ((0, ng * group - k), (0, 0)))
+    cg = codes.reshape(ng, group, n)
+    w = (cg - zero[:, None, :]) * scale[:, None, :]
+    return w.reshape(ng * group, n)[:k].astype(dtype)
+
+
+def quant_matmul_ref(
+    x: jnp.ndarray, w_packed, scale, zero, *, bits: int, group: int = 128,
+    out_dtype=None,
+) -> jnp.ndarray:
+    k = x.shape[-1]
+    w = dequant_ref(w_packed, scale, zero, bits, k, group,
+                    dtype=jnp.float32 if x.dtype == jnp.float32 else jnp.bfloat16)
+    y = jnp.dot(x.astype(w.dtype), w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+def binary_matmul_ref(
+    x: jnp.ndarray, b_packed: jnp.ndarray, alpha: jnp.ndarray, *, out_dtype=None
+) -> jnp.ndarray:
+    """Eq. 9 oracle: ``(x @ (2B~-1)) * alpha``."""
+    k = x.shape[-1]
+    bits01 = unpack_bits(b_packed, 1, axis=0)[:k]
+    cd = jnp.float32 if x.dtype == jnp.float32 else jnp.bfloat16
+    w = bits01.astype(cd) * 2 - 1
+    y = jnp.dot(x.astype(cd), w, preferred_element_type=jnp.float32) * alpha
+    return y.astype(out_dtype or x.dtype)
+
+
+def moe_gmm_ref(
+    x_padded: jnp.ndarray,
+    w_packed,
+    scale,
+    zero,
+    block_expert: jnp.ndarray,
+    *,
+    bits: int,
+    group: int = 128,
+    bm: int = 128,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Row-block i of ``x_padded`` hits expert ``block_expert[i]``."""
+    m, k = x_padded.shape
+    if bits == 3:
+        e = w_packed[0].shape[0]
+        n = w_packed[0].shape[2]
+        planes = [
+            (w_packed[0][i], w_packed[1][i]) for i in range(e)
+        ]
+    else:
+        e, _, n = w_packed.shape
+        planes = [w_packed[i] for i in range(e)]
+    ws = jnp.stack(
+        [
+            dequant_ref(planes[i], scale[i], zero[i], bits, k, group)
+            for i in range(e)
+        ]
+    )  # [E, K, N]
+    nblocks = m // bm
+    xb = x_padded.reshape(nblocks, bm, k)
+    wb = ws[block_expert]  # [nblocks, K, N]
+    cd = jnp.float32 if x_padded.dtype == jnp.float32 else jnp.bfloat16
+    y = jnp.einsum(
+        "bmk,bkn->bmn", xb.astype(cd), wb.astype(cd),
+        preferred_element_type=jnp.float32,
+    )
+    return y.reshape(m, n).astype(out_dtype or x_padded.dtype)

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment deliverable (e)).
+
+The two lines above MUST precede any other import — jax locks the device
+count at first init. For every (architecture × input shape × mesh) cell
+this driver ``jit(...).lower(specs).compile()``s the step function on the
+production mesh, prints ``memory_analysis()`` / ``cost_analysis()``, runs
+the while-aware HLO analyzer (FLOPs / HBM bytes / collective bytes — see
+:mod:`repro.launch.hlo_analysis`), and writes one JSON per cell for the
+roofline report (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs.base import SHAPES, supported_shapes
+from ..configs.registry import ARCH_IDS, get_config
+from ..parallel.sharding import activation_rules, sharding_rules
+from .hlo_analysis import analyze_hlo
+from .mesh import make_production_mesh
+from .steps import build_step
+
+# v5e hardware constants (assignment)
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    train_mode: str = "auto",
+    precision: str = "auto",
+    accum: int = 1,
+    state_bits: int = 32,
+    out_dir: str = "results/dryrun",
+    tag: str = "",
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    art = build_step(
+        cfg, shape, mesh,
+        train_mode=train_mode, precision=precision, accum=accum,
+        state_bits=state_bits,
+    )
+    if os.environ.get("DRYRUN_DEBUG_ARGS"):
+        import numpy as _np
+
+        n_dev = mesh.devices.size
+        flat, _ = jax.tree_util.tree_flatten_with_path(
+            (art.arg_specs, art.in_shardings)
+        )
+        specs = jax.tree_util.tree_leaves(art.arg_specs)
+        shards = jax.tree_util.tree_leaves(
+            art.in_shardings, is_leaf=lambda x: hasattr(x, "spec")
+        )
+        paths = [p for p, _ in jax.tree_util.tree_flatten_with_path(art.arg_specs)[0]]
+        rows = []
+        for p, s, sh in zip(paths, specs, shards):
+            total = _np.prod(s.shape) * s.dtype.itemsize if s.shape else s.dtype.itemsize
+            shard_factor = 1
+            try:
+                sspec = sh.spec
+                for dim, names in zip(s.shape, sspec):
+                    if names is None:
+                        continue
+                    names = names if isinstance(names, tuple) else (names,)
+                    shard_factor *= int(_np.prod([mesh.shape[n] for n in names]))
+            except Exception:
+                pass
+            rows.append((total / shard_factor, total, p, getattr(sh, "spec", None)))
+        rows.sort(key=lambda r: -r[0])
+        print("  top args by per-device bytes:")
+        for per_dev, total, p, spec in rows[:12]:
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+            print(f"    {per_dev/2**20:9.1f} MiB/dev (global {total/2**30:7.2f} GiB) "
+                  f"{name[:80]} {spec}")
+    with mesh, sharding_rules(mesh, activation_rules(mesh)):
+        jit_kw = {}
+        if art.out_shardings is not None:
+            jit_kw["out_shardings"] = art.out_shardings
+        jitted = jax.jit(
+            art.fn,
+            in_shardings=art.in_shardings,
+            donate_argnums=art.donate_argnums,
+            **jit_kw,
+        )
+        lowered = jitted.lower(*art.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        print(f"[{arch} × {shape_name} × {'multi' if multi_pod else 'single'}] "
+              f"{art.name} lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+        ca = compiled.cost_analysis()
+        print("  cost_analysis flops:", ca.get("flops"), "bytes:",
+              ca.get("bytes accessed"))
+        summary = analyze_hlo(compiled.as_text())
+
+    chips = 512 if multi_pod else 256
+    per_dev_bytes = (
+        mem.argument_size_in_bytes
+        + mem.output_size_in_bytes
+        + mem.temp_size_in_bytes
+        - mem.alias_size_in_bytes
+    )
+    coll = {k: float(v) for k, v in summary.collective_bytes.items()}
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "step": art.name,
+        "meta": art.meta,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        # per-device (post-SPMD HLO shapes are per-device)
+        "hlo_flops_per_dev": float(summary.flops),
+        "hbm_bytes_per_dev": float(summary.hbm_bytes),
+        "collective_bytes_per_dev": coll,
+        "collective_counts": summary.num_collectives,
+        "xla_cost_flops": float(ca.get("flops", 0) or 0),
+        "xla_bytes_accessed": float(ca.get("bytes accessed", 0) or 0),
+        "memory": {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+            "per_device_total": per_dev_bytes,
+            "fits_16gb": bool(per_dev_bytes <= 16 * 1024**3),
+        },
+        # roofline terms (seconds)
+        "compute_term_s": float(summary.flops) / PEAK_FLOPS,
+        "memory_term_s": float(summary.hbm_bytes) / HBM_BW,
+        "collective_term_s": sum(coll.values()) / ICI_BW,
+        "trip_counts": {k: int(v) for k, v in summary.trip_counts.items()},
+    }
+    result["dominant"] = max(
+        ("compute_term_s", "memory_term_s", "collective_term_s"),
+        key=lambda k: result[k],
+    )
+    print(f"  roofline: compute {result['compute_term_s']*1e3:.2f}ms  "
+          f"memory {result['memory_term_s']*1e3:.2f}ms  "
+          f"collective {result['collective_term_s']*1e3:.2f}ms  "
+          f"→ {result['dominant']}  per-dev {per_dev_bytes/2**30:.2f}GiB "
+          f"(fits16G={result['memory']['fits_16gb']})")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"{arch}_{shape_name}_{result['mesh']}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=tuple(SHAPES))
+    p.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    p.add_argument("--all", action="store_true", help="every supported cell")
+    p.add_argument("--train-mode", default="auto", choices=("auto", "full", "otp"))
+    p.add_argument("--precision", default="auto", choices=("auto", "bf16", "quant"))
+    p.add_argument("--accum", type=int, default=0,
+                   help="microbatch accumulation (0 = auto per arch)")
+    p.add_argument("--state-bits", type=int, default=32, choices=(8, 32))
+    p.add_argument("--out", default="results/dryrun")
+    p.add_argument("--tag", default="", help="suffix for experiment variants")
+    p.add_argument("--keep-going", action="store_true")
+    args = p.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in supported_shapes(get_config(arch)):
+                cells.append((arch, shape_name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for arch, shape_name in cells:
+        if shape_name not in supported_shapes(get_config(arch)):
+            print(f"[skip] {arch} × {shape_name} (DESIGN.md §4)")
+            continue
+        for mp in meshes:
+            try:
+                run_cell(
+                    arch, shape_name, mp,
+                    train_mode=args.train_mode, precision=args.precision,
+                    accum=args.accum, state_bits=args.state_bits,
+                    out_dir=args.out, tag=args.tag,
+                )
+            except Exception:
+                traceback.print_exc()
+                failures.append((arch, shape_name, mp))
+                if not args.keep_going:
+                    raise
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete:", len(cells), "cells ×", len(meshes), "mesh(es)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,338 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis does **not**
+multiply while-loop bodies by their trip count, so scan-over-layers
+programs (all of ours — compile-time independence of depth) under-count
+FLOPs/bytes by ~num_layers×. This module parses ``compiled.as_text()``
+into a computation graph, extracts per-computation
+
+* dot FLOPs (``2 · prod(result) · prod(contracting dims)``),
+* HBM traffic at *fusion granularity* (a fusion's operands + result move
+  through HBM once; fused interiors live in registers/VMEM),
+* collective operand bytes per collective kind,
+
+and propagates multipliers through ``while`` edges (trip count recovered
+from the loop condition's comparison constant), ``fusion``/``call``/
+``conditional`` edges. Shapes in post-partitioning HLO are per-device, so
+every total below is **per device**.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloSummary", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|u4|s4|pred|c64|c128)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    # pure layout/elementwise-relabel ops: fused into neighbors on TPU
+    "copy", "transpose", "reshape", "broadcast", "convert",
+}
+
+# ops whose HBM cost is ~their result (reads are subsets / fused)
+_RESULT_ONLY_OPS = {
+    "slice", "dynamic-slice", "dynamic-update-slice", "concatenate",
+    "gather", "scatter", "pad", "reduce", "select-and-scatter", "reverse",
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every dtype[shape] token in ``text``."""
+    tot = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        tot += n * _DTYPE_BYTES[dt]
+    return tot
+
+
+def _shape_dims(text: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    result_shape: str  # raw text
+    args: List[str]  # operand instruction names
+    raw: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: Dict[str, _Instr]
+    raw_lines: List[str]
+
+
+@dataclasses.dataclass
+class HloSummary:
+    flops: float  # per device
+    hbm_bytes: float  # per device (fusion-granular model)
+    collective_bytes: Dict[str, float]  # per device, operand bytes by kind
+    dot_flops_by_comp: Dict[str, float]
+    trip_counts: Dict[str, int]
+    num_collectives: Dict[str, int]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# shape may be a tuple with layout braces: (s32[], f32[8,64]{1,0});
+# the op name is the first bare `word(` after the shape (non-greedy)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$"
+)
+# params may nest parens (tuple args): greedy match up to `->`
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{$")
+_TRIP_BC_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], str]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = _Comp(m.group(1), {}, [])
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if stripped == "}" or stripped.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            cur.raw_lines.append(stripped)
+            im = _INSTR_RE.match(stripped)
+            if im:
+                name, shape, op, rest = im.groups()
+                args = re.findall(r"%([\w\.\-]+)", rest.split(")", 1)[0])
+                cur.instrs[name] = _Instr(name, op, shape, args, stripped)
+    return comps, entry or ""
+
+
+def _trip_count(cond: _Comp) -> int:
+    """Recover the static trip count from the loop condition: the constant
+    in ``compare(%iv, %c), direction=LT`` (scan-style loops)."""
+    consts: Dict[str, int] = {}
+    for ln in cond.raw_lines:
+        m = re.match(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*\S+\s+constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond.raw_lines:
+        if " compare(" in ln and "direction=LT" in ln:
+            for arg in re.findall(r"%([\w\.\-]+)", ln.split("compare(", 1)[1]):
+                if arg in consts:
+                    return consts[arg]
+    # GE/GT countdown loops or unknown: be conservative
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+def _dot_flops(instr: _Instr, comp: _Comp) -> float:
+    res = _shape_dims(instr.result_shape)
+    if res is None:
+        return 0.0
+    _, rdims = res
+    out = 1.0
+    for d in rdims:
+        out *= d
+    # contracting size from lhs shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.raw)
+    contract = 1.0
+    if m and instr.args:
+        lhs = comp.instrs.get(instr.args[0])
+        lhs_dims: Optional[List[int]] = None
+        if lhs is not None:
+            sh = _shape_dims(lhs.result_shape)
+            lhs_dims = sh[1] if sh else None
+        if lhs_dims is None:
+            # operand defined elsewhere (parameter with inline shape in raw)
+            sh = _shape_dims(instr.raw.split("dot(", 1)[1])
+            lhs_dims = sh[1] if sh else []
+        if m.group(1):
+            for ax in m.group(1).split(","):
+                ax = int(ax)
+                if lhs_dims and ax < len(lhs_dims):
+                    contract *= lhs_dims[ax]
+    return 2.0 * out * contract
+
+
+def analyze_hlo(text: str, default_trip: int = 1) -> HloSummary:
+    comps, entry = _parse_computations(text)
+
+    # per-computation local stats + edges
+    local_flops: Dict[str, float] = {}
+    local_bytes: Dict[str, float] = {}
+    local_coll: Dict[str, Dict[str, float]] = {}
+    local_coll_n: Dict[str, Dict[str, int]] = {}
+    edges: Dict[str, List[Tuple[str, int]]] = {}  # comp -> [(callee, mult)]
+    trip_counts: Dict[str, int] = {}
+
+    for cname, comp in comps.items():
+        fl = 0.0
+        by = 0.0
+        coll: Dict[str, float] = {}
+        coll_n: Dict[str, int] = {}
+        edges[cname] = []
+        for ln in comp.raw_lines:
+            im = _INSTR_RE.match(ln)
+            if not im:
+                continue
+            name, shape, op, rest = im.groups()
+            instr = comp.instrs[name]
+            base_op = op.replace("-start", "")
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                tb = _TRIP_BC_RE.search(ln)  # XLA's own known_trip_count
+                if tb:
+                    trips = int(tb.group(1))
+                elif cm and cm.group(1) in comps:
+                    trips = _trip_count(comps[cm.group(1)])
+                else:
+                    trips = default_trip
+                if bm:
+                    edges[cname].append((bm.group(1), trips))
+                    trip_counts[bm.group(1)] = trips
+                continue
+            if op in ("fusion", "call", "async-start"):
+                for callee in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)", ln):
+                    edges[cname].append((callee, 0))  # 0 → bytes-only skip
+                # fusion-granular HBM traffic: operands + result
+                by += _shape_bytes(ln)
+                continue
+            if op == "conditional":
+                for callee in re.findall(
+                    r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w\.\-,%]+)",
+                    ln,
+                ):
+                    for c2 in callee.replace("%", "").split(","):
+                        if c2 in comps:
+                            edges[cname].append((c2, 1))
+                continue
+            if base_op in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                operands = ln.split("(", 1)[1]
+                b = 0
+                for a in instr.args:
+                    src = comp.instrs.get(a)
+                    if src is not None:
+                        b += _shape_bytes(src.result_shape)
+                if b == 0:  # inline-shaped operands
+                    b = _shape_bytes(operands)
+                coll[base_op] = coll.get(base_op, 0.0) + b
+                coll_n[base_op] = coll_n.get(base_op, 0) + 1
+                by += _shape_bytes(instr.result_shape) + b
+                continue
+            if op == "dot":
+                fl += _dot_flops(instr, comp)
+                # dots stream both operands (weights re-read every step)
+                by += _shape_bytes(instr.result_shape)
+                for a in instr.args:
+                    src = comp.instrs.get(a)
+                    if src is not None:
+                        by += _shape_bytes(src.result_shape)
+                continue
+            if op in _NO_TRAFFIC_OPS:
+                continue
+            if op in _RESULT_ONLY_OPS:
+                by += _shape_bytes(instr.result_shape)
+                continue
+            # other compute op: write + one subsequent read (operands are
+            # results of earlier ops — counting them again would triple-
+            # count every edge)
+            by += 2 * _shape_bytes(instr.result_shape)
+        local_flops[cname] = fl
+        local_bytes[cname] = by
+        local_coll[cname] = coll
+        local_coll_n[cname] = coll_n
+
+    # FLOPs inside fused computations count at the fusion site multiplier;
+    # bytes inside fused computations do NOT (VMEM). Build two multiplier
+    # passes: flops-multiplier follows all edges, bytes-multiplier follows
+    # while/conditional edges only.
+    def propagate(follow_fusion: bool) -> Dict[str, float]:
+        mult: Dict[str, float] = {entry: 1.0}
+        order = [entry]
+        seen = {entry}
+        # BFS over call graph (acyclic in HLO)
+        i = 0
+        while i < len(order):
+            c = order[i]
+            i += 1
+            for callee, trips in edges.get(c, []):
+                if callee not in comps:
+                    continue
+                m = mult.get(c, 0.0)
+                if trips == 0:  # fusion/call edge
+                    inc = m if follow_fusion else 0.0
+                else:
+                    inc = m * trips if follow_fusion else mult.get(c, 0.0) * trips
+                if not follow_fusion and trips == 0:
+                    # bytes: descend into call/fusion bodies with 0 (already
+                    # counted at call site)
+                    inc = 0.0
+                mult[callee] = mult.get(callee, 0.0) + inc
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+        return mult
+
+    mult_flops = propagate(follow_fusion=True)
+    mult_bytes = propagate(follow_fusion=False)
+    # collectives are never inside fusions; use bytes multipliers (while-aware)
+    flops = sum(local_flops[c] * mult_flops.get(c, 0.0) for c in comps)
+    hbm = sum(local_bytes[c] * mult_bytes.get(c, 0.0) for c in comps)
+    coll_total: Dict[str, float] = {}
+    coll_count: Dict[str, int] = {}
+    for c in comps:
+        m = mult_bytes.get(c, 0.0)
+        for k, v in local_coll[c].items():
+            coll_total[k] = coll_total.get(k, 0.0) + v * m
+            coll_count[k] = coll_count.get(k, 0) + int(local_coll_n[c][k] * max(m, 0))
+    dot_by_comp = {
+        c: local_flops[c] * mult_flops.get(c, 0.0)
+        for c in comps
+        if local_flops[c] > 0
+    }
+    return HloSummary(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=coll_total,
+        dot_flops_by_comp=dot_by_comp,
+        trip_counts=trip_counts,
+        num_collectives=coll_count,
+    )

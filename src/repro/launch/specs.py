@@ -1,0 +1,142 @@
+"""Spec-level builders for quantized/compressed model parameter trees.
+
+The dry-run never materializes parameters — these builders construct the
+*pytree structure* (PackedTensor / CompressedExperts containers holding
+``ShapeDtypeStruct`` leaves via ``jax.eval_shape``) for:
+
+* the PMQ-compressed MoE LM (stacked per-layer arrays so the model's
+  ``lax.scan`` slices each layer's packed experts — DESIGN.md §5.4), and
+* uniform ``attn_bits``-quantized dense models (the paper's "Uni"
+  baseline, which is what PMQ degenerates to without experts).
+
+``concrete=True`` returns zero-filled real arrays (used by tests and the
+serve example on reduced configs).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..core.packing import PackedTensor
+from ..core.pipeline import synthetic_stacked_compressed
+from ..core import otp as otp_mod
+
+__all__ = [
+    "make_compressed_moe_params",
+    "quantize_dense_param_tree",
+    "make_otp_stacked",
+]
+
+_PER = {1: 8, 2: 4, 3: 8, 4: 2, 8: 1}
+
+
+def _pt_stack(l: int, k: int, n: int, bits: int, group: int) -> PackedTensor:
+    """PackedTensor with a leading stacked layer dim (scan slices it)."""
+    if bits == 3:
+        data = (
+            jnp.zeros((l, k // 4, n), jnp.uint8),
+            jnp.zeros((l, k // 8, n), jnp.uint8),
+        )
+    else:
+        data = jnp.zeros((l, k // _PER[bits], n), jnp.uint8)
+    ng = (k + group - 1) // group
+    return PackedTensor(
+        data=data,
+        scale=jnp.zeros((l, ng, n), jnp.bfloat16),
+        zero=jnp.zeros((l, ng, n), jnp.bfloat16),
+        bits=bits,
+        shape=(k, n),
+        group=group,
+        axis=0,
+    )
+
+
+def _build_compressed_moe(cfg, avg_bits: float, with_otp: bool):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    l, d = cfg.num_layers, cfg.d_model
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ab, g = cfg.quant.attn_bits, cfg.quant.group
+    attn = {
+        "wq": {"w": _pt_stack(l, d, hq * dh, ab, g)},
+        "wk": {"w": _pt_stack(l, d, hkv * dh, ab, g)},
+        "wv": {"w": _pt_stack(l, d, hkv * dh, ab, g)},
+        "wo": {"w": _pt_stack(l, hq * dh, d, ab, g)},
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = jnp.zeros((l, dh), dt)
+        attn["k_norm"] = jnp.zeros((l, dh), dt)
+    moe_p: Dict = {"router": {"w": jnp.zeros((l, d, cfg.num_experts), jnp.float32)}}
+    if cfg.num_shared_experts:
+        f = cfg.d_ff_expert * cfg.num_shared_experts
+        moe_p["shared"] = {
+            "w_gate": {"w": _pt_stack(l, d, f, ab, g)},
+            "w_up": {"w": _pt_stack(l, d, f, ab, g)},
+            "w_down": {"w": _pt_stack(l, f, d, ab, g)},
+        }
+    blocks = {
+        "ln1": jnp.zeros((l, d), dt),
+        "attn": attn,
+        "ln2": jnp.zeros((l, d), dt),
+        "moe": moe_p,
+        "moe_ce": synthetic_stacked_compressed(cfg, avg_bits),
+    }
+    if with_otp:
+        blocks["otp"] = make_otp_stacked(cfg, concrete=True)
+    params = {
+        "embed": jnp.zeros((cfg.vocab_size, d), dt),
+        "blocks": blocks,
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jnp.zeros((cfg.vocab_size, d), dt)
+    return params
+
+
+def make_compressed_moe_params(
+    cfg, avg_bits: float = 2.25, with_otp: bool = False, concrete: bool = False
+):
+    """Stacked compressed-LM param tree (spec by default)."""
+    build = partial(_build_compressed_moe, cfg, avg_bits, with_otp)
+    return build() if concrete else jax.eval_shape(build)
+
+
+def make_otp_stacked(cfg, concrete: bool = True):
+    l, d, k = cfg.num_layers, cfg.d_model, cfg.top_k
+    tree = {
+        "fc1": jnp.zeros((l, d, k), jnp.float32),
+        "fc2": jnp.zeros((l, 2 * k, k), jnp.float32),
+    }
+    return tree if concrete else jax.eval_shape(lambda: tree)
+
+
+def quantize_dense_param_tree(param_spec, cfg):
+    """Uniform-quantized spec: stacked [L,K,N] / flat [K,N] ``w`` leaves →
+    PackedTensor specs at ``cfg.quant.attn_bits`` (embeddings stay 16-bit,
+    matching the paper's accounting). Works on SDS trees (dry-run)."""
+    ab, g = cfg.quant.attn_bits, cfg.quant.group
+
+    def one(path, leaf):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        nd = getattr(leaf, "ndim", 0)
+        if name != "w" or nd not in (2, 3):
+            return leaf
+        if nd == 3:
+            l, k, n = leaf.shape
+            if k % g or k % 8:
+                return leaf
+            return jax.eval_shape(lambda: _pt_stack(l, k, n, ab, g))
+        k, n = leaf.shape
+        if k % g or k % 8:
+            return leaf
+        spec = jax.eval_shape(lambda: _pt_stack(1, k, n, ab, g))
+        # drop the stacked dim for flat leaves
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), spec
+        )
+
+    return jax.tree_util.tree_map_with_path(
+        one, param_spec, is_leaf=lambda x: hasattr(x, "ndim")
+    )

@@ -1,0 +1,456 @@
+"""Step-function builders shared by dryrun / train / serve launchers.
+
+Each builder returns ``(fn, arg_specs, in_shardings, donate_argnums)``
+ready for ``jax.jit(...).lower(*arg_specs)``:
+
+* ``train`` — full training (value_and_grad + AdamW; microbatch
+  gradient accumulation via ``lax.scan`` when ``accum > 1``);
+* ``train-otp`` — the paper's OTP router distillation on a frozen
+  PMQ-compressed backbone (kimi-k2 default — DESIGN.md §9);
+* ``prefill`` / ``decode`` — serving steps, bf16 or PMQ-quantized
+  (``precision='quant'``: compressed experts for MoE, uniform
+  ``attn_bits`` for dense — the paper's "Uni" degenerate case).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import layers as Lx
+from ..models import transformer as tf
+from ..models.registry import ModelBundle, get_model
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from ..parallel import sharding as shd
+from . import specs as spec_mod
+
+__all__ = ["StepArtifacts", "build_step"]
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    name: str
+    fn: Any
+    arg_specs: Tuple
+    in_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict
+    out_shardings: Any = None
+
+
+def _batch_shardings(mesh, batch_spec):
+    ba = shd.batch_axes(mesh)
+
+    def one(leaf):
+        nd = leaf.ndim
+        spec = P(*([ba] + [None] * (nd - 1))) if nd >= 1 else P()
+        if not shd._divides(leaf.shape, spec, mesh):
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, batch_spec)
+
+
+def _cache_shardings(mesh, cache_spec, long_context: bool):
+    ba = shd.batch_axes(mesh)
+
+    def one(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 5:  # [L, B, S, H, dh]
+            spec = shd.cache_pspec(
+                mesh, leaf.shape, prefer="seq" if long_context else "batch"
+            )
+        elif nd >= 2:
+            # [L, B, ...] states: batch on dim 1 when it divides
+            spec = P(None, ba, *([None] * (nd - 2)))
+        else:
+            spec = P(*([None] * nd))
+        if not shd._divides(leaf.shape, spec, mesh):
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, cache_spec)
+
+
+def _opt_shardings(mesh, opt_spec, param_shardings, stacked_prefixes=None):
+    """Optimizer state: mirror of the param sharding **plus ZeRO-1 FSDP** —
+    m/v/master additionally shard over ``data`` on the first unsharded
+    axis that divides. Scalars and 8-bit flat states handled explicitly.
+    """
+    import re
+
+    stacked_prefixes = stacked_prefixes or shd.STACKED_PREFIXES
+    data = mesh.shape.get("data", 1)
+
+    def one(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        ps = shd._path_str(path)
+        suffix = ps.split("/")[-1]
+        core = re.sub(r"^per_param/", "", ps)
+        core = re.sub(r"/(m|v|master|q|scale)(/[0-9]+)?$", "", core)
+        if suffix in ("q", "scale") and nd == 1:
+            # 8-bit flattened state: shard across everything that divides
+            for axes in (("data", "model"), ("data",), ("model",)):
+                if all(a in mesh.shape for a in axes):
+                    spec = P(axes)
+                    if shd._divides(leaf.shape, spec, mesh):
+                        return NamedSharding(mesh, spec)
+            return NamedSharding(mesh, P(None))
+        stacked = any(core.startswith(pref) for pref in stacked_prefixes)
+        spec = shd.param_spec_for_path(core, nd, stacked)
+        if not shd._divides(leaf.shape, spec, mesh):
+            spec = P(*([None] * nd))
+        # ZeRO-1: add "data" on the first free, divisible axis
+        parts = list(spec) + [None] * (nd - len(spec))
+        for ax in range(nd):
+            if parts[ax] is None and leaf.shape[ax] % data == 0 and data > 1:
+                parts[ax] = "data"
+                break
+        spec2 = P(*parts)
+        if shd._divides(leaf.shape, spec2, mesh):
+            return NamedSharding(mesh, spec2)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, opt_spec)
+
+
+def _zero1_sharding(mesh, leaf, param_sharding):
+    """Gradient sharding for ZeRO-1: the param spec + ``data`` on the
+    first free divisible axis (matches the optimizer-state layout)."""
+    nd = getattr(leaf, "ndim", 0)
+    data = mesh.shape.get("data", 1)
+    if nd == 0 or data <= 1:
+        return param_sharding
+    try:
+        base = list(param_sharding.spec) + [None] * nd
+    except Exception:
+        return param_sharding
+    parts = base[:nd]
+    for ax in range(nd):
+        if parts[ax] is None and leaf.shape[ax] % data == 0:
+            parts[ax] = "data"
+            break
+    spec = P(*parts)
+    if shd._divides(leaf.shape, spec, mesh):
+        return NamedSharding(mesh, spec)
+    return param_sharding
+
+
+def _etp_ok(cfg, mesh, group: int) -> bool:
+    f = cfg.d_ff_expert
+    data = mesh.shape.get("data", 1)
+    return (
+        data > 1 and f and f % data == 0
+        and (f // data) % group == 0 and (f // group) % data == 0
+    )
+
+
+def _apply_etp_weight_shardings(shardings, params_spec, cfg, mesh):
+    """2-D storage for compressed expert arrays (EP×expert-TP): matches
+    the shard_map region's in_specs so kimi-scale packed weights use every
+    chip (322 GB / 256 instead of / 16)."""
+    if not (cfg.is_moe and _etp_ok(cfg, mesh, cfg.quant.group)):
+        return shardings
+
+    def one(path, sh, leaf):
+        ps = shd._path_str(path)
+        if "moe_ce" not in ps:
+            return sh
+        nd = getattr(leaf, "ndim", 0)
+        stacked = ps.startswith("blocks")
+        base = 1 if stacked else 0  # leading layer dim
+        if nd < base + 3:
+            return sh
+        if "w_down" in ps:
+            spec = [None] * nd
+            spec[base] = "model"
+            spec[base + 1] = "data"
+        else:  # w_gate / w_up: F column-parallel (last dim)
+            spec = [None] * nd
+            spec[base] = "model"
+            spec[nd - 1] = "data"
+        spec = P(*spec)
+        if shd._divides(leaf.shape, spec, mesh):
+            return NamedSharding(mesh, spec)
+        return sh
+
+    return jax.tree_util.tree_map_with_path(
+        lambda pth, sh, lf: one(pth, sh, lf), shardings, params_spec
+    )
+
+
+def build_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    *,
+    train_mode: str = "auto",
+    precision: str = "auto",
+    avg_bits: float = 2.25,
+    accum: int = 1,
+    state_bits: int = 32,
+) -> StepArtifacts:
+    bundle = get_model(cfg)
+    step_kind, kwargs = bundle.input_specs(shape)
+    meta: Dict = {"arch": cfg.name, "shape": shape.name, "kind": step_kind}
+
+    if step_kind == "train":
+        if train_mode == "auto":
+            train_mode = "otp" if cfg.name.startswith("kimi") else "full"
+        if accum == 0:  # auto: token-scaled buffers (dispatch/attention
+            # backward) must fit per microbatch — tuned in EXPERIMENTS §Perf
+            accum = {
+                "moonshot-v1-16b-a3b": 4,
+                "kimi-k2-1t-a32b": 8,
+                "command-r-35b": 16,
+                "gemma3-27b": 8,
+                "qwen3-14b": 2,
+                "recurrentgemma-2b": 2,
+            }.get(cfg.name, 1)
+        meta["train_mode"] = train_mode
+        if train_mode == "otp":
+            return _build_otp_train(
+                cfg, shape, mesh, bundle, kwargs, meta, avg_bits, accum
+            )
+        return _build_full_train(
+            cfg, shape, mesh, bundle, kwargs, meta, accum, state_bits
+        )
+
+    if precision == "auto":
+        precision = "quant" if cfg.is_moe else "bf16"
+    meta["precision"] = precision
+    if step_kind == "prefill":
+        return _build_prefill(cfg, shape, mesh, bundle, kwargs, meta, precision, avg_bits)
+    return _build_decode(cfg, shape, mesh, bundle, kwargs, meta, precision, avg_bits)
+
+
+# ------------------------------------------------------------------ train
+def _build_full_train(cfg, shape, mesh, bundle, kwargs, meta, accum, state_bits):
+    params_spec = bundle.param_shapes()
+    ocfg = AdamWConfig(
+        state_bits=state_bits, master=(cfg.dtype == "bfloat16")
+    )
+    opt_spec = jax.eval_shape(partial(adamw_init, cfg=ocfg), params_spec)
+    batch_spec = kwargs["batch"]
+    meta["accum"] = accum
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, b):
+            loss, m = bundle.train_loss(p, b)
+            return loss, m
+
+        if accum > 1:
+            # microbatch gradient accumulation: scan over accum slices.
+            # The f32 accumulator lives on the ZeRO-1 (data×model) layout —
+            # per-micro grads reduce-scatter into it (ZeRO-2-style), so the
+            # buffer is params/(data·model), not params/model.
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                grads = jax.tree.map(
+                    lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                    grads, zero1_sh,
+                )
+                return (
+                    jax.tree.map(jnp.add, gacc, grads),
+                    lacc + loss,
+                ), None
+
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(accum, b // accum, *leaf.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p, s: jax.lax.with_sharding_constraint(
+                    jnp.zeros(p.shape, jnp.float32), s
+                ),
+                params, zero1_sh,
+            )
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        # ZeRO-1: scatter grads onto the optimizer-state sharding so the
+        # update math runs fully sharded (one RS here, one AG on params)
+        grads = jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, zero1_sh,
+        )
+        params, opt_state = adamw_update(params, grads, opt_state, ocfg)
+        return params, opt_state, loss
+
+    p_sh = shd.make_param_shardings(mesh, params_spec)
+    o_sh = _opt_shardings(mesh, opt_spec, p_sh)
+    zero1_sh = jax.tree.map(
+        lambda leaf, sh: _zero1_sharding(mesh, leaf, sh),
+        params_spec, p_sh,
+    )
+    b_sh = _batch_shardings(mesh, batch_spec)
+    return StepArtifacts(
+        name="train_step",
+        fn=train_step,
+        arg_specs=(params_spec, opt_spec, batch_spec),
+        in_shardings=(p_sh, o_sh, b_sh),
+        donate_argnums=(0, 1),
+        meta=meta,
+    )
+
+
+def _build_otp_train(cfg, shape, mesh, bundle, kwargs, meta, avg_bits, accum=1):
+    """OTP distillation on the frozen compressed backbone (paper Eq. 14)."""
+    frozen_spec = spec_mod.make_compressed_moe_params(cfg, avg_bits)
+    otp_spec = spec_mod.make_otp_stacked(cfg, concrete=False)
+    ocfg = AdamWConfig(lr=2e-3, weight_decay=0.0)
+    opt_spec = jax.eval_shape(partial(adamw_init, cfg=ocfg), otp_spec)
+    batch_spec = {"tokens": kwargs["batch"]["tokens"]}
+    lam = 1.0
+    meta["accum"] = accum
+
+    def otp_train_step(otp_params, opt_state, frozen, batch, rng):
+        def loss_fn(op, tokens):
+            blocks_s = dict(frozen["blocks"])
+            blocks_s["otp"] = op
+            params_s = dict(frozen, blocks=blocks_s)
+            hs, mask_l1, _ = tf.forward_hidden(
+                params_s, tokens, cfg, moe_hooks={"otp_rng": rng, "otp_tau": 1.0}
+            )
+            ht, _, _ = tf.forward_hidden(
+                frozen, tokens, cfg, moe_hooks={"use_otp": False}
+            )
+            ht = jax.lax.stop_gradient(ht)
+            emb = frozen.get("unembed", frozen["embed"])
+            kl = Lx.chunked_kl(hs, ht, emb, cfg.logits_chunk)
+            return kl + lam * mask_l1 / cfg.num_layers, (kl, mask_l1)
+
+        tokens = batch["tokens"]
+        if accum > 1:
+            b = tokens.shape[0]
+            micros = tokens.reshape(accum, b // accum, -1)
+
+            def micro(carry, tk):
+                gacc, lacc, kacc = carry
+                (loss, (kl, _)), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True
+                )(otp_params, tk)
+                return (
+                    jax.tree.map(jnp.add, gacc, grads),
+                    lacc + loss, kacc + kl,
+                ), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros_like(p), otp_params)
+            (grads, loss, kl), _ = jax.lax.scan(
+                micro, (zeros, jnp.float32(0), jnp.float32(0)), micros
+            )
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss, kl = loss / accum, kl / accum
+        else:
+            (loss, (kl, l1)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                otp_params, tokens
+            )
+        otp_params, opt_state = adamw_update(otp_params, grads, opt_state, ocfg)
+        return otp_params, opt_state, loss, kl
+
+    p_sh = shd.make_param_shardings(mesh, otp_spec)
+    o_sh = _opt_shardings(mesh, opt_spec, p_sh)
+    f_sh = shd.make_param_shardings(mesh, frozen_spec)
+    f_sh = _apply_etp_weight_shardings(f_sh, frozen_spec, cfg, mesh)
+    b_sh = _batch_shardings(mesh, batch_spec)
+    rng_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return StepArtifacts(
+        name="otp_train_step",
+        fn=otp_train_step,
+        arg_specs=(otp_spec, opt_spec, frozen_spec, batch_spec, rng_spec),
+        in_shardings=(p_sh, o_sh, f_sh, b_sh, NamedSharding(mesh, P(None))),
+        donate_argnums=(0, 1),
+        meta=meta,
+    )
+
+
+# ------------------------------------------------------------------ serve
+def _serve_params_spec(cfg, bundle, precision, avg_bits):
+    if precision == "bf16":
+        return bundle.param_shapes()
+    if cfg.is_moe:
+        return spec_mod.make_compressed_moe_params(cfg, avg_bits)
+    return spec_mod.quantize_dense_param_tree(bundle.param_shapes(), cfg)
+
+
+def _build_prefill(cfg, shape, mesh, bundle, kwargs, meta, precision, avg_bits):
+    params_spec = _serve_params_spec(cfg, bundle, precision, avg_bits)
+    batch_spec = kwargs["batch"]
+
+    def prefill_step(params, batch):
+        return bundle.prefill(params, batch)
+
+    p_sh = shd.make_param_shardings(mesh, params_spec)
+    if precision == "quant":
+        p_sh = _apply_etp_weight_shardings(p_sh, params_spec, cfg, mesh)
+    b_sh = _batch_shardings(mesh, batch_spec)
+    # the returned KV cache must leave the step sharded (it feeds decode)
+    out_spec = jax.eval_shape(bundle.prefill, params_spec, batch_spec)
+    cache_sh = _cache_shardings(mesh, out_spec[0], False)
+    logits_sh = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), out_spec[1]
+    )
+    return StepArtifacts(
+        name="prefill_step",
+        fn=prefill_step,
+        arg_specs=(params_spec, batch_spec),
+        in_shardings=(p_sh, b_sh),
+        donate_argnums=(),
+        meta=meta,
+        out_shardings=(cache_sh, logits_sh),
+    )
+
+
+def _build_decode(cfg, shape, mesh, bundle, kwargs, meta, precision, avg_bits):
+    params_spec = _serve_params_spec(cfg, bundle, precision, avg_bits)
+    if precision == "bf16":
+        cache_spec = kwargs["cache"]
+    else:
+        batch_spec_p = bundle.batch_specs(shape, "prefill")
+        cache_spec, _ = jax.eval_shape(
+            bundle.prefill, params_spec, batch_spec_p
+        )
+    token_spec, pos_spec = kwargs["token"], kwargs["pos"]
+
+    def decode_fn(params, cache, token, pos):
+        return bundle.decode_step(params, cache, token, pos)
+
+    long_ctx = shape.name.startswith("long")
+    p_sh = shd.make_param_shardings(mesh, params_spec)
+    if precision == "quant":
+        p_sh = _apply_etp_weight_shardings(p_sh, params_spec, cfg, mesh)
+    c_sh = _cache_shardings(mesh, cache_spec, long_ctx)
+    t_sh = _batch_shardings(mesh, token_spec)
+    # the updated cache must leave the step sharded like it came in
+    out_spec = jax.eval_shape(
+        bundle.decode_step, params_spec, cache_spec, token_spec, pos_spec
+    )
+    out_cache_sh = _cache_shardings(mesh, out_spec[0], long_ctx)
+    logits_sh = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * l.ndim))), out_spec[1]
+    )
+    return StepArtifacts(
+        name="decode_step",
+        fn=decode_fn,
+        arg_specs=(params_spec, cache_spec, token_spec, pos_spec),
+        in_shardings=(p_sh, c_sh, t_sh, NamedSharding(mesh, P())),
+        donate_argnums=(1,),
+        meta=meta,
+        out_shardings=(out_cache_sh, logits_sh),
+    )

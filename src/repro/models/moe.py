@@ -1,0 +1,231 @@
+"""Mixture-of-Experts layer (paper §3.1 Eq. 1) with TPU-friendly dispatch.
+
+Dispatch is sort-free GShard-style **cumsum + scatter** (DESIGN.md §5.4):
+no [T, E, C] dispatch einsum (which is quadratic-ish in tokens) and no
+global argsort — a [T·k, E] one-hot cumsum ranks tokens within their
+expert, then a scatter builds the ``[E·capacity, D]`` layout whose leading
+dim shards over the ``model`` axis (expert parallelism). Expert FFNs run
+as a batched einsum over the expert dim (or the PMQ-quantized bucketed
+path in :mod:`repro.core.compressed_moe`).
+
+OTP hooks: ``gate_mask [T, k]`` multiplies gate weights *before* dispatch,
+and masked (token, k)-slots are routed to the drop bucket so pruned
+experts consume no capacity and no FLOPs (paper §3.4 / Fig. 8).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from .layers import init_linear, init_mlp, linear, mlp
+
+__all__ = ["init_moe", "moe_layer", "route_topk", "capacity_dispatch", "MoEOut"]
+
+
+class MoEOut(NamedTuple):
+    y: jnp.ndarray
+    aux_loss: jnp.ndarray
+    router_probs: jnp.ndarray  # [T, E] (for stats/calibration)
+    topk_idx: jnp.ndarray  # [T, k]
+    topk_gates: jnp.ndarray  # [T, k]
+
+
+def init_moe(rng, cfg, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    ks = jax.random.split(rng, 5)
+    scale = 1.0 / (d**0.5)
+    p = {
+        "router": init_linear(ks[0], d, e, jnp.float32, scale),
+        "experts": {
+            "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * scale,
+            "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * scale,
+            "w_down": jax.random.normal(ks[3], (e, f, d), dtype) * (1.0 / f**0.5),
+        },
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, f * cfg.num_shared_experts, dtype)
+    return p
+
+
+def route_topk(router_p, x2: jnp.ndarray, k: int):
+    """Softmax router + top-k with renormalized gates.
+
+    ``x2 [T, D]`` → probs [T, E], idx [T, k], gates [T, k].
+    """
+    logits = linear(router_p, x2.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return probs, idx, gates
+
+
+def _rank_within_expert(eids: jnp.ndarray, e: int) -> jnp.ndarray:
+    """Stable rank of each slot within its expert (GShard cumsum, no sort).
+
+    Large problems (T·k·E elements > 2²⁶) run a chunked scan so the
+    [chunk, E] one-hot never exceeds ~128 MiB.
+    """
+    n = eids.shape[0]
+    if n * e <= 2**26:
+        onehot = (eids[:, None] == jnp.arange(e)[None, :]).astype(jnp.int32)
+        onehot = shard(onehot, "moe_tke")
+        rank = jnp.cumsum(onehot, axis=0) - onehot
+        return jnp.sum(rank * onehot, axis=1)
+    chunk = max(1, 2**26 // e // 8 * 8)
+    nchunks = (n + chunk - 1) // chunk
+    pad = nchunks * chunk - n
+    ep = jnp.pad(eids, (0, pad), constant_values=e)  # pads rank harmlessly
+    chunks = ep.reshape(nchunks, chunk)
+
+    def body(counts, ch):
+        oh = (ch[:, None] == jnp.arange(e)[None, :]).astype(jnp.int32)
+        r = counts[None, :] + jnp.cumsum(oh, axis=0) - oh
+        rank_ch = jnp.sum(r * oh, axis=1)
+        return counts + oh.sum(axis=0), rank_ch
+
+    _, ranks = jax.lax.scan(body, jnp.zeros((e,), jnp.int32), chunks)
+    return ranks.reshape(-1)[:n]
+
+
+def capacity_dispatch(
+    x2: jnp.ndarray,
+    idx: jnp.ndarray,
+    gates: jnp.ndarray,
+    num_experts: int,
+    capacity: int,
+    gate_mask: Optional[jnp.ndarray] = None,
+):
+    """Build the expert-major layout.
+
+    Returns ``(xp [E·cap, D], dest [T·k], valid [T·k], gates_flat [T·k])``.
+    ``dest`` maps (token, choice) slots into rows of ``xp`` (E·cap = drop).
+
+    The row movement is **gather-based**: a cheap int32 scatter builds the
+    inverse permutation (xp row → source slot), then ``xp = x2[src]`` —
+    GSPMD turns the gather into bounded-volume resharding instead of
+    all-gathering the scattered rows (DESIGN.md §5.4).
+    """
+    t, k = idx.shape
+    e = num_experts
+    eids = idx.reshape(-1)
+    gflat = gates.reshape(-1)
+    if gate_mask is not None:
+        mflat = gate_mask.reshape(-1)
+        gflat = gflat * mflat
+        eids = jnp.where(mflat > 0, eids, e)  # pruned → drop bucket
+    rank = _rank_within_expert(eids, e)
+    valid = (rank < capacity) & (eids < e)
+    dest = jnp.where(valid, eids * capacity + rank, e * capacity)
+    # inverse permutation: xp row -> source (token,choice) slot (+1; 0=empty)
+    inv = jnp.zeros((e * capacity + 1,), jnp.int32)
+    inv = inv.at[dest].set(jnp.arange(t * k, dtype=jnp.int32) + 1)[: e * capacity]
+    src_token = jnp.where(inv > 0, (inv - 1) // k, t)  # t = zero row
+    x2_pad = jnp.concatenate([x2, jnp.zeros((1, x2.shape[1]), x2.dtype)], axis=0)
+    xp = x2_pad[src_token]
+    return xp, dest, valid, gflat
+
+
+def combine(yp: jnp.ndarray, dest, valid, gflat, t: int, k: int) -> jnp.ndarray:
+    """Gather expert outputs back to token order and mix by gates."""
+    d = yp.shape[-1]
+    ypad = jnp.concatenate([yp, jnp.zeros((1, d), yp.dtype)], axis=0)
+    rows = ypad[jnp.where(valid, dest, yp.shape[0])]
+    y = (rows.reshape(t, k, d) * gflat.reshape(t, k, 1).astype(yp.dtype)).sum(axis=1)
+    return y
+
+
+def expert_ffn(experts_p, xp: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Batched SwiGLU over the expert dim: ``xp [E·cap, D] → [E·cap, D]``."""
+    e = num_experts
+    cap = xp.shape[0] // e
+    x3 = xp.reshape(e, cap, -1)
+    x3 = shard(x3, "moe_ecd")  # EP on experts + DP on capacity
+    wg, wu, wd = (
+        experts_p["w_gate"],
+        experts_p["w_up"],
+        experts_p["w_down"],
+    )
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x3, wg.astype(x3.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", x3, wu.astype(x3.dtype))
+    y = jnp.einsum("ecf,efd->ecd", h, wd.astype(x3.dtype))
+    return y.reshape(e * cap, -1)
+
+
+def load_balance_loss(probs: jnp.ndarray, idx: jnp.ndarray, num_experts: int):
+    """Switch-style aux loss: ``E · Σ_e f_e · p̄_e``."""
+    t, k = idx.shape
+    onehot = jax.nn.one_hot(idx, num_experts, dtype=jnp.float32)  # [T,k,E]
+    f = onehot.sum(axis=(0, 1)) / (t * k)
+    p = probs.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def ep_shardmap_ok(cfg, mesh, x, num_units: int) -> bool:
+    """Divisibility guard for the shard_map EP region."""
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    from ..parallel.sharding import batch_axes
+    import numpy as np
+
+    model = mesh.shape["model"]
+    bsz = int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+    return num_units % model == 0 and x.shape[0] % bsz == 0
+
+
+def moe_layer(
+    p,
+    x: jnp.ndarray,
+    cfg,
+    *,
+    gate_mask_fn=None,
+    expert_ffn_fn=None,
+) -> MoEOut:
+    """Full MoE block. ``x [B, S, D]``.
+
+    ``gate_mask_fn(x2, idx, gates) -> mask [T, k]`` is the OTP hook.
+    ``expert_ffn_fn(xp) -> yp`` overrides expert compute (compressed path).
+
+    Inside a mesh context (when divisibility holds) the routed-expert
+    region runs the zero-all-to-all shard_map EP path
+    (:mod:`repro.parallel.ep_shardmap`); the pjit/GSPMD path below is the
+    single-host / fallback implementation.
+    """
+    from ..parallel.sharding import current_mesh
+
+    mesh = current_mesh()
+    if (
+        expert_ffn_fn is None
+        and mesh is not None
+        and ep_shardmap_ok(cfg, mesh, x, cfg.num_experts)
+    ):
+        from ..parallel.ep_shardmap import moe_region_sharded
+
+        y, aux = moe_region_sharded(p, x, cfg, mesh, gate_mask_fn=gate_mask_fn)
+        if "shared" in p:
+            b, s, d = x.shape
+            y = y + mlp(p["shared"], x.reshape(b * s, d)).reshape(b, s, d)
+        return MoEOut(y, aux, None, None, None)
+    b, s, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, d)
+    e, k = cfg.num_experts, cfg.top_k
+    probs, idx, gates = route_topk(p["router"], x2, k)
+    gate_mask = None
+    if gate_mask_fn is not None:
+        gate_mask = gate_mask_fn(x2, idx, gates)
+    cap = int(cfg.moe_capacity_factor * t * k / e)
+    cap = max(8, ((cap + 7) // 8) * 8)  # sublane-aligned
+    xp, dest, valid, gflat = capacity_dispatch(x2, idx, gates, e, cap, gate_mask)
+    xp = shard(xp, "moe_ed")
+    if expert_ffn_fn is not None:
+        yp = expert_ffn_fn(xp)
+    else:
+        yp = expert_ffn(p["experts"], xp, e)
+    y = combine(yp, dest, valid, gflat, t, k)
+    if "shared" in p:
+        y = y + mlp(p["shared"], x2)
+    aux = load_balance_loss(probs, idx, e)
+    return MoEOut(y.reshape(b, s, d), aux, probs, idx, gates)

@@ -1,0 +1,276 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+Block pattern ``(rglru, rglru, attn)`` (1 attention per 2 recurrent,
+per the assignment). The RG-LRU linear recurrence
+``h_t = a_t ⊙ h_{t−1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)`` is evaluated with
+``jax.lax.associative_scan`` (O(log S) depth — the TPU-idiomatic choice;
+DESIGN.md §5). Decode keeps O(1) state: RNN hidden + a width-4 causal
+conv tail; attention blocks use the standard KV cache with a 2048 local
+window.
+
+Layer stacking: the 26 layers = 8 × (R,R,A) scanned groups + 2 trailing R
+blocks unrolled (mixed param structures can't share one scan).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+__all__ = ["init_recurrent", "train_loss", "prefill", "decode_step"]
+
+CONV_W = 4
+RGLRU_C = 8.0
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------- RG block
+def _init_rg_block(rng, cfg, dt):
+    d, w = cfg.d_model, cfg.rglru_width
+    ks = jax.random.split(rng, 7)
+    return {
+        "ln1": jnp.zeros((d,), dt),
+        "gate_in": L.init_linear(ks[0], d, w, dt),  # gelu branch
+        "proj_in": L.init_linear(ks[1], d, w, dt),  # recurrence branch
+        "conv": jax.random.normal(ks[2], (CONV_W, w), dt) * 0.1,
+        "wa": L.init_linear(ks[3], w, w, dt),  # recurrence gate r_t
+        "wx": L.init_linear(ks[4], w, w, dt),  # input gate i_t
+        "lam": jnp.full((w,), 2.0, jnp.float32),  # Λ: a = sigmoid(Λ)
+        "proj_out": L.init_linear(ks[5], w, d, dt),
+        "ln2": jnp.zeros((d,), dt),
+        "mlp": L.init_mlp(ks[6], d, cfg.d_ff, dt),
+    }
+
+
+def _causal_conv(x, kernel, state=None):
+    """Depthwise causal conv, width 4. ``x [B,S,W]``, ``kernel [4,W]``.
+
+    With ``state [B,3,W]`` (decode), prepends it instead of zero padding.
+    Returns (y, new_state).
+    """
+    b, s, w = x.shape
+    if state is None:
+        pad = jnp.zeros((b, CONV_W - 1, w), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+3, W]
+    y = sum(
+        xp[:, i : i + s, :] * kernel[i][None, None, :] for i in range(CONV_W)
+    )
+    new_state = xp[:, -(CONV_W - 1) :, :]
+    return y, new_state
+
+
+def _rglru(p, u, h0=None):
+    """RG-LRU over ``u [B,S,W]``; returns (y, h_last)."""
+    r = jax.nn.sigmoid(L.linear(p["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["wx"], u).astype(jnp.float32))
+    log_a_base = jax.nn.log_sigmoid(p["lam"])[None, None, :]  # [1,1,W]
+    log_a = RGLRU_C * r * log_a_base  # per-step log decay (≤ 0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * u.astype(jnp.float32))
+    if h0 is not None:
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def _rg_block(p, x, cfg, conv_state=None, h0=None):
+    """Returns (x, (conv_state, h_last))."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(L.linear(p["gate_in"], h))
+    u = L.linear(p["proj_in"], h)
+    u, conv_state = _causal_conv(u, p["conv"], conv_state)
+    y, h_last = _rglru(p, u, h0)
+    x = x + L.linear(p["proj_out"], y * gate)
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2)
+    return x, (conv_state, h_last)
+
+
+# ------------------------------------------------------------- attn block
+def _init_attn_block(rng, cfg, dt):
+    ka, km = jax.random.split(rng)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attention(ka, cfg, dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": L.init_mlp(km, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _attn_block(p, x, cfg, positions):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, kv = L.attention(
+        p["attn"], h, cfg, positions=positions, causal=True,
+        window=cfg.local_window,
+    )
+    x = x + a
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + L.mlp(p["mlp"], h), kv
+
+
+# ---------------------------------------------------------------- model
+def _layout(cfg):
+    """(num_groups, trailing_rg): 26 = 8×(R,R,A) + 2×R."""
+    group = len(cfg.block_pattern)  # 3
+    n_groups = cfg.num_layers // group
+    trailing = cfg.num_layers - n_groups * group
+    return n_groups, trailing
+
+
+def init_recurrent(rng, cfg) -> Dict:
+    dt = _dt(cfg)
+    n_groups, trailing = _layout(cfg)
+    ks = jax.random.split(rng, 4)
+
+    def init_group(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "rg1": _init_rg_block(k1, cfg, dt),
+            "rg2": _init_rg_block(k2, cfg, dt),
+            "attn": _init_attn_block(k3, cfg, dt),
+        }
+
+    groups = jax.vmap(init_group)(jax.random.split(ks[0], n_groups))
+    tail = [
+        _init_rg_block(k, cfg, dt)
+        for k in jax.random.split(ks[1], trailing)
+    ]
+    return {
+        "embed": jax.random.normal(ks[2], (cfg.vocab_size, cfg.d_model), dt) * 0.02,
+        "groups": groups,
+        "tail": tail,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def _forward(params, tokens, cfg, collect_cache=False):
+    x = L.embed_tokens(params["embed"], tokens)
+    b, s, d = x.shape
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(xc, p_g):
+        xc, st1 = _rg_block(p_g["rg1"], xc, cfg)
+        xc, st2 = _rg_block(p_g["rg2"], xc, cfg)
+        xc, kv = _attn_block(p_g["attn"], xc, cfg, pos)
+        ys = (st1, st2, kv) if collect_cache else None
+        return xc, ys
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "block" else body
+    x, ys = jax.lax.scan(body_fn, x, params["groups"])
+    tail_states = []
+    for p_rg in params["tail"]:
+        x, st = _rg_block(p_rg, x, cfg)
+        tail_states.append(st)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = None
+    if collect_cache:
+        st1, st2, kv = ys
+        w = cfg.rglru_width
+        if tail_states:
+            tail_conv = jnp.stack([t[0] for t in tail_states])
+            tail_h = jnp.stack([t[1] for t in tail_states])
+        else:
+            tail_conv = jnp.zeros((0, b, CONV_W - 1, w), x.dtype)
+            tail_h = jnp.zeros((0, b, w), jnp.float32)
+        cache = {
+            "conv1": st1[0], "h1": st1[1],  # [G, B, 3, W], [G, B, W]
+            "conv2": st2[0], "h2": st2[1],
+            "k": kv[0], "v": kv[1],  # [G, B, S, Hkv, dh]
+            "tail_conv": tail_conv,
+            "tail_h": tail_h,
+        }
+    return x, cache
+
+
+def train_loss(params, batch, cfg, **_):
+    hidden, _ = _forward(params, batch["tokens"], cfg)
+    nll = L.chunked_xent(hidden, params["embed"], batch["labels"], cfg.logits_chunk)
+    return nll, {"nll": nll}
+
+
+def prefill(params, batch, cfg, **_):
+    hidden, cache = _forward(params, batch["tokens"], cfg, collect_cache=True)
+    logits = jnp.einsum(
+        "btd,vd->btv", hidden[:, -1:].astype(jnp.float32),
+        params["embed"].astype(jnp.float32),
+    )
+    cache["pos"] = jnp.int32(batch["tokens"].shape[1])
+    return cache, logits
+
+
+def _rg_decode(p, x, cfg, conv_state, h_prev):
+    """Single-token recurrent step. ``x [B,1,D]``."""
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(L.linear(p["gate_in"], h))
+    u = L.linear(p["proj_in"], h)
+    u, conv_state = _causal_conv(u, p["conv"], conv_state)
+    r = jax.nn.sigmoid(L.linear(p["wa"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(L.linear(p["wx"], u).astype(jnp.float32))
+    log_a = RGLRU_C * r * jax.nn.log_sigmoid(p["lam"])[None, None, :]
+    a = jnp.exp(log_a)[:, 0]
+    gated = (jnp.sqrt(jnp.maximum(1 - a * a, 1e-9)))
+    h_new = a * h_prev.astype(jnp.float32) + gated * (
+        i[:, 0] * u[:, 0].astype(jnp.float32)
+    )
+    y = h_new[:, None, :].astype(x.dtype)
+    x = x + L.linear(p["proj_out"], y * gate)
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp(p["mlp"], h2)
+    return x, (conv_state, h_new)
+
+
+def decode_step(params, cache, token, pos, cfg, **_):
+    x = L.embed_tokens(params["embed"], token)
+
+    def body(xc, xs):
+        p_g, c1, h1, c2, h2, k_l, v_l = xs
+        xc, (c1, h1) = _rg_decode(p_g["rg1"], xc, cfg, c1, h1)
+        xc, (c2, h2) = _rg_decode(p_g["rg2"], xc, cfg, c2, h2)
+        h = L.rms_norm(xc, p_g["attn"]["ln1"], cfg.norm_eps)
+        a, (k_l, v_l) = L.decode_attention(
+            p_g["attn"]["attn"], h, cfg, k_cache=k_l, v_cache=v_l, pos=pos,
+            window=cfg.local_window,
+        )
+        xc = xc + a
+        h = L.rms_norm(xc, p_g["attn"]["ln2"], cfg.norm_eps)
+        xc = xc + L.mlp(p_g["attn"]["mlp"], h)
+        return xc, (c1, h1, c2, h2, k_l, v_l)
+
+    x, ys = jax.lax.scan(
+        body, x,
+        (params["groups"], cache["conv1"], cache["h1"], cache["conv2"],
+         cache["h2"], cache["k"], cache["v"]),
+    )
+    c1, h1, c2, h2, ks, vs = ys
+    tail_conv, tail_h = [], []
+    for i, p_rg in enumerate(params["tail"]):
+        x, (c, hh) = _rg_decode(
+            p_rg, x, cfg, cache["tail_conv"][i], cache["tail_h"][i]
+        )
+        tail_conv.append(c)
+        tail_h.append(hh)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.float32), params["embed"].astype(jnp.float32)
+    )
+    new_cache = {
+        "conv1": c1, "h1": h1, "conv2": c2, "h2": h2, "k": ks, "v": vs,
+        "tail_conv": jnp.stack(tail_conv) if tail_conv else cache["tail_conv"],
+        "tail_h": jnp.stack(tail_h) if tail_h else cache["tail_h"],
+        "pos": pos + 1,
+    }
+    return new_cache, logits

@@ -1,0 +1,116 @@
+"""Uniform model API over all assigned architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelBundle` whose members close over
+the config:
+
+* ``init(rng) -> params``
+* ``train_loss(params, batch) -> (loss, metrics)``
+* ``prefill(params, batch) -> (cache, logits)``
+* ``decode_step(params, cache, token, pos) -> (cache, logits)``
+* ``input_specs(shape) -> (step_name, kwargs of ShapeDtypeStruct)`` — the
+  dry-run stand-ins (no allocation), incl. cache specs via ``eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import recurrent, transformer, whisper, xlstm
+
+__all__ = ["ModelBundle", "get_model"]
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+
+    def param_shapes(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------- specs
+    def batch_specs(self, shape: ShapeConfig, kind: str) -> Dict[str, Any]:
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        act_dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        tok = lambda bb, ss: jax.ShapeDtypeStruct((bb, ss), jnp.int32)
+        batch: Dict[str, Any] = {}
+        if cfg.family == "vlm":
+            p = cfg.num_patch_tokens
+            s_text = max(s - p, 1)
+            batch["tokens"] = tok(b, s_text)
+            batch["patch_embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), act_dt)
+            if kind == "train":
+                batch["labels"] = tok(b, s_text)
+        elif cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), act_dt
+            )
+            batch["tokens"] = tok(b, s)
+            if kind == "train":
+                batch["labels"] = tok(b, s)
+        else:
+            batch["tokens"] = tok(b, s)
+            if kind == "train":
+                batch["labels"] = tok(b, s)
+        return batch
+
+    def input_specs(self, shape: ShapeConfig) -> Tuple[str, Dict[str, Any]]:
+        """(step_name, kwargs-of-specs) for the dry-run."""
+        if shape.kind == "train":
+            return "train", {"batch": self.batch_specs(shape, "train")}
+        if shape.kind == "prefill":
+            return "prefill", {"batch": self.batch_specs(shape, "prefill")}
+        # decode: cache spec from eval_shape of prefill at seq_len
+        params = self.param_shapes()
+        batch = self.batch_specs(shape, "prefill")
+        cache, _ = jax.eval_shape(self.prefill, params, batch)
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        return "decode", {"cache": cache, "token": token, "pos": pos}
+
+
+def get_model(cfg: ModelConfig) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(transformer.init_lm, cfg=cfg),
+            train_loss=partial(transformer.train_loss, cfg=cfg),
+            prefill=partial(transformer.prefill, cfg=cfg),
+            decode_step=partial(transformer.decode_step, cfg=cfg),
+        )
+    if fam == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(whisper.init_whisper, cfg=cfg),
+            train_loss=partial(whisper.train_loss, cfg=cfg),
+            prefill=partial(whisper.prefill, cfg=cfg),
+            decode_step=partial(whisper.decode_step, cfg=cfg),
+        )
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(recurrent.init_recurrent, cfg=cfg),
+            train_loss=partial(recurrent.train_loss, cfg=cfg),
+            prefill=partial(recurrent.prefill, cfg=cfg),
+            decode_step=partial(recurrent.decode_step, cfg=cfg),
+        )
+    if fam == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=partial(xlstm.init_xlstm, cfg=cfg),
+            train_loss=partial(xlstm.train_loss, cfg=cfg),
+            prefill=partial(xlstm.prefill, cfg=cfg),
+            decode_step=partial(xlstm.decode_step, cfg=cfg),
+        )
+    raise ValueError(f"unknown family {fam}")

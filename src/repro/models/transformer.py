@@ -1,0 +1,311 @@
+"""Decoder-only LM covering dense, MoE and VLM-backbone families.
+
+One stacked-parameter ``lax.scan`` over layers (compile time independent of
+depth — essential for 62-layer × 512-device dry-runs). Mixed local/global
+attention (gemma3 5:1) rides the same scan via a traced per-layer window
+(global layers get window = S+1). The MoE path plugs the capacity
+dispatch from :mod:`repro.models.moe`; the PMQ/OTP compressed path swaps
+``expert_ffn_fn`` / ``gate_mask_fn`` (see :mod:`repro.core.compressed_moe`).
+
+Modes: ``train_loss`` (chunked xent), ``prefill`` (build KV cache, last
+logits), ``decode_step`` (one token, donated cache).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import shard
+from . import layers as L
+from .moe import init_moe, moe_layer
+
+__all__ = [
+    "init_lm",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "forward_hidden",
+    "layer_windows",
+]
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def layer_windows_static(cfg, s: int):
+    """Per-layer effective window as a host numpy array (python loops)."""
+    import numpy as np
+
+    idx = np.arange(cfg.num_layers)
+    if cfg.local_global_ratio > 0 and cfg.local_window > 0:
+        is_global = (idx % (cfg.local_global_ratio + 1)) == cfg.local_global_ratio
+        return np.where(is_global, s + 1, cfg.local_window).astype(np.int32)
+    if cfg.local_window > 0:
+        return np.full((cfg.num_layers,), cfg.local_window, np.int32)
+    return np.full((cfg.num_layers,), s + 1, np.int32)
+
+
+def layer_windows(cfg, s: int) -> jnp.ndarray:
+    """Per-layer effective window (traced into the scan)."""
+    return jnp.asarray(layer_windows_static(cfg, s))
+
+
+# ------------------------------------------------------------------- init
+def init_lm(rng, cfg) -> Dict[str, Any]:
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_out = jax.random.split(rng, 3)
+
+    def init_block(k):
+        ka, km = jax.random.split(k)
+        p = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "attn": L.init_attention(ka, cfg, dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+        }
+        if cfg.is_moe:
+            p["moe"] = init_moe(km, cfg, dt)
+        else:
+            p["mlp"] = L.init_mlp(km, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    blocks = jax.vmap(init_block)(jax.random.split(k_blocks, cfg.num_layers))
+    params = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), dt) * 0.02,
+        "blocks": blocks,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(k_out, (cfg.vocab_size, cfg.d_model), dt) * 0.02
+        )
+    return params
+
+
+def _out_embedding(params):
+    return params.get("unembed", params["embed"])
+
+
+# ------------------------------------------------------------ block body
+def _block(p, x, cfg, *, positions, window, moe_hooks=None):
+    """One transformer block (full-sequence). Returns (x, aux, kv).
+
+    Sequence-parallel discipline (Megatron-SP): the residual stream is
+    seq-sharded ("act_btd"); attention/FFN regions run on the gathered
+    layout ("act_full") — one AG entering, one RS leaving per region.
+    """
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    h = shard(h, "act_full")
+    attn_out, kv = L.attention(
+        p["attn"], h, cfg, positions=positions, causal=True, window=window
+    )
+    attn_out = shard(attn_out, "act_btd")
+    x = x + attn_out
+    x = shard(x, "act_btd")
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    h = shard(h, "act_full")
+    aux = jnp.float32(0)
+    if cfg.is_moe:
+        if "moe_ce" in p:  # PMQ-compressed experts (+ optional OTP)
+            from ..core.compressed_moe import compressed_moe_layer
+
+            hooks = moe_hooks or {}
+            use_otp = hooks.get("use_otp", True)
+            y, info = compressed_moe_layer(
+                p["moe"], p["moe_ce"], h, cfg,
+                otp_params=p.get("otp") if use_otp else None,
+                otp_rng=hooks.get("otp_rng"),
+                otp_tau=hooks.get("otp_tau", 1.0),
+            )
+            # save the region output across remat: recomputing it would
+            # re-all-gather the packed expert weights in the backward pass
+            from jax.ad_checkpoint import checkpoint_name
+
+            y = checkpoint_name(y, "moe_out")
+            x = x + y
+            if info.get("mask_l1") is not None:
+                aux = info["mask_l1"]  # ℓ1 term channel (Eq. 14)
+        else:
+            hooks = moe_hooks or {}
+            out = moe_layer(
+                p["moe"], h, cfg,
+                gate_mask_fn=hooks.get("gate_mask_fn"),
+                expert_ffn_fn=hooks.get("expert_ffn_fn"),
+            )
+            x = x + out.y
+            aux = out.aux_loss
+    else:
+        x = x + shard(L.mlp(p["mlp"], h), "act_btd")
+    x = shard(x, "act_btd")
+    return x, aux, kv
+
+
+def _embed_inputs(params, cfg, tokens, patch_embeds=None):
+    x = L.embed_tokens(params["embed"], tokens)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward_hidden(
+    params,
+    tokens: jnp.ndarray,
+    cfg,
+    *,
+    patch_embeds: Optional[jnp.ndarray] = None,
+    collect_cache: bool = False,
+    moe_hooks=None,
+):
+    """Run all blocks; returns (hidden [B,S,D], aux_loss, cache|None)."""
+    x = _embed_inputs(params, cfg, tokens, patch_embeds)
+    b, s, d = x.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    windows = layer_windows(cfg, s)
+
+    def body(carry, xs):
+        xc, aux = carry
+        p_l, win = xs
+        xn, a, kv = _block(
+            p_l, xc, cfg, positions=positions, window=win, moe_hooks=moe_hooks
+        )
+        ys = kv if collect_cache else None
+        return (xn, aux + a), ys
+
+    body_fn = body
+    if cfg.remat == "block":
+        body_fn = jax.checkpoint(
+            body, prevent_cse=False,
+            policy=jax.checkpoint_policies.save_only_these_names("moe_out"),
+        )
+    (x, aux), kvs = jax.lax.scan(body_fn, (x, jnp.float32(0)), (params["blocks"], windows))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = None
+    if collect_cache:
+        cache = {"k": kvs[0], "v": kvs[1]}  # [L, B, S, Hkv, dh]
+    return x, aux, cache
+
+
+# ------------------------------------------------------------------ train
+def train_loss(params, batch, cfg, *, moe_hooks=None, aux_weight: float = 0.01):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    patch = batch.get("patch_embeds")
+    hidden, aux, _ = forward_hidden(
+        params, tokens, cfg, patch_embeds=patch, moe_hooks=moe_hooks
+    )
+    if patch is not None:  # loss only on text positions
+        hidden = hidden[:, patch.shape[1] :]
+    nll = L.chunked_xent(hidden, _out_embedding(params), labels, cfg.logits_chunk)
+    loss = nll + aux_weight * aux / max(cfg.num_layers, 1)
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------- serving
+def prefill(params, batch, cfg, *, moe_hooks=None):
+    """Build a KV cache of the prompt; return (cache, last-token logits)."""
+    tokens = batch["tokens"]
+    patch = batch.get("patch_embeds")
+    hidden, _, cache = forward_hidden(
+        params, tokens, cfg, patch_embeds=patch, collect_cache=True,
+        moe_hooks=moe_hooks,
+    )
+    last = hidden[:, -1:, :]
+    logits = jnp.einsum(
+        "btd,vd->btv", last.astype(jnp.float32),
+        _out_embedding(params).astype(jnp.float32),
+    )
+    cache["pos"] = jnp.int32(tokens.shape[1] + (patch.shape[1] if patch is not None else 0))
+    return cache, logits
+
+
+def _decode_block(p, x, cfg, *, k_cache, v_cache, pos, window, moe_hooks=None):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    attn_out, (k_cache, v_cache) = L.decode_attention(
+        p["attn"], h, cfg, k_cache=k_cache, v_cache=v_cache, pos=pos, window=window
+    )
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        if "moe_ce" in p:
+            from ..core.compressed_moe import compressed_moe_layer
+
+            y, _ = compressed_moe_layer(
+                p["moe"], p["moe_ce"], h, cfg, otp_params=p.get("otp")
+            )
+            x = x + y
+        else:
+            out = moe_layer(p["moe"], h, cfg)
+            x = x + out.y
+    else:
+        x = x + L.mlp(p["mlp"], h)
+    return x, (k_cache, v_cache)
+
+
+def decode_step(params, cache, token: jnp.ndarray, pos: jnp.ndarray, cfg,
+                *, moe_hooks=None):
+    """One decode step. ``token [B, 1]``, ``pos`` scalar int32 (next slot).
+
+    Cache layout ``{"k": [L,B,S,Hkv,dh], "v": ..., "pos"}``; returns
+    ``(new_cache, logits [B,1,V])``.
+
+    The cache rides the scan **carry** (not xs/ys): XLA aliases while-loop
+    carries in place, so a donated multi-GB cache is updated with a single
+    [B,1,Hkv,dh] write per layer instead of double-buffering the whole
+    tensor (−2× cache HBM at decode).
+    """
+    x = L.embed_tokens(params["embed"], token)
+    b = token.shape[0]
+    s = cache["k"].shape[2]
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    windows = layer_windows(cfg, s)
+    layer_ids = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+
+    def body(carry, xs):
+        xc, kf, vf = carry
+        p_l, win, l = xs
+        k_l = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)
+        xn, (k_l2, v_l2) = _decode_block(
+            p_l, xc, cfg, k_cache=k_l, v_cache=v_l, pos=pos, window=win,
+            moe_hooks=moe_hooks,
+        )
+        # persist only the new token's K/V into the carried buffers
+        k_new = jax.lax.dynamic_slice(k_l2, (0, pos, 0, 0), (b, 1, hkv, dh))
+        v_new = jax.lax.dynamic_slice(v_l2, (0, pos, 0, 0), (b, 1, hkv, dh))
+        kf = jax.lax.dynamic_update_slice(kf, k_new[None], (l, 0, pos, 0, 0))
+        vf = jax.lax.dynamic_update_slice(vf, v_new[None], (l, 0, pos, 0, 0))
+        return (xn, kf, vf), None
+
+    (x, kf, vf), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]), (params["blocks"], windows, layer_ids)
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.float32),
+        _out_embedding(params).astype(jnp.float32),
+    )
+    new_cache = {"k": kf, "v": vf, "pos": pos + 1}
+    return new_cache, logits
+
+
+# --------------------------------------------- python-loop (calibration)
+def forward_layers_python(params, tokens, cfg, *, capture: str = "moe"):
+    """Unscanned forward used by PMQ calibration / OTP training on small
+    models: returns per-layer captured tensors (router stats or MoE inputs).
+
+    Only usable when layer params are unstacked via :func:`unstack_blocks`.
+    """
+    raise NotImplementedError("use repro.core.calibrate helpers")
+
+
+def unstack_blocks(params, cfg):
+    """Split stacked block params into a list of per-layer pytrees."""
+    blocks = params["blocks"]
+    return [jax.tree.map(lambda a: a[i], blocks) for i in range(cfg.num_layers)]
+
+
+def restack_blocks(block_list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *block_list)

@@ -1,0 +1,276 @@
+"""xLSTM (sLSTM + mLSTM alternating blocks) — arXiv:2405.04517.
+
+``mLSTM``: matrix memory ``C ∈ [B,H,dv,dk]`` with exponential-gate
+stabilization, sequential ``lax.scan`` over time (state is O(1) in S —
+this is why xlstm-350m runs the long_500k decode cell). ``sLSTM``: scalar
+memory per channel with exp-gating + normalizer state, followed by a
+gated FFN (proj factor 4/3). Both blocks carry a width-4 causal conv.
+``d_ff = 0`` in the config: all capacity lives in the block projections.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .recurrent import _causal_conv
+
+__all__ = ["init_xlstm", "train_loss", "prefill", "decode_step"]
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------ mLSTM block
+def _init_mlstm(rng, cfg, dt):
+    d = cfg.d_model
+    ip = 2 * d  # inner (up-projected) width
+    h = cfg.num_heads
+    ks = jax.random.split(rng, 8)
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "proj_in": L.init_linear(ks[0], d, 2 * ip, dt),  # u ‖ z-gate
+        "conv": jax.random.normal(ks[1], (4, ip), dt) * 0.1,
+        "wq": L.init_linear(ks[2], ip, ip, dt),
+        "wk": L.init_linear(ks[3], ip, ip, dt),
+        "wv": L.init_linear(ks[4], ip, ip, dt),
+        "w_if": L.init_linear(ks[5], ip, 2 * h, dt),  # per-head ĩ, f̃
+        "out_norm": jnp.zeros((ip,), dt),
+        "proj_out": L.init_linear(ks[6], ip, d, dt),
+    }
+
+
+def _mlstm_scan(q, k, v, ig, fg, state=None):
+    """Stabilized mLSTM recurrence.
+
+    q/k/v ``[B,S,H,dh]``; ig/fg ``[B,S,H]``. Returns (h [B,S,H,dh], state).
+    state = (C [B,H,dh,dh], n [B,H,dh], m [B,H]).
+    """
+    b, s, h, dh = q.shape
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+    k32 = k32 / (dh**0.5)
+    if state is None:
+        c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, it, ft = inp  # [B,H,dh] / [B,H]
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", c, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        return (c, n, m_new), num / den[..., None]
+
+    xs = (
+        jnp.moveaxis(q32, 1, 0),
+        jnp.moveaxis(k32, 1, 0),
+        jnp.moveaxis(v32, 1, 0),
+        jnp.moveaxis(ig.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(fg.astype(jnp.float32), 1, 0),
+    )
+    if s <= 64:
+        (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+        return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (c, n, m)
+    # chunked BPTT: storing C [B,H,dh,dh] per timestep is O(S·dh²) — for
+    # train_4k that is ~67 GB/device. Checkpoint chunk boundaries only and
+    # recompute the inner steps in the backward pass (chunkwise mLSTM).
+    chunk = 64
+    pad = (-s) % chunk
+    if pad:
+        xs = jax.tree.map(
+            lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), xs
+        )
+    nchunks = (s + pad) // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(nchunks, chunk, *a.shape[1:]), xs
+    )
+
+    def chunk_body(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    (c, n, m), hs = jax.lax.scan(
+        jax.checkpoint(chunk_body, prevent_cse=False), (c0, n0, m0), xs_c
+    )
+    hs = hs.reshape(nchunks * chunk, *hs.shape[2:])[:s]
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (c, n, m)
+
+
+def _mlstm_block(p, x, cfg, state=None, conv_state=None):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    hnorm = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    uz = L.linear(p["proj_in"], hnorm)
+    ip = uz.shape[-1] // 2
+    u, z = uz[..., :ip], uz[..., ip:]
+    cu, conv_state = _causal_conv(u, p["conv"], conv_state)
+    cu = jax.nn.silu(cu)
+    dh = ip // h
+    q = L.linear(p["wq"], cu).reshape(b, s, h, dh)
+    k = L.linear(p["wk"], cu).reshape(b, s, h, dh)
+    v = L.linear(p["wv"], u).reshape(b, s, h, dh)
+    gif = L.linear(p["w_if"], cu).astype(jnp.float32)
+    ig, fg = gif[..., :h], jax.nn.log_sigmoid(gif[..., h:])
+    hseq, state = _mlstm_scan(q, k, v, ig, fg, state)
+    hseq = hseq.reshape(b, s, ip)
+    hseq = L.rms_norm(hseq, p["out_norm"], cfg.norm_eps) * jax.nn.silu(z)
+    return x + L.linear(p["proj_out"], hseq), (state, conv_state)
+
+
+# ------------------------------------------------------------ sLSTM block
+def _init_slstm(rng, cfg, dt):
+    d = cfg.d_model
+    f = int(round(d * 4 / 3 / 64)) * 64  # gated FFN width
+    ks = jax.random.split(rng, 6)
+    return {
+        "ln": jnp.zeros((d,), dt),
+        "conv": jax.random.normal(ks[0], (4, d), dt) * 0.1,
+        "w_z": L.init_linear(ks[1], d, d, dt),
+        "w_o": L.init_linear(ks[2], d, d, dt),
+        "w_if": L.init_linear(ks[3], d, 2 * d, dt),
+        "ln2": jnp.zeros((d,), dt),
+        "ffn": {
+            "proj_in": L.init_linear(ks[4], d, 2 * f, dt),
+            "proj_out": L.init_linear(ks[5], f, d, dt),
+        },
+    }
+
+
+def _slstm_seq(z, o, ig, fg, state=None):
+    """Scalar-memory recurrence: all [B, S, D] (f32 gates)."""
+    b, s, d = z.shape
+    if state is None:
+        c0 = jnp.zeros((b, d), jnp.float32)
+        n0 = jnp.zeros((b, d), jnp.float32)
+        m0 = jnp.full((b, d), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        zt, ot, it, ft = inp
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p * c + i_p * zt
+        n = f_p * n + i_p
+        h = ot * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (z, o, ig, fg))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1), (c, n, m)
+
+
+def _slstm_block(p, x, cfg, state=None, conv_state=None):
+    hnorm = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    cx, conv_state = _causal_conv(hnorm, p["conv"], conv_state)
+    cx = jax.nn.silu(cx)
+    z = jnp.tanh(L.linear(p["w_z"], hnorm))
+    o = jax.nn.sigmoid(L.linear(p["w_o"], hnorm))
+    gif = L.linear(p["w_if"], cx).astype(jnp.float32)
+    d = x.shape[-1]
+    ig, fg = gif[..., :d], jax.nn.log_sigmoid(gif[..., d:])
+    hseq, state = _slstm_seq(z, o, ig, fg, state)
+    x = x + hseq.astype(x.dtype)
+    # gated FFN (proj factor 4/3)
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    uv = L.linear(p["ffn"]["proj_in"], h2)
+    f = uv.shape[-1] // 2
+    x = x + L.linear(p["ffn"]["proj_out"], jax.nn.silu(uv[..., :f]) * uv[..., f:])
+    return x, (state, conv_state)
+
+
+# ------------------------------------------------------------------ model
+def init_xlstm(rng, cfg) -> Dict:
+    dt = _dt(cfg)
+    n_groups = cfg.num_layers // 2  # (mlstm, slstm) pairs
+    ks = jax.random.split(rng, 3)
+
+    def init_group(k):
+        k1, k2 = jax.random.split(k)
+        return {"m": _init_mlstm(k1, cfg, dt), "s": _init_slstm(k2, cfg, dt)}
+
+    groups = jax.vmap(init_group)(jax.random.split(ks[0], n_groups))
+    return {
+        "embed": jax.random.normal(ks[1], (cfg.vocab_size, cfg.d_model), dt) * 0.02,
+        "groups": groups,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+
+
+def _forward(params, tokens, cfg, collect_cache=False):
+    x = L.embed_tokens(params["embed"], tokens)
+
+    def body(xc, p_g):
+        xc, (mstate, mconv) = _mlstm_block(p_g["m"], xc, cfg)
+        xc, (sstate, sconv) = _slstm_block(p_g["s"], xc, cfg)
+        ys = (mstate, mconv, sstate, sconv) if collect_cache else None
+        return xc, ys
+
+    body_fn = jax.checkpoint(body, prevent_cse=False) if cfg.remat == "block" else body
+    x, ys = jax.lax.scan(body_fn, x, params["groups"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    cache = None
+    if collect_cache:
+        mstate, mconv, sstate, sconv = ys
+        cache = {"m": mstate, "mconv": mconv, "s": sstate, "sconv": sconv}
+    return x, cache
+
+
+def train_loss(params, batch, cfg, **_):
+    hidden, _ = _forward(params, batch["tokens"], cfg)
+    nll = L.chunked_xent(hidden, params["embed"], batch["labels"], cfg.logits_chunk)
+    return nll, {"nll": nll}
+
+
+def prefill(params, batch, cfg, **_):
+    hidden, cache = _forward(params, batch["tokens"], cfg, collect_cache=True)
+    logits = jnp.einsum(
+        "btd,vd->btv", hidden[:, -1:].astype(jnp.float32),
+        params["embed"].astype(jnp.float32),
+    )
+    cache["pos"] = jnp.int32(batch["tokens"].shape[1])
+    return cache, logits
+
+
+def decode_step(params, cache, token, pos, cfg, **_):
+    x = L.embed_tokens(params["embed"], token)
+
+    def body(xc, xs):
+        p_g, mc, mn, mm, mconv, sc, sn, sm, sconv = xs
+        xc, ((mc, mn, mm), mconv) = _mlstm_block(
+            p_g["m"], xc, cfg, state=(mc, mn, mm), conv_state=mconv
+        )
+        xc, ((sc, sn, sm), sconv) = _slstm_block(
+            p_g["s"], xc, cfg, state=(sc, sn, sm), conv_state=sconv
+        )
+        return xc, (mc, mn, mm, mconv, sc, sn, sm, sconv)
+
+    mc, mn, mm = cache["m"]
+    sc, sn, sm = cache["s"]
+    x, ys = jax.lax.scan(
+        body, x,
+        (params["groups"], mc, mn, mm, cache["mconv"], sc, sn, sm, cache["sconv"]),
+    )
+    mc, mn, mm, mconv, sc, sn, sm, sconv = ys
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.float32), params["embed"].astype(jnp.float32)
+    )
+    new_cache = {
+        "m": (mc, mn, mm), "mconv": mconv, "s": (sc, sn, sm), "sconv": sconv,
+        "pos": pos + 1,
+    }
+    return new_cache, logits

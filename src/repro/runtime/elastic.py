@@ -1,0 +1,48 @@
+"""Elastic scaling: rebuild the mesh at a smaller data extent and reshard.
+
+On node loss the pod can usually be re-provisioned as a smaller clean
+rectangle (e.g. data 16 → 12). The recipe:
+
+1. ``shrink_mesh`` builds the new mesh (model extent preserved — TP/EP
+   layouts never change, only DP width);
+2. the checkpoint restores with the *new* shardings
+   (``Checkpointer.restore(..., shardings=...)``);
+3. the global batch is preserved by raising gradient-accumulation
+   (``accum_for``), so optimization dynamics are unchanged.
+
+Single-host CPU tests exercise the same code with tiny fake meshes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["shrink_mesh", "accum_for", "reshard_tree"]
+
+
+def shrink_mesh(mesh: Mesh, new_data: int) -> Mesh:
+    """Same axis names, smaller ``data`` extent (divisor of device count)."""
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    assert "data" in sizes, names
+    assert new_data <= sizes["data"]
+    sizes["data"] = new_data
+    n_needed = int(np.prod(list(sizes.values())))
+    devs = mesh.devices.reshape(-1)[:n_needed]
+    return Mesh(devs.reshape([sizes[n] for n in names]), names)
+
+
+def accum_for(global_batch: int, per_step_batch: int) -> int:
+    """Gradient-accumulation factor preserving the global batch."""
+    assert global_batch % per_step_batch == 0
+    return global_batch // per_step_batch
+
+
+def reshard_tree(tree, shardings):
+    """device_put a pytree onto new shardings (elastic restore path)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )

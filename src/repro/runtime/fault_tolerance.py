@@ -1,0 +1,113 @@
+"""Fault-tolerance runtime: failure detection, auto-restore, stragglers.
+
+Single-process simulation of the multi-host control plane with the same
+interfaces a real deployment wires to ``jax.distributed``:
+
+* :class:`HeartbeatTable` — deadline-based failure detector (hosts post
+  heartbeats; ``failed()`` after ``timeout``).
+* :class:`StragglerMonitor` — per-step wall-time tracker; a host whose
+  rolling median exceeds ``threshold ×`` fleet median is flagged. On TPU
+  pods the mitigation is re-sharding that host's data shard away, which
+  reuses the elastic path (``repro.runtime.elastic``).
+* :class:`ResilientLoop` — wraps a step function with
+  checkpoint-restore-retry semantics: on failure, restore the latest
+  checkpoint and continue (optionally on a shrunken mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional
+
+__all__ = ["HeartbeatTable", "StragglerMonitor", "ResilientLoop", "FailurePolicy"]
+
+
+class HeartbeatTable:
+    def __init__(self, hosts: List[int], timeout: float = 60.0):
+        self.timeout = timeout
+        self._last: Dict[int, float] = {h: time.monotonic() for h in hosts}
+
+    def beat(self, host: int, now: Optional[float] = None) -> None:
+        self._last[host] = now if now is not None else time.monotonic()
+
+    def failed(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.monotonic()
+        return [h for h, t in self._last.items() if now - t > self.timeout]
+
+    def alive(self, now: Optional[float] = None) -> List[int]:
+        bad = set(self.failed(now))
+        return [h for h in self._last if h not in bad]
+
+
+class StragglerMonitor:
+    """Rolling median step times per host; flags slow hosts."""
+
+    def __init__(self, window: int = 16, threshold: float = 1.5):
+        self.window = window
+        self.threshold = threshold
+        self._times: Dict[int, deque] = defaultdict(lambda: deque(maxlen=window))
+
+    def record(self, host: int, step_time: float) -> None:
+        self._times[host].append(step_time)
+
+    def _median(self, xs) -> float:
+        s = sorted(xs)
+        return s[len(s) // 2]
+
+    def stragglers(self) -> List[int]:
+        meds = {
+            h: self._median(ts) for h, ts in self._times.items() if len(ts) >= 4
+        }
+        if len(meds) < 2:
+            return []
+        fleet = self._median(list(meds.values()))
+        return [h for h, m in meds.items() if m > self.threshold * fleet]
+
+
+@dataclasses.dataclass
+class FailurePolicy:
+    max_restarts: int = 3
+    restore_fn: Optional[Callable[[], None]] = None  # restore latest ckpt
+    shrink_fn: Optional[Callable[[], None]] = None  # elastic re-mesh
+    shrink_after: int = 2  # restarts before giving up capacity
+
+
+class ResilientLoop:
+    """Run a training loop with restart-on-failure semantics.
+
+    ``step_fn(step) -> metrics`` may raise; the loop restores from the
+    checkpointer and retries, shrinking the mesh after repeated failures.
+    All side effects are injected, so the policy is unit-testable without
+    real hardware faults.
+    """
+
+    def __init__(self, policy: FailurePolicy):
+        self.policy = policy
+        self.restarts = 0
+        self.events: List[Dict] = []
+
+    def run(self, step_fn: Callable[[int], dict], start: int, steps: int):
+        step = start
+        metrics = None
+        while step < start + steps:
+            try:
+                metrics = step_fn(step)
+                step += 1
+            except Exception as e:  # noqa: BLE001 - any step fault
+                self.restarts += 1
+                self.events.append({"step": step, "error": repr(e)})
+                if self.restarts > self.policy.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded max_restarts={self.policy.max_restarts}"
+                    ) from e
+                if (
+                    self.restarts >= self.policy.shrink_after
+                    and self.policy.shrink_fn is not None
+                ):
+                    self.policy.shrink_fn()
+                    self.events.append({"step": step, "action": "shrink"})
+                if self.policy.restore_fn is not None:
+                    self.policy.restore_fn()
+                    self.events.append({"step": step, "action": "restore"})
+        return metrics

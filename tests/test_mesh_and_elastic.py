@@ -1,0 +1,88 @@
+"""Mesh construction, elastic re-mesh, sharding rules (forced devices in
+a subprocess so the main test process keeps 1 device)."""
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.parallel.sharding import param_spec_for_path
+from repro.runtime.elastic import accum_for
+
+_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import make_test_mesh
+from repro.runtime.elastic import shrink_mesh, reshard_tree
+from repro.parallel.sharding import make_param_shardings
+from repro.checkpoint.checkpointer import Checkpointer
+import tempfile
+
+mesh = make_test_mesh(data=4, model=4)
+assert mesh.devices.shape == (4, 4)
+params = {
+    "embed": jnp.arange(32.0).reshape(8, 4),
+    "blocks": {"attn": {"wq": {"w": jnp.ones((2, 4, 8))}}},
+}
+sh = make_param_shardings(mesh, params)
+# embed vocab-sharded on model; wq col-parallel
+assert sh["embed"].spec == P("model", None), sh["embed"].spec
+assert sh["blocks"]["attn"]["wq"]["w"].spec == P(None, None, "model")
+placed = reshard_tree(params, sh)
+
+# checkpoint on the 4x4 mesh, restore onto a shrunken 2x4 mesh
+with tempfile.TemporaryDirectory() as d:
+    ck = Checkpointer(d, async_write=False)
+    ck.save(0, placed)
+    small = shrink_mesh(mesh, 2)
+    assert small.devices.shape == (2, 4)
+    sh2 = make_param_shardings(small, params)
+    restored = ck.restore(0, params, shardings=sh2)
+    np.testing.assert_array_equal(
+        np.asarray(restored["embed"]), np.asarray(params["embed"])
+    )
+    assert restored["embed"].sharding.mesh.shape["data"] == 2
+print("OK")
+"""
+
+
+def test_mesh_shard_ckpt_elastic_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", _SNIPPET],
+        capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_accum_for_preserves_global_batch():
+    assert accum_for(256, 64) == 4
+    try:
+        accum_for(256, 60)
+        raise AssertionError("expected failure")
+    except AssertionError as e:
+        if "expected failure" in str(e):
+            raise
+    except Exception:
+        pass
+
+
+def test_param_rules_cover_families():
+    cases = [
+        ("blocks/attn/wq/w", 3, True, (None, None, "model")),
+        ("blocks/attn/wq/w/0", 3, True, (None, None, "model")),  # packed
+        ("blocks/attn/wo/w", 3, True, (None, "model", None)),
+        ("blocks/mlp/w_gate/w", 3, True, (None, None, "model")),
+        ("blocks/moe/experts/w_gate", 4, True, (None, "model", None, None)),
+        ("embed", 2, False, ("model", None)),
+        ("blocks/ln1", 2, True, (None, None)),
+        ("groups/m/wq/w", 3, True, (None, None, "model")),
+        ("groups/rg1/proj_out/w", 3, True, (None, "model", None)),
+    ]
+    for path, nd, stacked, want in cases:
+        spec = param_spec_for_path(path, nd, stacked)
+        assert tuple(spec) == want, (path, tuple(spec), want)

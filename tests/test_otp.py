@@ -1,0 +1,103 @@
+"""OTP tests: candidate masks (Eq. 10), Gumbel sampling (Eq. 13),
+temperature limit, λ monotonicity (Fig. 13), learnability (Tab. 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import otp
+
+
+def test_candidate_masks_eq10():
+    c = np.asarray(otp.candidate_masks(6))
+    expect = np.array(
+        [
+            [1, 1, 1, 1, 1, 1],
+            [1, 1, 1, 1, 1, 0],
+            [1, 1, 1, 1, 0, 0],
+            [1, 1, 1, 0, 0, 0],
+            [1, 1, 0, 0, 0, 0],
+            [1, 0, 0, 0, 0, 0],
+        ],
+        np.float32,
+    )
+    np.testing.assert_array_equal(c, expect)
+
+
+def test_gumbel_tau_limit_approaches_onehot():
+    rng = jax.random.PRNGKey(0)
+    logits = jnp.array([[2.0, 0.5, -1.0, 0.0]])
+    y_hi, _ = otp.sample_mask_gumbel(rng, logits, 4, tau=5.0)
+    y_lo, _ = otp.sample_mask_gumbel(rng, logits, 4, tau=0.01)
+    # straight-through forward is always hard one-hot
+    for y in (y_hi, y_lo):
+        assert np.allclose(np.sort(np.asarray(y))[..., -1], 1.0, atol=1e-5)
+    # soft component sharpness: low tau → soft ~ hard (grad path converges)
+    u = jax.random.uniform(rng, logits.shape, minval=1e-6, maxval=1 - 1e-6)
+    g = -jnp.log(-jnp.log(u))
+    soft_hi = jax.nn.softmax((logits + g) / 5.0)
+    soft_lo = jax.nn.softmax((logits + g) / 0.01)
+    assert float(soft_lo.max()) > float(soft_hi.max())
+    assert float(soft_lo.max()) > 0.999
+
+
+def test_mask_sampling_distribution_follows_logits():
+    rng = jax.random.PRNGKey(1)
+    logits = jnp.tile(jnp.array([[3.0, 0.0, 0.0, -3.0]]), (4096, 1))
+    _, mask = otp.sample_mask_gumbel(rng, logits, 4, tau=1.0)
+    # candidate 0 (keep all) dominates → mean mask high
+    assert float(mask.mean()) > 0.7
+
+
+def test_otp_mask_unsorts_back_to_slot_order():
+    # gates deliberately unsorted: slot 1 is strongest
+    p = otp.init_otp_router(jax.random.PRNGKey(0), 8, 3)
+    x2 = jnp.zeros((1, 8))
+    gates = jnp.array([[0.2, 0.5, 0.3]])
+    idx = jnp.array([[4, 2, 7]])
+    # force argmax choice = keep only strongest (candidate k-1)
+    p = jax.tree.map(jnp.zeros_like, p)
+    p["fc2"] = p["fc2"].at[:, -1].set(100.0)  # bias towards last candidate
+    # fc2 input: concat(silu(fc1 x)=0, gates) → logits = gates @ fc2[3:,:]
+    mask = otp.otp_mask(p, x2, idx, gates)
+    np.testing.assert_array_equal(np.asarray(mask), [[0.0, 1.0, 0.0]])
+
+
+def test_otp_losses_lambda_monotone():
+    rng = np.random.default_rng(0)
+    s = jnp.asarray(rng.normal(size=(4, 8, 16)), jnp.float32)
+    t = jnp.asarray(rng.normal(size=(4, 8, 16)), jnp.float32)
+    m = jnp.asarray(rng.uniform(size=(100,)), jnp.float32)
+    l1, _ = otp.otp_losses(s, t, m, lam=1.0)
+    l2, _ = otp.otp_losses(s, t, m, lam=2.0)
+    assert float(l2) > float(l1)
+    l_same, aux = otp.otp_losses(s, s, m, lam=0.0)
+    assert float(l_same) < 1e-5  # KL(s, s) == 0
+
+
+def test_learnable_router_prefers_pruning_under_sparsity_pressure():
+    """Gradient descent on Eq. 14 with dominant λ should raise mask ratio."""
+    rng = jax.random.PRNGKey(3)
+    k = 4
+    p = otp.init_otp_router(rng, 16, k)
+    x2 = jax.random.normal(rng, (64, 16))
+    gates = jax.nn.softmax(jax.random.normal(rng, (64, k)))
+    idx = jnp.tile(jnp.arange(k)[None], (64, 1))
+
+    def loss_fn(params, key):
+        order = jnp.argsort(-gates, axis=-1)
+        gs = jnp.take_along_axis(gates, order, axis=-1)
+        logits = otp.dm_logits(params, x2, gs)
+        _, mask = otp.sample_mask_gumbel(key, logits, k, tau=1.0)
+        return jnp.abs(mask).mean()  # pure sparsity objective
+
+    lr = 0.5
+    r0 = None
+    for i in range(60):
+        key = jax.random.fold_in(rng, i)
+        val, g = jax.value_and_grad(loss_fn)(p, key)
+        if r0 is None:
+            r0 = float(val)
+        p = jax.tree.map(lambda a, b: a - lr * b, p, g)
+    r1 = float(loss_fn(p, jax.random.fold_in(rng, 999)))
+    assert r1 < r0 - 0.1, f"mask mean did not drop: {r0} -> {r1}"

@@ -1,0 +1,127 @@
+"""Tests for PMQ bit allocation (Eq. 7): DP vs MILP vs brute force."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pmq import (
+    allocate_block_dp,
+    allocate_block_milp,
+    allocate_model,
+    pmq_costs,
+)
+from repro.core.significance import RouterStats, importance
+
+BITS = (1, 2, 3)
+
+
+def brute_force(costs, budget, require_floors=True):
+    e = costs.shape[0]
+    best, best_cost = None, np.inf
+    for combo in itertools.product(range(3), repeat=e):
+        bits = [BITS[j] for j in combo]
+        if sum(bits) != budget:
+            continue
+        if require_floors and e >= 2 and (2 not in bits or 3 not in bits):
+            continue
+        c = sum(costs[i, j] for i, j in enumerate(combo))
+        if c < best_cost:
+            best, best_cost = np.array(bits), c
+    return best, best_cost
+
+
+def _cost_of(costs, bits):
+    return sum(costs[i, BITS.index(int(b))] for i, b in enumerate(bits))
+
+
+@given(
+    e=st.integers(2, 7),
+    seed=st.integers(0, 10_000),
+    avg_times_4=st.integers(6, 11),  # avg bits in [1.5, 2.75]
+)
+@settings(max_examples=30, deadline=None)
+def test_dp_matches_bruteforce(e, seed, avg_times_4):
+    rng = np.random.default_rng(seed)
+    costs = rng.uniform(0.01, 1.0, size=(e, 3))
+    costs = np.sort(costs, axis=1)[:, ::-1].copy()  # lower bits cost more
+    budget = max(min(int(round(e * avg_times_4 / 4.0)), 3 * e - 1), e + 3)
+    bf_bits, bf_cost = brute_force(costs, budget)
+    if bf_bits is None:
+        with pytest.raises(ValueError):
+            allocate_block_dp(costs, budget)
+        return
+    dp_bits = allocate_block_dp(costs, budget)
+    assert int(dp_bits.sum()) == budget
+    assert 2 in dp_bits and 3 in dp_bits
+    np.testing.assert_allclose(_cost_of(costs, dp_bits), bf_cost, rtol=1e-9)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_dp_matches_milp_large(seed):
+    rng = np.random.default_rng(seed)
+    e = 64
+    costs = np.sort(rng.uniform(0.001, 1.0, size=(e, 3)), axis=1)[:, ::-1].copy()
+    budget = int(round(e * 2.05))
+    dp_bits = allocate_block_dp(costs, budget)
+    milp_bits = allocate_block_milp(costs, budget)
+    assert int(dp_bits.sum()) == int(milp_bits.sum()) == budget
+    np.testing.assert_allclose(
+        _cost_of(costs, dp_bits), _cost_of(costs, milp_bits), rtol=1e-7
+    )
+
+
+def test_dp_384_experts_fast():
+    rng = np.random.default_rng(3)
+    e = 384  # kimi-k2 scale
+    costs = np.sort(rng.uniform(0.001, 1.0, size=(e, 3)), axis=1)[:, ::-1].copy()
+    bits = allocate_block_dp(costs, int(e * 2.5))
+    assert int(bits.sum()) == int(e * 2.5)
+
+
+def test_important_experts_get_more_bits():
+    e = 8
+    eps = np.ones((e, 3)) * [[4.0, 2.0, 1.0]]  # uniform error profile
+    phi = np.linspace(0.05, 0.9, e)
+    w = np.linspace(0.05, 0.9, e)
+    costs = pmq_costs(phi, w, eps)
+    bits = allocate_block_dp(costs, budget=16)  # avg 2.0
+    # most important expert should get >= bits of least important
+    assert bits[-1] >= bits[0]
+    assert bits[-1] == 3
+
+
+def test_allocate_model_hits_global_average():
+    rng = np.random.default_rng(4)
+    L, E = 5, 8
+    phi = rng.uniform(0.01, 1, (L, E))
+    w = rng.uniform(0.01, 1, (L, E))
+    eps = np.sort(rng.uniform(0.1, 2, (L, E, 3)), axis=2)[:, :, ::-1].copy()
+    for target in (1.75, 2.0, 2.25):
+        plan = allocate_model(phi, w, eps, target_avg_bits=target)
+        np.testing.assert_allclose(plan.avg_bits, target, atol=1.0 / (L * E) + 1e-9)
+        for b in plan.bits:
+            assert 2 in b and 3 in b
+
+
+def test_allocate_model_layer_adaptive_total_preserved():
+    rng = np.random.default_rng(5)
+    L, E = 4, 16
+    phi = rng.uniform(0.01, 1, (L, E))
+    w = rng.uniform(0.01, 1, (L, E))
+    eps = np.sort(rng.uniform(0.1, 2, (L, E, 3)), axis=2)[:, :, ::-1].copy()
+    eps[0] *= 10.0  # layer 0 is very sensitive
+    plan_u = allocate_model(phi, w, eps, 2.0, layer_adaptive=False)
+    plan_a = allocate_model(phi, w, eps, 2.0, layer_adaptive=True)
+    assert abs(plan_a.avg_bits - 2.0) < 1e-9
+    # sensitive layer got at least as many bits as uniform gave it
+    assert plan_a.layer_budgets[0] >= plan_u.layer_budgets[0]
+
+
+def test_router_stats_accumulate():
+    stats = RouterStats(num_experts=4)
+    stats.update(np.array([[0, 1], [1, 2]]), np.array([[0.9, 0.1], [0.6, 0.4]]))
+    np.testing.assert_allclose(stats.phi, [0.5, 1.0, 0.5, 0.0])
+    np.testing.assert_allclose(stats.w, [0.45, 0.35, 0.2, 0.0])
+    imp = importance(stats.phi, stats.w, 1.0, 0.5)
+    assert imp[1] > imp[0] > imp[3]

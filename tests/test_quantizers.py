@@ -1,0 +1,158 @@
+"""Unit + property tests for packing / quantizers / GPTQ (paper §3.1/3.3)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing, quantizers
+from repro.core.gptq import gptq_quantize, hessian_from_inputs
+
+
+# ---------------------------------------------------------------- packing
+@pytest.mark.parametrize("bits", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("shape,axis", [((32, 5), 0), ((4, 64), 1), ((2, 16, 3), 1)])
+def test_pack_roundtrip(bits, shape, axis):
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 2**bits, size=shape).astype(np.uint8)
+    packed = packing.pack_bits(jnp.asarray(q), bits, axis=axis)
+    out = packing.unpack_bits(packed, bits, axis=axis)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+@given(
+    bits=st.sampled_from([1, 2, 3, 4]),
+    k=st.integers(1, 9),
+    n=st.integers(1, 7),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_roundtrip_property(bits, k, n, seed):
+    rng = np.random.default_rng(seed)
+    per = {1: 8, 2: 4, 3: 8, 4: 2}[bits]
+    q = rng.integers(0, 2**bits, size=(k * per, n)).astype(np.uint8)
+    packed = packing.pack_bits(jnp.asarray(q), bits, axis=0)
+    out = packing.unpack_bits(packed, bits, axis=0)
+    np.testing.assert_array_equal(np.asarray(out), q)
+
+
+def test_packed_nbytes_exact():
+    # 3-bit must cost exactly 3 bits/val: 2-bit plane + 1-bit plane
+    assert packing.packed_nbytes((8, 4), 3, axis=0) == 4 * (2 + 1)
+    assert packing.packed_nbytes((8, 4), 1, axis=0) == 4 * 1
+    assert packing.packed_nbytes((8, 4), 2, axis=0) == 4 * 2
+    assert packing.packed_nbytes((8, 4), 4, axis=0) == 4 * 4
+
+
+# ------------------------------------------------------------- quantizers
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_affine_roundtrip_error_bounded(bits):
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    codes, scale, zero = quantizers.quantize_affine(w, bits, group=128)
+    wq = quantizers.dequantize_affine(codes, scale, zero, group=128)
+    # max error within one quantization step
+    step = np.repeat(np.asarray(scale), 128, axis=0)[:256]
+    assert np.all(np.abs(np.asarray(w - wq)) <= step * 0.5 + 1e-6)
+
+
+def test_binary_quantize_matches_eq4():
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(size=(64, 16)), jnp.float32)
+    b01, scale = quantizers.quantize_binary(w)
+    assert set(np.unique(np.asarray(b01))) <= {0, 1}
+    np.testing.assert_allclose(
+        np.asarray(scale), np.mean(np.abs(np.asarray(w)), axis=0, keepdims=True),
+        rtol=1e-6,
+    )
+    wq = quantizers.dequantize_binary(b01, scale)
+    np.testing.assert_allclose(
+        np.asarray(jnp.sign(w) * scale + (w == 0) * scale), np.asarray(wq), rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("bits", [1, 2, 3, 4])
+def test_quantize_to_packed_dequant_consistent(bits):
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(256, 24)), jnp.float32)
+    pt = quantizers.quantize_to_packed(w, bits, group=128, refine=False)
+    wq = pt.dequantize()
+    assert wq.shape == w.shape
+    if bits == 1:
+        ref = quantizers.dequantize_binary(*quantizers.quantize_binary(w))
+        np.testing.assert_allclose(np.asarray(wq), np.asarray(ref), rtol=1e-5)
+    else:
+        codes, scale, zero = quantizers.quantize_affine(w, bits, 128, refine=False)
+        ref = quantizers.dequantize_affine(codes, scale, zero, 128)
+        np.testing.assert_allclose(np.asarray(wq), np.asarray(ref), rtol=1e-5)
+    # storage really is `bits` per weight (plus params)
+    assert pt.nbytes < w.size * bits / 8 + pt.scale.nbytes + pt.zero.nbytes + 16
+
+
+def test_hqq_refine_improves_rtn():
+    rng = np.random.default_rng(4)
+    # heavy-tailed weights: where zero-point refinement helps
+    w = jnp.asarray(rng.standard_t(df=3, size=(256, 64)), jnp.float32)
+    base_err, ref_err = [], []
+    for refine in (False, True):
+        codes, scale, zero = quantizers.quantize_affine(w, 2, 64, refine=refine)
+        wq = quantizers.dequantize_affine(codes, scale, zero, 64)
+        err = float(jnp.mean((w - wq) ** 2))
+        (ref_err if refine else base_err).append(err)
+    assert ref_err[0] <= base_err[0] * 1.02  # never meaningfully worse
+
+
+# ------------------------------------------------------------------ gptq
+def _rand_problem(k=128, n=32, nsamp=256, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(k, n)).astype(np.float64)
+    x = rng.normal(size=(nsamp, k)).astype(np.float64)
+    # correlated inputs make compensation matter
+    mix = rng.normal(size=(k, k)) * 0.3 + np.eye(k)
+    x = x @ mix
+    return w, x
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_gptq_beats_rtn(bits):
+    w, x = _rand_problem(seed=5)
+    h = hessian_from_inputs(x)
+    res = gptq_quantize(w, h, bits=bits, group=64)
+    # reconstruct
+    k, n = w.shape
+    qg = res.codes.astype(np.float64).reshape(-1, 64, n)
+    wq = ((qg - res.zero[:, None, :]) * res.scale[:, None, :]).reshape(k, n)
+    gptq_err = np.linalg.norm(x @ w - x @ wq) ** 2
+    # RTN baseline
+    codes, scale, zero = quantizers.quantize_affine(
+        jnp.asarray(w, jnp.float32), bits, 64, refine=False
+    )
+    wr = np.asarray(quantizers.dequantize_affine(codes, scale, zero, 64), np.float64)
+    rtn_err = np.linalg.norm(x @ w - x @ wr) ** 2
+    assert gptq_err < rtn_err, f"GPTQ {gptq_err:.3f} !< RTN {rtn_err:.3f}"
+
+
+def test_gptq_binary_beats_plain_sign():
+    w, x = _rand_problem(k=96, n=24, seed=6)
+    h = hessian_from_inputs(x)
+    res = gptq_quantize(w, h, bits=1, group=32)
+    k, n = w.shape
+    qg = res.codes.astype(np.float64).reshape(-1, 32, n)
+    wq = ((qg - res.zero[:, None, :]) * res.scale[:, None, :]).reshape(k, n)
+    gptq_err = np.linalg.norm(x @ w - x @ wq) ** 2
+    alpha = np.mean(np.abs(w), axis=0, keepdims=True)
+    ws = np.where(w >= 0, alpha, -alpha)
+    sign_err = np.linalg.norm(x @ w - x @ ws) ** 2
+    assert gptq_err < sign_err
+
+
+def test_gptq_identity_hessian_equals_rtn():
+    # with H = I there is nothing to compensate into later rows *from the
+    # final row*, but earlier rows still match plain RTN exactly
+    w, _ = _rand_problem(k=64, n=8, seed=7)
+    h = np.eye(64)
+    res = gptq_quantize(w, h, bits=4, group=64, percdamp=0.0)
+    codes, scale, zero = quantizers.quantize_affine(
+        jnp.asarray(w, jnp.float32), 4, 64, refine=False
+    )
+    np.testing.assert_allclose(res.codes, np.asarray(codes))
