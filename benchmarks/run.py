@@ -30,6 +30,7 @@ def main() -> None:
         otp_ablation,
         pareto,
         roofline,
+        serving_latency,
     )
 
     benches = {
@@ -39,6 +40,7 @@ def main() -> None:
         "otp_ablation": lambda: otp_ablation.run(args.quick),
         "lambda_sweep": lambda: lambda_sweep.run(args.quick),
         "memory_speed": lambda: memory_speed.run(args.quick),
+        "serving_latency": lambda: serving_latency.run(args.quick),
         "roofline": lambda: roofline.run(),
     }
     if args.only:

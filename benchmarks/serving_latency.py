@@ -1,0 +1,95 @@
+"""Serving latency: TTFT + per-token latency vs offered load, fp vs PMQ.
+
+Drives the paged continuous-batching engine (repro.serving) over the
+trained benchmark MoE at different offered loads (queued requests per
+slot) with full-precision weights and with PMQ-compressed experts
+(§3.2 bit buckets; serving is the paper's Tab. 8 deployment setting).
+CPU wall-clock ratios are reported for what they are — the roofline
+projection in memory_speed covers the accelerator-side speedup story.
+
+The compressed engine serves the *stacked* compressed tree: the PMQ plan
+is made layer-uniform (every layer gets layer 0's bit vector) so all
+layers share one bucket structure and ride the decode scan — the same
+layout the dry-run uses (repro.launch.specs.synthetic_stacked_compressed).
+
+Emits the same CSV row shape as memory_speed: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import pipeline
+from repro.models import transformer as tf
+from repro.serving import EngineConfig, PagedServingEngine, Request
+
+from .common import calibration, csv_row, trained_model
+
+PROMPT_LEN = 32
+
+
+def _stacked_compressed_params(cfg, params, calib):
+    """Compress with a layer-uniform PMQ plan and restack for the scan."""
+    eps = pipeline.compute_eps(params, calib, cfg, eps_tokens=128)
+    plan = pipeline.run_pmq(params, calib, cfg, target_avg_bits=2.05, eps=eps)
+    plan.bits = [plan.bits[0]] * cfg.num_layers  # uniform bucket structure
+    blocks_c, top = pipeline.compress_model(
+        params, calib, plan, cfg, use_gptq=False
+    )
+    out = dict(top)
+    out["blocks"] = tf.restack_blocks(blocks_c)
+    return out, plan.avg_bits
+
+
+def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
+                seed: int = 0):
+    mb = -(-(PROMPT_LEN + max_new) // 16) + 1
+    engine = PagedServingEngine(
+        cfg, params,
+        EngineConfig(max_slots=slots, block_size=16,
+                     num_blocks=slots * mb, max_blocks_per_slot=mb,
+                     prefill_chunk=16),
+    )
+    rng = np.random.default_rng(seed)
+    reqs = [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=PROMPT_LEN).astype(np.int32),
+            max_new=max_new,
+        )
+        for i in range(n_requests)
+    ]
+    engine.serve(reqs)
+    return engine.metrics.summary()
+
+
+def run(quick: bool = False):
+    print("== serving_latency (paged engine, fp vs PMQ) ==")
+    cfg, params = trained_model()
+    calib = calibration(cfg, params)
+    params_c, avg_bits = _stacked_compressed_params(cfg, params, calib)
+    slots = 2 if quick else 4
+    max_new = 8 if quick else 16
+    loads = (1.0,) if quick else (0.5, 2.0)
+    rows = []
+    for label, prm in (("fp", params), ("pmq", params_c)):
+        for load in loads:
+            n = max(1, int(round(load * slots)))
+            m = _serve_once(cfg, prm, n_requests=n, slots=slots,
+                            max_new=max_new)
+            rows.append(csv_row(
+                f"serving/{label}_load{load:g}",
+                m["decode_step_mean_s"] * 1e6,
+                f"ttft_ms={m['ttft_mean_s']*1e3:.1f};"
+                f"ttft_p95_ms={m['ttft_p95_s']*1e3:.1f};"
+                f"tok_ms={m['decode_step_mean_s']*1e3:.1f};"
+                f"tok_p95_ms={m['decode_step_p95_s']*1e3:.1f};"
+                f"tps={m['tokens_per_s']:.1f};"
+                f"midflight={m['mid_flight_admissions']};"
+                f"act={m['expert_activation_mean']:.2f}",
+            ))
+    print(f"  pmq avg bits {avg_bits:.2f}; rows emitted: {len(rows)}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

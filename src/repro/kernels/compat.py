@@ -1,0 +1,15 @@
+"""Version shims for the Pallas TPU API surface.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in newer
+jax releases; the kernels support both so the same code runs on the
+container's pinned jax and on current TPU toolchains.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)

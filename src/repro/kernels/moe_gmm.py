@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 from .quant_matmul import _dequant, _unpack_tile
 
 __all__ = ["moe_gmm_pallas", "pad_groups", "sort_by_expert"]
@@ -128,7 +130,7 @@ def moe_gmm_pallas(
         kernel,
         grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

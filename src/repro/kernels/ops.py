@@ -16,12 +16,14 @@ from ..core.packing import PackedTensor
 from . import ref
 from .binary_matmul import binary_matmul_pallas
 from .moe_gmm import moe_gmm_pallas, pad_groups, sort_by_expert
+from .paged_attention import paged_attention_pallas
 from .quant_matmul import quant_matmul_pallas
 
 __all__ = [
     "quant_matmul",
     "binary_matmul",
     "moe_gmm",
+    "paged_attention",
     "pad_groups",
     "sort_by_expert",
     "default_backend",
@@ -130,6 +132,38 @@ def moe_gmm(
     return moe_gmm_pallas(
         x_padded, w_packed, scale, zero, block_expert,
         bits=bits, group=group, bm=bm, bn=bn, bk=bk,
+        interpret=(backend == "interpret"),
+    )
+
+
+def paged_attention(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window=None,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Decode attention through a paged KV pool (serving hot path).
+
+    ``q [B, Hkv, G, dh]``; ``k_pool/v_pool [NB, BS, Hkv, dh]`` — one
+    layer's pool; ``block_tables [B, MB]``; ``lengths [B]`` logical kv
+    lengths. ``window`` may be a python int or traced scalar (per-layer
+    sliding windows ride the decode scan). Returns ``[B, Hkv, G, dh]``.
+    """
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.paged_attention_ref(
+            q, k_pool, v_pool, block_tables, lengths, window=window
+        )
+    mb, bs = block_tables.shape[1], k_pool.shape[1]
+    win = jnp.full((1,), mb * bs + 1, jnp.int32) if window is None else (
+        jnp.asarray(window, jnp.int32).reshape(1)
+    )
+    return paged_attention_pallas(
+        q, k_pool, v_pool, block_tables, lengths, win,
         interpret=(backend == "interpret"),
     )
 

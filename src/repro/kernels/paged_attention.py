@@ -1,0 +1,143 @@
+"""Paged-KV decode attention Pallas TPU kernel (serving hot path).
+
+One query token per sequence attends to a KV history scattered across
+fixed-size blocks of a shared pool (``repro.serving.kvcache``): block
+``j`` of sequence ``i`` lives at physical page ``block_tables[i, j]``.
+The kernel streams pages HBM→VMEM via **scalar-prefetched** block tables
+(the index map reads ``block_tables[i, j]`` to pick each page's DMA
+source), so the gather costs exactly the bytes of the pages it visits —
+no [B, S_max, Hkv, dh] contiguous copy ever exists. Online softmax
+accumulates across pages (the "arbitrary" grid dim), the same recurrence
+as :func:`repro.models.layers._online_attn`.
+
+Grid ``(B, Hkv, MB)``: one program per (sequence, kv-head, page). GQA
+rides the block shape — each program computes all ``G = Hq/Hkv`` query
+heads of its kv head against one [BS, dh] page.
+
+Layouts
+-------
+* ``q``: [B, Hkv, G, dh]
+* ``k_pool`` / ``v_pool``: [NB, BS, Hkv, dh] (one layer's pool)
+* ``block_tables``: [B, MB] int32 physical page ids (scalar prefetch)
+* ``lengths``: [B] int32 logical kv length (newest token at length−1)
+* ``window``: [1] int32 sliding-window size (≥ max length = full attn)
+
+The jnp oracle is :func:`repro.kernels.ref.paged_attention_ref`; the CPU
+serving path and tests run it (or this kernel under ``interpret=True``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .compat import CompilerParams
+
+__all__ = ["paged_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    bt_ref,  # [B, MB] scalar prefetch (consumed by index maps)
+    len_ref,  # [B] scalar prefetch
+    win_ref,  # [1] scalar prefetch
+    q_ref,  # [1, 1, G, dh]
+    k_ref,  # [1, BS, 1, dh] — page bt[i, j] of kv head h
+    v_ref,  # [1, BS, 1, dh]
+    o_ref,  # [1, 1, G, dh]
+    acc_ref,  # VMEM [G, dh] f32
+    m_ref,  # VMEM [G, 1] f32 running max
+    l_ref,  # VMEM [G, 1] f32 running denominator
+    *,
+    bs: int,
+    nj: int,
+):
+    i, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[i]
+    win = win_ref[0]
+    dh = q_ref.shape[-1]
+    q = q_ref[0, 0].astype(jnp.float32) * dh**-0.5  # [G, dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)  # [BS, dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # [G, BS]
+    kv_pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    valid = (kv_pos < length) & (kv_pos > (length - 1) - win)
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    window: jnp.ndarray,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """``out[B,Hkv,G,dh]`` — see module docstring for layouts."""
+    b, hkv, g, dh = q.shape
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    mb = block_tables.shape[1]
+    grid = (b, hkv, mb)
+
+    q_spec = pl.BlockSpec((1, 1, g, dh), lambda i, h, j, bt, ln, wd: (i, h, 0, 0))
+    kv_spec = pl.BlockSpec(
+        (1, bs, 1, dh), lambda i, h, j, bt, ln, wd: (bt[i, j], 0, h, 0)
+    )
+    o_spec = pl.BlockSpec((1, 1, g, dh), lambda i, h, j, bt, ln, wd: (i, h, 0, 0))
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        scratch_shapes=[
+            pltpu.VMEM((g, dh), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, bs=bs, nj=mb)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dh), q.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32),
+        lengths.astype(jnp.int32),
+        window.astype(jnp.int32),
+        q,
+        k_pool,
+        v_pool,
+    )

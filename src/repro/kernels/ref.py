@@ -8,6 +8,7 @@ computed analytically — see EXPERIMENTS.md §Roofline).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from ..core.packing import unpack_bits
@@ -17,7 +18,10 @@ __all__ = [
     "quant_matmul_ref",
     "binary_matmul_ref",
     "moe_gmm_ref",
+    "paged_attention_ref",
 ]
+
+NEG_INF = -1e30
 
 
 def dequant_ref(
@@ -97,3 +101,49 @@ def moe_gmm_ref(
         preferred_element_type=jnp.float32,
     )
     return y.reshape(m, n).astype(out_dtype or x_padded.dtype)
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,
+    k_pool: jnp.ndarray,
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    window=None,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Oracle for :mod:`repro.kernels.paged_attention`: gather each
+    sequence's pages through its block table, then masked softmax decode
+    attention in f32.
+
+    ``q [B, Hkv, G, dh]``; ``k_pool/v_pool [NB, BS, Hkv, dh]``;
+    ``block_tables [B, MB]``; ``lengths [B]`` logical kv lengths (the
+    newest token sits at ``lengths - 1``). ``window`` keeps
+    ``kv_pos > (lengths−1) − window`` (None = full attention).
+    """
+    b, hkv, g, dh = q.shape
+    nb, bs = k_pool.shape[0], k_pool.shape[1]
+    mb = block_tables.shape[1]
+    flat_k = k_pool.reshape(nb * bs, hkv, dh)
+    flat_v = v_pool.reshape(nb * bs, hkv, dh)
+    phys = (
+        block_tables[:, :, None] * bs + jnp.arange(bs)[None, None, :]
+    ).reshape(b, mb * bs)
+    k = flat_k[phys]  # [B, S_log, Hkv, dh]
+    v = flat_v[phys]
+    kv_pos = jnp.arange(mb * bs)
+    valid = kv_pos[None, :] < lengths[:, None]
+    if window is not None:
+        valid &= kv_pos[None, :] > (lengths[:, None] - 1) - window
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", q.astype(jnp.float32) * dh**-0.5,
+        k.astype(jnp.float32), preferred_element_type=jnp.float32,
+    )
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgs,bshd->bhgd", w, v.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return o.astype(out_dtype or q.dtype)

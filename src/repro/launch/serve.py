@@ -1,13 +1,20 @@
-"""Serving launcher: batched prefill + decode with PMQ/OTP compression.
+"""Serving launcher: continuous batching with a paged KV cache.
 
-Implements a minimal production-shaped serving loop:
+The default path is :class:`repro.serving.engine.PagedServingEngine`:
 
-* request queue → continuous batcher (slots with per-slot position),
-* one prefill per admitted request, then batched decode steps,
-* bf16 or PMQ-compressed weights; OTP masks at decode time (deterministic
-  argmax — the τ→0 limit, paper §3.4),
-* per-step latency stats (the Tab. 5/8 "speedup" measurements on CPU are
-  relative between precisions — see benchmarks/memory_speed.py).
+* block-table paged KV pool — slots of different lengths share one
+  preallocated pool; finished requests free their pages immediately,
+* admission queue + continuous batching — queued requests join the
+  running batch mid-flight (no wave barrier, no dummy padding),
+* chunked prefill for long prompts,
+* bf16 or PMQ-compressed weights (§3.2 bit buckets); OTP masks at decode
+  time (deterministic argmax — the τ→0 limit, paper §3.4),
+* TTFT / per-token latency / queue depth / expert-activation metrics
+  (:mod:`repro.serving.metrics`).
+
+:class:`BatchedServer` is the legacy static *wave* batcher kept for
+comparison (``--legacy``): it pads every wave with dummy requests and
+re-prefills per wave — the baseline the paged engine exists to beat.
 
 Runs reduced configs end-to-end on CPU (examples/serve_batched.py).
 """
@@ -24,8 +31,10 @@ import numpy as np
 
 from ..configs.registry import ARCH_IDS, get_config
 from ..models.registry import get_model
+from ..serving import EngineConfig, PagedServingEngine
+from ..serving import Request as PagedRequest
 
-__all__ = ["BatchedServer", "main"]
+__all__ = ["BatchedServer", "Request", "main"]
 
 
 @dataclasses.dataclass
@@ -37,7 +46,12 @@ class Request:
 
 
 class BatchedServer:
-    """Static-batch continuous server over a fixed slot count."""
+    """Static-batch wave server over a fixed slot count (legacy baseline).
+
+    Kept for A/B comparison against the paged engine: it admits in waves,
+    pads short waves with dummy requests, and holds every slot until the
+    wave's longest request finishes.
+    """
 
     def __init__(self, cfg, params, max_slots: int = 4, prompt_len: int = 32):
         self.cfg = cfg
@@ -47,7 +61,7 @@ class BatchedServer:
         self.prompt_len = prompt_len
         self._decode = jax.jit(self.bundle.decode_step, donate_argnums=(1,))
         self._prefill = jax.jit(self.bundle.prefill)
-        self.stats = {"prefill_s": [], "decode_s": []}
+        self.stats = {"prefill_s": [], "decode_s": [], "active": []}
 
     def _pad_prompts(self, reqs: List[Request]) -> jnp.ndarray:
         toks = np.zeros((len(reqs), self.prompt_len), np.int32)
@@ -62,25 +76,41 @@ class BatchedServer:
         for i in range(0, len(reqs), self.max_slots):
             wave = reqs[i : i + self.max_slots]
             while len(wave) < self.max_slots:  # pad wave with a dummy
-                wave = wave + [Request(rid=-1, prompt=wave[0].prompt)]
+                # max_new=0: a dummy must never extend the wave's decode
+                # loop nor count toward latency/throughput stats
+                wave = wave + [Request(rid=-1, prompt=wave[0].prompt, max_new=0)]
             tokens = self._pad_prompts(wave)
+            max_new = max(r.max_new for r in wave)
             t0 = time.time()
             cache, logits = self._prefill(self.params, {"tokens": tokens})
             jax.block_until_ready(logits)
             self.stats["prefill_s"].append(time.time() - t0)
+            # the prefill cache covers exactly the prompt; extend it so
+            # decode steps have somewhere to write their K/V
+            pad = ((0, 0), (0, 0), (0, max_new), (0, 0), (0, 0))
+            cache = dict(
+                cache, k=jnp.pad(cache["k"], pad), v=jnp.pad(cache["v"], pad)
+            )
             cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
             outs = [[] for _ in wave]
-            max_new = max(r.max_new for r in wave)
-            for step in range(max_new):
-                pos = jnp.int32(min(self.prompt_len - 1 + step,
-                                    self.prompt_len - 1))
+            for j, r in enumerate(wave):
+                if r.rid >= 0 and r.max_new > 0:
+                    outs[j].append(int(cur[j, 0]))
+            for step in range(max_new - 1):
+                # each decode step writes at the next cache position —
+                # never clamp to prompt_len-1 (that overwrote one slot
+                # forever and decoded against a stale cache)
+                pos = jnp.int32(self.prompt_len + step)
                 t0 = time.time()
                 cache, logits = self._decode(self.params, cache, cur, pos)
                 jax.block_until_ready(logits)
                 self.stats["decode_s"].append(time.time() - t0)
+                self.stats["active"].append(
+                    sum(1 for r in wave if r.rid >= 0 and step + 1 < r.max_new)
+                )
                 cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
                 for j, r in enumerate(wave):
-                    if r.rid >= 0 and step < r.max_new:
+                    if r.rid >= 0 and step + 1 < r.max_new:
                         outs[j].append(int(cur[j, 0]))
             for j, r in enumerate(wave):
                 if r.rid >= 0:
@@ -89,11 +119,13 @@ class BatchedServer:
 
     def summary(self) -> Dict[str, float]:
         d = np.asarray(self.stats["decode_s"])
+        # throughput counts only real (non-dummy, still-decoding) slots
+        gen = float(np.sum(self.stats["active"]))
         return {
             "prefill_mean_s": float(np.mean(self.stats["prefill_s"])),
             "decode_mean_s": float(np.mean(d)) if d.size else 0.0,
             "decode_p95_s": float(np.percentile(d, 95)) if d.size else 0.0,
-            "tokens_per_s": float(self.max_slots / np.mean(d)) if d.size else 0.0,
+            "tokens_per_s": gen / float(d.sum()) if d.size else 0.0,
         }
 
 
@@ -103,19 +135,43 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--block-size", type=int, default=16)
+    p.add_argument("--legacy", action="store_true",
+                   help="run the static wave batcher instead of the paged engine")
     args = p.parse_args()
     cfg = get_config(args.arch).reduced()
     bundle = get_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
-    server = BatchedServer(cfg, params, max_slots=args.slots)
     rng = np.random.default_rng(0)
-    reqs = [
-        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, size=24).astype(np.int32),
-                max_new=args.max_new)
-        for i in range(args.requests)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
+        for _ in range(args.requests)
     ]
-    out = server.serve(reqs)
-    print(f"served {len(out)} requests; stats: {server.summary()}")
+    if args.legacy:
+        server = BatchedServer(cfg, params, max_slots=args.slots)
+        reqs = [
+            Request(rid=i, prompt=prompts[i], max_new=args.max_new)
+            for i in range(args.requests)
+        ]
+        out = server.serve(reqs)
+        print(f"served {len(out)} requests; stats: {server.summary()}")
+        return
+    engine = PagedServingEngine(
+        cfg, params,
+        EngineConfig(
+            max_slots=args.slots,
+            block_size=args.block_size,
+            num_blocks=args.slots * ((24 + args.max_new) // args.block_size + 2),
+            max_blocks_per_slot=(24 + args.max_new) // args.block_size + 2,
+        ),
+    )
+    out = engine.serve(
+        [
+            PagedRequest(rid=i, prompt=prompts[i], max_new=args.max_new)
+            for i in range(args.requests)
+        ]
+    )
+    print(f"served {len(out)} requests; metrics: {engine.metrics.to_json()}")
 
 
 if __name__ == "__main__":

@@ -86,8 +86,9 @@ def embed_tokens(embed: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
             return jax.lax.psum(x, "model")
 
     from jax.sharding import PartitionSpec as P
+    from ..parallel.sharding import shard_map
 
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P("model", None), P(ba, None)),
@@ -152,17 +153,28 @@ def init_attention(rng, cfg, dtype=jnp.float32):
 
 def _qkv(p, x, cfg, positions, rope: bool = True):
     b, s, _ = x.shape
-    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    hq, dh = cfg.num_heads, cfg.head_dim
     q = linear(p["wq"], x).reshape(b, s, hq, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+    k, v = _kv_only(p, x, cfg, positions, rope=rope)
+    return q, k, v
+
+
+def _kv_only(p, x, cfg, positions, rope: bool = True):
+    """K/V projection without the query — paged prefill writes K/V
+    itself and lets :func:`attention`'s cross-attention path own q."""
+    b, s, _ = x.shape
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
     k = linear(p["wk"], x).reshape(b, s, hkv, dh)
     v = linear(p["wv"], x).reshape(b, s, hkv, dh)
     if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
         k = rms_norm(k, p["k_norm"], cfg.norm_eps)
     if rope:
-        q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    return q, k, v
+    return k, v
 
 
 def _mask_chunk(q_pos, kv_pos, causal: bool, window):

@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops
 from ..parallel.sharding import shard
 from . import layers as L
 from .moe import init_moe, moe_layer
@@ -27,6 +28,8 @@ __all__ = [
     "train_loss",
     "prefill",
     "decode_step",
+    "paged_decode_step",
+    "paged_prefill_chunk",
     "forward_hidden",
     "layer_windows",
 ]
@@ -204,8 +207,20 @@ def train_loss(params, batch, cfg, *, moe_hooks=None, aux_weight: float = 0.01):
 
 
 # ---------------------------------------------------------------- serving
-def prefill(params, batch, cfg, *, moe_hooks=None):
-    """Build a KV cache of the prompt; return (cache, last-token logits)."""
+def prefill(params, batch, cfg, *, moe_hooks=None, paged=None):
+    """Build a KV cache of the prompt; return (cache, last-token logits).
+
+    With ``paged={"cache": <paged layout>, "start": s, "valid_len": n}``
+    the prompt chunk is written into the paged pool instead of building a
+    dense cache (see :func:`paged_prefill_chunk`).
+    """
+    if paged is not None:
+        return paged_prefill_chunk(
+            params, paged["cache"], batch["tokens"],
+            paged.get("start", 0),
+            paged.get("valid_len", batch["tokens"].shape[1]),
+            cfg, moe_hooks=moe_hooks,
+        )
     tokens = batch["tokens"]
     patch = batch.get("patch_embeds")
     hidden, _, cache = forward_hidden(
@@ -221,6 +236,32 @@ def prefill(params, batch, cfg, *, moe_hooks=None):
     return cache, logits
 
 
+def _ffn_delta(p, h, cfg, moe_hooks=None):
+    """FFN half of a decode-style block → ``(Δx, expert_activation)``.
+
+    ``expert_activation`` is the executed fraction of top-k expert slots:
+    the mean of the OTP decode mask (deterministic argmax, paper §3.4 τ→0
+    limit) when masks are active, else 1.0. Shared by the dense and paged
+    decode paths so they stay numerically identical.
+    """
+    one = jnp.float32(1.0)
+    if not cfg.is_moe:
+        return L.mlp(p["mlp"], h), one
+    if "moe_ce" in p:
+        from ..core.compressed_moe import compressed_moe_layer
+
+        hooks = moe_hooks or {}
+        use_otp = hooks.get("use_otp", True)
+        y, info = compressed_moe_layer(
+            p["moe"], p["moe_ce"], h, cfg,
+            otp_params=p.get("otp") if use_otp else None,
+        )
+        act = info["mask"].mean() if info.get("mask") is not None else one
+        return y, act
+    out = moe_layer(p["moe"], h, cfg)
+    return out.y, one
+
+
 def _decode_block(p, x, cfg, *, k_cache, v_cache, pos, window, moe_hooks=None):
     h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
     attn_out, (k_cache, v_cache) = L.decode_attention(
@@ -228,19 +269,8 @@ def _decode_block(p, x, cfg, *, k_cache, v_cache, pos, window, moe_hooks=None):
     )
     x = x + attn_out
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
-    if cfg.is_moe:
-        if "moe_ce" in p:
-            from ..core.compressed_moe import compressed_moe_layer
-
-            y, _ = compressed_moe_layer(
-                p["moe"], p["moe_ce"], h, cfg, otp_params=p.get("otp")
-            )
-            x = x + y
-        else:
-            out = moe_layer(p["moe"], h, cfg)
-            x = x + out.y
-    else:
-        x = x + L.mlp(p["mlp"], h)
+    delta, _ = _ffn_delta(p, h, cfg, moe_hooks)
+    x = x + delta
     return x, (k_cache, v_cache)
 
 
@@ -255,7 +285,16 @@ def decode_step(params, cache, token: jnp.ndarray, pos: jnp.ndarray, cfg,
     carries in place, so a donated multi-GB cache is updated with a single
     [B,1,Hkv,dh] write per layer instead of double-buffering the whole
     tensor (−2× cache HBM at decode).
+
+    A cache carrying ``"block_tables"`` is the *paged* layout
+    (:mod:`repro.serving.kvcache`); it dispatches to
+    :func:`paged_decode_step` with ``pos`` as per-slot positions ``[B]``.
     """
+    if "block_tables" in cache:
+        new_cache, logits, _ = paged_decode_step(
+            params, cache, token, pos, cfg, moe_hooks=moe_hooks
+        )
+        return new_cache, logits
     x = L.embed_tokens(params["embed"], token)
     b = token.shape[0]
     s = cache["k"].shape[2]
@@ -288,6 +327,163 @@ def decode_step(params, cache, token: jnp.ndarray, pos: jnp.ndarray, cfg,
         _out_embedding(params).astype(jnp.float32),
     )
     new_cache = {"k": kf, "v": vf, "pos": pos + 1}
+    return new_cache, logits
+
+
+# ------------------------------------------------------- paged serving
+def _paged_pool_dims(cache):
+    l, nb, bs = cache["k"].shape[0], cache["k"].shape[1], cache["k"].shape[2]
+    return l, nb, bs
+
+
+def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
+                      cfg, *, moe_hooks=None):
+    """One decode step over a paged KV pool (continuous batching).
+
+    ``cache = {"k": [L,NB,BS,Hkv,dh], "v": ..., "block_tables": [B,MB],
+    "active": [B] bool}``; ``token [B,1]``; ``positions [B]`` — per-slot
+    write position (slots decode at *different* logical lengths, unlike
+    the dense path's single scalar ``pos``). Inactive slots compute but
+    never write (their scatter destination is out of bounds → dropped),
+    so freed pages can be re-used by a newly admitted request in the same
+    jitted program.
+
+    Returns ``(new_cache, logits [B,1,V], info)`` where
+    ``info["expert_activation"]`` is the mean executed fraction of top-k
+    expert slots across layers (OTP §3.4 decode masks make it < 1).
+    """
+    x = L.embed_tokens(params["embed"], token)
+    b = token.shape[0]
+    nl, nb, bs = _paged_pool_dims(cache)
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    g = hq // hkv
+    tables = cache["block_tables"]
+    active = cache["active"]
+    s_log = tables.shape[1] * bs
+    windows = layer_windows(cfg, s_log)
+    layer_ids = jnp.arange(nl, dtype=jnp.int32)
+    kf = cache["k"].reshape(nl, nb * bs, hkv, dh)
+    vf = cache["v"].reshape(nl, nb * bs, hkv, dh)
+    # flat destination of the new token's K/V; inactive slots land one
+    # past the pool end and are dropped by the scatter
+    page = jnp.take_along_axis(
+        tables, (positions // bs)[:, None], axis=1
+    )[:, 0]
+    dest = jnp.where(active, page * bs + positions % bs, nb * bs)
+    lengths = positions + 1
+
+    def body(carry, xs):
+        xc, kf, vf = carry
+        p_l, win, l = xs
+        h = L.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+        q, k_new, v_new = L._qkv(p_l["attn"], h, cfg, positions[:, None])
+        kf = kf.at[l, dest].set(k_new[:, 0].astype(kf.dtype), mode="drop")
+        vf = vf.at[l, dest].set(v_new[:, 0].astype(vf.dtype), mode="drop")
+        k_l = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)
+        attn = ops.paged_attention(
+            q.reshape(b, hkv, g, dh),
+            k_l.reshape(nb, bs, hkv, dh),
+            v_l.reshape(nb, bs, hkv, dh),
+            tables, lengths, window=win,
+        )
+        attn = attn.reshape(b, 1, hq * dh).astype(xc.dtype)
+        xc = xc + L.linear(p_l["attn"]["wo"], attn)
+        h2 = L.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+        delta, act = _ffn_delta(p_l, h2, cfg, moe_hooks)
+        xc = xc + delta
+        return (xc, kf, vf), act
+
+    (x, kf, vf), acts = jax.lax.scan(
+        body, (x, kf, vf), (params["blocks"], windows, layer_ids)
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum(
+        "btd,vd->btv", x.astype(jnp.float32),
+        _out_embedding(params).astype(jnp.float32),
+    )
+    new_cache = dict(
+        cache,
+        k=kf.reshape(nl, nb, bs, hkv, dh),
+        v=vf.reshape(nl, nb, bs, hkv, dh),
+    )
+    return new_cache, logits, {"expert_activation": acts.mean()}
+
+
+def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
+                        valid_len: jnp.ndarray, cfg, *, moe_hooks=None):
+    """Chunked prefill of ONE request (``B = 1``) into its paged slot.
+
+    ``tokens [1, C]`` is one fixed-size prompt chunk (the tail chunk is
+    right-padded; padded positions never write K/V and never appear in
+    the gathered kv, so valid rows are exact). ``start`` (scalar) counts
+    tokens already written; ``valid_len`` (scalar ≤ C) is the chunk's
+    real length. ``cache`` carries this slot's table as ``[1, MB]``.
+
+    Long prompts stream through in O(C · S) attention per chunk via the
+    online-softmax path in :func:`repro.models.layers.attention` — the
+    engine never materializes a full [P, P] score matrix nor re-prefills
+    earlier chunks (contrast the wave batcher's per-wave re-prefill).
+
+    Returns ``(new_cache, logits [1,1,V])`` — logits of the last *valid*
+    token (the request's first generated token once the final chunk is
+    in).
+    """
+    x = L.embed_tokens(params["embed"], tokens)
+    c = tokens.shape[1]
+    nl, nb, bs = _paged_pool_dims(cache)
+    hkv, dh = cfg.num_kv_heads, cfg.head_dim
+    tables = cache["block_tables"]  # [1, MB]
+    mb = tables.shape[1]
+    s_log = mb * bs
+    windows = layer_windows(cfg, s_log)
+    layer_ids = jnp.arange(nl, dtype=jnp.int32)
+    kf = cache["k"].reshape(nl, nb * bs, hkv, dh)
+    vf = cache["v"].reshape(nl, nb * bs, hkv, dh)
+
+    posf = start + jnp.arange(c, dtype=jnp.int32)  # absolute positions [C]
+    pos2d = posf[None, :]
+    page = tables[0, posf // bs]
+    dest = jnp.where(jnp.arange(c) < valid_len, page * bs + posf % bs, nb * bs)
+    length = start + valid_len
+    # logical kv axis with the -1 padding sentinel beyond the filled part
+    logical = jnp.arange(s_log, dtype=jnp.int32)
+    kv_pos = jnp.where(logical < length, logical, -1)
+    phys = tables[0, logical // bs] * bs + logical % bs  # [S_log]
+
+    def body(carry, xs):
+        xc, kf, vf = carry
+        p_l, win, l = xs
+        h = L.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
+        k_new, v_new = L._kv_only(p_l["attn"], h, cfg, pos2d)
+        kf = kf.at[l, dest].set(k_new[0].astype(kf.dtype), mode="drop")
+        vf = vf.at[l, dest].set(v_new[0].astype(vf.dtype), mode="drop")
+        k_log = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)[phys][None]
+        v_log = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)[phys][None]
+        attn_out, _ = L.attention(
+            p_l["attn"], h, cfg, positions=pos2d, causal=True, window=win,
+            kv_override=(k_log, v_log, kv_pos),
+        )
+        xc = xc + attn_out
+        h2 = L.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
+        delta, _ = _ffn_delta(p_l, h2, cfg, moe_hooks)
+        xc = xc + delta
+        return (xc, kf, vf), None
+
+    (x, kf, vf), _ = jax.lax.scan(
+        body, (x, kf, vf), (params["blocks"], windows, layer_ids)
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
+    logits = jnp.einsum(
+        "btd,vd->btv", last.astype(jnp.float32),
+        _out_embedding(params).astype(jnp.float32),
+    )
+    new_cache = dict(
+        cache,
+        k=kf.reshape(nl, nb, bs, hkv, dh),
+        v=vf.reshape(nl, nb, bs, hkv, dh),
+    )
     return new_cache, logits
 
 

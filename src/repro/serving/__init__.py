@@ -1,0 +1,30 @@
+"""repro.serving — continuous-batching decode engine for compressed MoE.
+
+The production serving substrate around the MC# compressed model path
+(PMQ bit-bucketed experts, §3.2; OTP deterministic decode masks, §3.4):
+
+* :mod:`repro.serving.kvcache` — block-table paged KV pool (slots of
+  different lengths share one preallocated pool; no per-wave re-prefill),
+* :mod:`repro.serving.scheduler` — admission queue + continuous batching
+  (finished requests free their blocks, queued ones join mid-flight),
+* :mod:`repro.serving.engine` — jitted paged decode step + chunked
+  prefill over the model bundle,
+* :mod:`repro.serving.metrics` — TTFT, per-token latency, queue depth,
+  per-step expert-activation rate (the paper's >20% activation-reduction
+  claim as an observable serving metric).
+"""
+from .engine import EngineConfig, PagedServingEngine
+from .kvcache import BlockAllocator, PagedKVCache, PoolExhausted
+from .metrics import ServingMetrics
+from .scheduler import Request, Scheduler
+
+__all__ = [
+    "BlockAllocator",
+    "EngineConfig",
+    "PagedKVCache",
+    "PagedServingEngine",
+    "PoolExhausted",
+    "Request",
+    "Scheduler",
+    "ServingMetrics",
+]

@@ -1,0 +1,248 @@
+"""Continuous-batching decode engine over the paged KV pool.
+
+The engine owns two jitted programs, both with static shapes so they
+compile exactly once each:
+
+* **prefill chunk** — one request's prompt streams through
+  :func:`repro.models.transformer.paged_prefill_chunk` in fixed-size
+  chunks, writing K/V straight into the request's pages (no dense
+  [L,B,S,…] cache, no per-wave re-prefill). The final chunk's logits give
+  the first generated token — the TTFT event.
+* **decode step** — all ``max_slots`` slots advance one token through
+  :func:`repro.models.transformer.paged_decode_step`; slots decode at
+  different logical lengths via per-slot positions, inactive slots are
+  masked from K/V writes. The pool arrays are donated, so the multi-GB
+  cache is updated in place.
+
+Between steps the (host-side) :class:`repro.serving.scheduler.Scheduler`
+admits queued requests into freed slots — continuous batching with no
+wave barrier and no dummy padding. The model path is the standard bundle
+tree, including PMQ-compressed experts (``moe_ce`` buckets, paper §3.2)
+and OTP deterministic decode masks (§3.4 τ→0 argmax) when present; the
+per-step expert-activation rate lands in
+:class:`repro.serving.metrics.ServingMetrics`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer as tf
+from .kvcache import PagedKVCache, PoolExhausted
+from .metrics import ServingMetrics
+from .scheduler import Request, Scheduler
+
+__all__ = ["EngineConfig", "PagedServingEngine", "dense_greedy_reference"]
+
+
+def dense_greedy_reference(cfg, params, prompt: np.ndarray, max_new: int):
+    """Greedy decode through the *dense* cache — the equivalence oracle
+    for the paged engine (tests and examples assert paged == dense).
+
+    Returns ``(tokens, per_step_logits)`` where ``per_step_logits[i]`` is
+    the last-token logits [V] that produced ``tokens[i]``. Run it with the
+    engine's ``model_cfg`` so both sides use drop-free expert capacity.
+    """
+    from ..models.registry import get_model
+
+    bundle = get_model(cfg)
+    cache, logits = bundle.prefill(params, {"tokens": jnp.asarray(prompt[None])})
+    # the prefill cache covers exactly the prompt; extend for decode
+    pad = ((0, 0), (0, 0), (0, max_new), (0, 0), (0, 0))
+    cache = dict(cache, k=jnp.pad(cache["k"], pad), v=jnp.pad(cache["v"], pad))
+    toks, steps = [], [np.asarray(logits[0, -1])]
+    cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    toks.append(int(cur[0, 0]))
+    for step in range(max_new - 1):
+        cache, logits = bundle.decode_step(
+            params, cache, cur, jnp.int32(len(prompt) + step)
+        )
+        steps.append(np.asarray(logits[0, -1]))
+        cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        toks.append(int(cur[0, 0]))
+    return toks, steps
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4
+    block_size: int = 16
+    num_blocks: int = 64
+    max_blocks_per_slot: int = 8
+    prefill_chunk: int = 16
+    use_otp: bool = True  # OTP decode masks when the model carries them
+    # Serving must be batch-composition independent: a request's tokens
+    # cannot change because of who it was co-scheduled with (continuous
+    # batching reshuffles neighbors every step) nor how its prompt was
+    # chunked. Expert capacity is therefore raised to the drop-free bound
+    # (cap ≥ tokens·top_k ⇔ capacity_factor ≥ num_experts) inside the
+    # engine's jitted steps.
+    drop_free_capacity: bool = True
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_steps(model_cfg, use_otp: bool):
+    """Compiled decode/prefill step builders, shared across engines with
+    the same (hashable, frozen) model config — jit caching then dedupes
+    by array shapes, so two engines differing only in pool geometry cost
+    one trace each, not one per instance."""
+    hooks = {"use_otp": use_otp}
+
+    def decode_fn(params, k, v, token, positions, tables, active):
+        cache = {"k": k, "v": v, "block_tables": tables, "active": active}
+        new_cache, logits, info = tf.paged_decode_step(
+            params, cache, token, positions, model_cfg, moe_hooks=hooks
+        )
+        return new_cache["k"], new_cache["v"], logits, info["expert_activation"]
+
+    def prefill_fn(params, k, v, tokens, start, valid_len, table_row):
+        cache = {"k": k, "v": v, "block_tables": table_row}
+        new_cache, logits = tf.paged_prefill_chunk(
+            params, cache, tokens, start, valid_len, model_cfg, moe_hooks=hooks
+        )
+        return new_cache["k"], new_cache["v"], logits
+
+    return (
+        jax.jit(decode_fn, donate_argnums=(1, 2)),
+        jax.jit(prefill_fn, donate_argnums=(1, 2)),
+    )
+
+
+class PagedServingEngine:
+    """Serve requests against a transformer-family model bundle tree."""
+
+    def __init__(self, cfg, params, engine_cfg: Optional[EngineConfig] = None):
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"paged serving supports transformer families, got {cfg.family}"
+            )
+        self.cfg = cfg
+        self.ecfg = engine_cfg or EngineConfig()
+        self.model_cfg = cfg
+        if cfg.is_moe and self.ecfg.drop_free_capacity:
+            self.model_cfg = dataclasses.replace(
+                cfg,
+                moe_capacity_factor=float(
+                    max(cfg.moe_capacity_factor, cfg.num_experts)
+                ),
+            )
+        cfg = self.model_cfg
+        self.params = params
+        self.cache = PagedKVCache.create(
+            cfg,
+            num_blocks=self.ecfg.num_blocks,
+            block_size=self.ecfg.block_size,
+            max_slots=self.ecfg.max_slots,
+            max_blocks_per_slot=self.ecfg.max_blocks_per_slot,
+        )
+        self.scheduler = Scheduler(self.cache)
+        self.metrics = ServingMetrics()
+        self.results: Dict[int, List[int]] = {}
+        self._step_idx = 0
+        self._decode, self._prefill = _jitted_steps(
+            self.model_cfg, self.ecfg.use_otp
+        )
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        req.arrival_s = time.time()
+        self.scheduler.submit(req, self._step_idx)
+
+    def serve(self, requests: Iterable[Request]) -> Dict[int, List[int]]:
+        """Submit + run; returns outputs for *this* batch only (``run``'s
+        ``results`` keep accumulating across calls on a live engine)."""
+        reqs = list(requests)
+        for r in reqs:
+            self.submit(r)
+        self.run()
+        return {r.rid: self.results[r.rid] for r in reqs}
+
+    # -------------------------------------------------------------- loop
+    def run(self) -> Dict[int, List[int]]:
+        """Drive admission + decode until queue and slots drain."""
+        while self.scheduler.has_work():
+            self._admit_all()
+            if not self.scheduler.active:
+                if self.scheduler.waiting:
+                    head = self.scheduler.waiting[0]
+                    raise PoolExhausted(
+                        f"request {head.rid} needs "
+                        f"{self.cache.blocks_needed(head.total_tokens)} blocks "
+                        f"but the whole pool has {self.cache.allocator.num_blocks}"
+                    )
+                break
+            self._decode_once()
+        return dict(self.results)
+
+    # --------------------------------------------------------- admission
+    def _admit_all(self) -> None:
+        while True:
+            active_before = len(self.scheduler.active)
+            req = self.scheduler.try_admit(self._step_idx)
+            if req is None:
+                return
+            self.metrics.record_admission(
+                req.rid, req.slot, self._step_idx, active_before,
+                self.scheduler.queue_depth,
+            )
+            t0 = time.time()
+            self._prefill_request(req)
+            now = time.time()
+            self.metrics.record_ttft(now - req.arrival_s, now - t0)
+            self.results[req.rid] = req.out
+            if req.done:  # max_new == 1: first token is the only token
+                self.scheduler.finish(req.slot)
+                self.metrics.record_release(req.rid, req.slot, self._step_idx)
+
+    def _prefill_request(self, req: Request) -> None:
+        p_len = len(req.prompt)
+        c = self.ecfg.prefill_chunk
+        table_row = jnp.asarray(self.cache.block_tables[req.slot : req.slot + 1])
+        logits = None
+        for off in range(0, p_len, c):
+            n = min(c, p_len - off)
+            chunk = np.zeros((1, c), np.int32)
+            chunk[0, :n] = req.prompt[off : off + n]
+            self.cache.k, self.cache.v, logits = self._prefill(
+                self.params, self.cache.k, self.cache.v,
+                jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row,
+            )
+        jax.block_until_ready(logits)
+        req.out.append(int(np.argmax(np.asarray(logits)[0, -1])))
+        req.pos = p_len
+
+    # ------------------------------------------------------------ decode
+    def _decode_once(self) -> None:
+        b = self.ecfg.max_slots
+        tokens = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for slot, req in self.scheduler.active.items():
+            tokens[slot, 0] = req.out[-1]
+            positions[slot] = req.pos
+            active[slot] = True
+        t0 = time.time()
+        self.cache.k, self.cache.v, logits, act = self._decode(
+            self.params, self.cache.k, self.cache.v,
+            jnp.asarray(tokens), jnp.asarray(positions),
+            self.cache.tables_device(), jnp.asarray(active),
+        )
+        jax.block_until_ready(logits)
+        dt = time.time() - t0
+        self.metrics.record_decode_step(
+            dt, int(active.sum()), float(act), self.scheduler.queue_depth
+        )
+        logits_np = np.asarray(logits)
+        for slot, req in list(self.scheduler.active.items()):
+            req.out.append(int(np.argmax(logits_np[slot, -1])))
+            req.pos += 1
+            if req.done:
+                self.scheduler.finish(slot)
+                self.metrics.record_release(req.rid, slot, self._step_idx)
+        self._step_idx += 1

@@ -1,0 +1,165 @@
+"""Block-table paged KV cache (vLLM-style) for the serving engine.
+
+One preallocated pool ``[L, num_blocks, block_size, Hkv, dh]`` per K and
+V replaces the dense ``[L, B, S, Hkv, dh]`` cache: a slot's logical
+position ``p`` lives at physical page ``block_tables[slot, p // bs]``,
+offset ``p % bs``. Slots of different lengths therefore share the pool —
+a finished request's pages return to the free list immediately and the
+next queued request reuses them, so pool sizing follows the *sum* of
+live context lengths instead of ``max_slots × max_len``.
+
+Host-side bookkeeping (:class:`BlockAllocator`, slot tables) is plain
+python/numpy — it runs between jitted steps. Device-side gathers go
+through :func:`repro.kernels.ops.paged_attention`; writes compute a flat
+destination ``page * bs + offset`` per new token inside the jitted step
+(:func:`repro.models.transformer.paged_decode_step`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockAllocator", "PagedKVCache", "PoolExhausted"]
+
+
+class PoolExhausted(RuntimeError):
+    """Raised when an allocation asks for more pages than are free."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size pages.
+
+    Invariants (tested): an allocation either returns exactly ``n``
+    distinct free pages or raises :class:`PoolExhausted` leaving state
+    untouched; freeing a page not currently allocated raises
+    ``ValueError`` (double-free guard); freed pages become allocatable
+    again (recycling).
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, got {num_blocks}")
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._allocated: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            raise PoolExhausted(
+                f"requested {n} blocks, {len(self._free)} free "
+                f"of {self.num_blocks}"
+            )
+        blocks = [self._free.pop() for _ in range(n)]
+        self._allocated.update(blocks)
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b not in self._allocated:
+                raise ValueError(f"double free / unknown block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Pool arrays + per-slot block tables for ``max_slots`` sequences.
+
+    The jnp pool arrays ``k``/``v`` are *donated* through the jitted
+    decode/prefill steps — the engine reassigns them after every call.
+    Everything else is host state.
+    """
+
+    k: jnp.ndarray  # [L, NB, BS, Hkv, dh]
+    v: jnp.ndarray
+    block_size: int
+    max_slots: int
+    max_blocks_per_slot: int
+    allocator: BlockAllocator
+    block_tables: np.ndarray  # [max_slots, MB] int32, 0-padded
+    slot_blocks: Dict[int, List[int]]
+    free_slots: List[int]
+    # device copy of block_tables, rebuilt only after admission/release —
+    # the per-token decode loop must not pay a host→device upload
+    _tables_device: object = None
+
+    @classmethod
+    def create(
+        cls,
+        cfg,
+        *,
+        num_blocks: int,
+        block_size: int,
+        max_slots: int,
+        max_blocks_per_slot: int,
+        dtype=None,
+    ) -> "PagedKVCache":
+        dt = dtype or (jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+        shape = (
+            cfg.num_layers, num_blocks, block_size,
+            cfg.num_kv_heads, cfg.head_dim,
+        )
+        return cls(
+            k=jnp.zeros(shape, dt),
+            v=jnp.zeros(shape, dt),
+            block_size=block_size,
+            max_slots=max_slots,
+            max_blocks_per_slot=max_blocks_per_slot,
+            allocator=BlockAllocator(num_blocks),
+            block_tables=np.zeros((max_slots, max_blocks_per_slot), np.int32),
+            slot_blocks={},
+            free_slots=list(range(max_slots - 1, -1, -1)),
+        )
+
+    # ------------------------------------------------------------- slots
+    def blocks_needed(self, total_tokens: int) -> int:
+        return -(-total_tokens // self.block_size)
+
+    def max_slot_tokens(self) -> int:
+        return self.max_blocks_per_slot * self.block_size
+
+    def can_admit(self, total_tokens: int) -> bool:
+        n = self.blocks_needed(total_tokens)
+        return (
+            bool(self.free_slots)
+            and n <= self.allocator.num_free
+            and n <= self.max_blocks_per_slot
+        )
+
+    def acquire_slot(self, total_tokens: int) -> int:
+        """Reserve a slot + enough pages for ``total_tokens`` kv entries."""
+        n = self.blocks_needed(total_tokens)
+        if n > self.max_blocks_per_slot:
+            raise PoolExhausted(
+                f"{total_tokens} tokens need {n} blocks > "
+                f"max_blocks_per_slot={self.max_blocks_per_slot}"
+            )
+        if not self.free_slots:
+            raise PoolExhausted("no free slots")
+        blocks = self.allocator.alloc(n)  # raises before slot is consumed
+        slot = self.free_slots.pop()
+        self.slot_blocks[slot] = blocks
+        self.block_tables[slot] = 0
+        self.block_tables[slot, : len(blocks)] = blocks
+        self._tables_device = None
+        return slot
+
+    def release_slot(self, slot: int) -> None:
+        self.allocator.free(self.slot_blocks.pop(slot))
+        self.block_tables[slot] = 0
+        self.free_slots.append(slot)
+        self._tables_device = None
+
+    def tables_device(self) -> jnp.ndarray:
+        if self._tables_device is None:
+            self._tables_device = jnp.asarray(self.block_tables)
+        return self._tables_device

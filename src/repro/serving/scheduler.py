@@ -1,0 +1,96 @@
+"""Admission queue + continuous batching over paged-KV slots.
+
+No wave barrier and no dummy padding (contrast
+:class:`repro.launch.serve.BatchedServer`): a request is admitted the
+moment a slot *and* enough KV pages are free, joins the running batch at
+the next decode step, and frees its pages the step it finishes — the
+engine never waits for the slowest request of a wave. Pages are reserved
+up front for ``prompt + max_new`` tokens so a running request can never
+hit pool exhaustion mid-flight (dynamic page growth + preemption is a
+follow-on, see ROADMAP "Serving").
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from .kvcache import PagedKVCache
+
+__all__ = ["Request", "Scheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [P] int32
+    max_new: int = 16
+    # ---- filled in by scheduler/engine ----
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pos: int = 0  # next kv write position (= current logical length)
+    submit_step: int = -1
+    admit_step: int = -1
+    arrival_s: float = 0.0  # wall-clock submit time (TTFT anchor)
+
+    @property
+    def total_tokens(self) -> int:
+        """KV entries the request can ever write (prompt + decode)."""
+        return len(self.prompt) + self.max_new
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class Scheduler:
+    """Pure host-side bookkeeping; the engine drives it between steps."""
+
+    def __init__(self, cache: PagedKVCache):
+        self.cache = cache
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}  # slot -> request
+
+    # ---------------------------------------------------------- queue
+    def submit(self, req: Request, step_idx: int = 0) -> None:
+        if len(req.prompt) == 0:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be ≥ 1")
+        if req.total_tokens > self.cache.max_slot_tokens():
+            raise ValueError(
+                f"request {req.rid}: {req.total_tokens} tokens exceed the "
+                f"per-slot maximum {self.cache.max_slot_tokens()} "
+                f"(max_blocks_per_slot × block_size)"
+            )
+        req.submit_step = step_idx
+        self.waiting.append(req)
+
+    def try_admit(self, step_idx: int) -> Optional[Request]:
+        """FCFS admission: head of queue starts iff slot + pages free."""
+        if not self.waiting:
+            return None
+        req = self.waiting[0]
+        if not self.cache.can_admit(req.total_tokens):
+            return None
+        self.waiting.popleft()
+        req.slot = self.cache.acquire_slot(req.total_tokens)
+        req.admit_step = step_idx
+        self.active[req.slot] = req
+        return req
+
+    def finish(self, slot: int) -> Request:
+        """Release a finished request's slot + pages (block recycling)."""
+        req = self.active.pop(slot)
+        self.cache.release_slot(slot)
+        return req
+
+    # ---------------------------------------------------------- state
+    def has_work(self) -> bool:
+        return bool(self.waiting) or bool(self.active)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)

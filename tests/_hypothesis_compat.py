@@ -1,0 +1,29 @@
+"""Soft dependency on ``hypothesis`` (pinned in requirements-dev.txt).
+
+Property tests decorate with the real ``@given``/``@settings`` when
+hypothesis is installed; otherwise they collect as *skipped* instead of
+failing the whole module at import time — a missing dev extra must never
+take the plain unit tests down with it.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies`` at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make tests/ importable regardless of import mode
+(``_hypothesis_compat`` is shared by the property-test modules)."""
+import pathlib
+import sys
+
+_HERE = str(pathlib.Path(__file__).resolve().parent)
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)

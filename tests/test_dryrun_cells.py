@@ -2,8 +2,20 @@
 a subprocess (fast), exercising train / decode / quantized-serve step
 builders, shardings and the HLO analyzer end-to-end."""
 import json
+import os
 import subprocess
 import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# portable child env (CI checkouts are not /root/repo): keep the host's
+# PATH/HOME, and never probe for accelerators in the child — a stripped
+# env otherwise stalls minutes in TPU discovery
+_CHILD_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    "HOME": os.environ.get("HOME", "/root"),
+    "JAX_PLATFORMS": "cpu",
+}
 
 _SNIPPET = r"""
 import os
@@ -51,8 +63,8 @@ def test_dryrun_reduced_cells_compile():
     r = subprocess.run(
         [sys.executable, "-c", _SNIPPET],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=_CHILD_ENV,
+        cwd=_REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-3000:]
     line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]

@@ -5,8 +5,20 @@ tokens go through (a) the pjit/no-mesh MoE layer and (b) the shard_map
 EP region on a 2×4 mesh — outputs must match to float tolerance. Also
 covers the PMQ-compressed region (incl. slot remapping + OTP mask).
 """
+import os
 import subprocess
 import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# portable child env (CI checkouts are not /root/repo): keep the host's
+# PATH/HOME, and never probe for accelerators in the child — a stripped
+# env otherwise stalls minutes in TPU discovery
+_CHILD_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    "HOME": os.environ.get("HOME", "/root"),
+    "JAX_PLATFORMS": "cpu",
+}
 
 _SNIPPET = r"""
 import os
@@ -76,8 +88,8 @@ def test_ep_shardmap_matches_reference():
     r = subprocess.run(
         [sys.executable, "-c", _SNIPPET],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=_CHILD_ENV,
+        cwd=_REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-3000:]
     assert "bf16-path OK" in r.stdout

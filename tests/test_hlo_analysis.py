@@ -4,8 +4,20 @@ Runs in a subprocess-free way: forcing host device count happens in a
 separate pytest process via env marker — here we only need 1 device for
 unsharded modules, plus a tiny forced-device SPMD case behind a spawn.
 """
+import os
 import subprocess
 import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# portable child env (CI checkouts are not /root/repo): keep the host's
+# PATH/HOME, and never probe for accelerators in the child — a stripped
+# env otherwise stalls minutes in TPU discovery
+_CHILD_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    "HOME": os.environ.get("HOME", "/root"),
+    "JAX_PLATFORMS": "cpu",
+}
 
 import jax
 import jax.numpy as jnp
@@ -105,9 +117,8 @@ def test_spmd_per_device_flops_and_collectives():
     r = subprocess.run(
         [sys.executable, "-c", _SPMD_SNIPPET],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
-        cwd="/root/repo",
+        env=_CHILD_ENV,
+        cwd=_REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout

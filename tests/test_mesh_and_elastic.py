@@ -1,7 +1,19 @@
 """Mesh construction, elastic re-mesh, sharding rules (forced devices in
 a subprocess so the main test process keeps 1 device)."""
+import os
 import subprocess
 import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# portable child env (CI checkouts are not /root/repo): keep the host's
+# PATH/HOME, and never probe for accelerators in the child — a stripped
+# env otherwise stalls minutes in TPU discovery
+_CHILD_ENV = {
+    "PYTHONPATH": "src",
+    "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+    "HOME": os.environ.get("HOME", "/root"),
+    "JAX_PLATFORMS": "cpu",
+}
 
 import numpy as np
 
@@ -52,8 +64,8 @@ def test_mesh_shard_ckpt_elastic_subprocess():
     r = subprocess.run(
         [sys.executable, "-c", _SNIPPET],
         capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=_CHILD_ENV,
+        cwd=_REPO_ROOT,
     )
     assert r.returncode == 0, r.stderr[-2000:]
     assert "OK" in r.stdout
