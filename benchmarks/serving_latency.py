@@ -1,4 +1,5 @@
-"""Serving latency: TTFT + per-token latency vs offered load, fp vs PMQ.
+"""Serving latency: TTFT + per-token latency vs offered load, fp vs PMQ,
+plus throughput-vs-pool-size pressure sweeps for growth + preemption.
 
 Drives the paged continuous-batching engine (repro.serving) over the
 trained benchmark MoE at different offered loads (queued requests per
@@ -6,6 +7,17 @@ slot) with full-precision weights and with PMQ-compressed experts
 (§3.2 bit buckets; serving is the paper's Tab. 8 deployment setting).
 CPU wall-clock ratios are reported for what they are — the roofline
 projection in memory_speed covers the accelerator-side speedup story.
+
+The ``--pool-blocks`` sweep shrinks the KV page pool below the trace's
+worst-case demand and serves the same mixed-length trace twice per pool
+size: once with on-demand growth + preemption (victims swap to host
+memory) and once with the conservative full-reservation baseline
+(``reserve_full`` — admission waits until prompt+max_new pages are
+free). Throughput, preemption counts and page utilization quantify how
+much traffic a fixed pool serves under each policy — MC#'s compression
+argument (§3.2/§3.4) applied to the KV budget:
+
+    PYTHONPATH=src python -m benchmarks.serving_latency --pool-blocks 12 20 32
 
 The compressed engine serves the *stacked* compressed tree: the PMQ plan
 is made layer-uniform (every layer gets layer 0's bit vector) so all
@@ -16,6 +28,9 @@ Emits the same CSV row shape as memory_speed: ``name,us_per_call,derived``.
 """
 from __future__ import annotations
 
+import argparse
+from typing import List, Optional, Sequence
+
 import numpy as np
 
 from repro.core import pipeline
@@ -25,6 +40,7 @@ from repro.serving import EngineConfig, PagedServingEngine, Request
 from .common import calibration, csv_row, trained_model
 
 PROMPT_LEN = 32
+BLOCK_SIZE = 16
 
 
 def _stacked_compressed_params(cfg, params, calib):
@@ -42,12 +58,12 @@ def _stacked_compressed_params(cfg, params, calib):
 
 def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
                 seed: int = 0):
-    mb = -(-(PROMPT_LEN + max_new) // 16) + 1
+    mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
     engine = PagedServingEngine(
         cfg, params,
-        EngineConfig(max_slots=slots, block_size=16,
+        EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
                      num_blocks=slots * mb, max_blocks_per_slot=mb,
-                     prefill_chunk=16),
+                     prefill_chunk=BLOCK_SIZE),
     )
     rng = np.random.default_rng(seed)
     reqs = [
@@ -60,6 +76,63 @@ def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
     ]
     engine.serve(reqs)
     return engine.metrics.summary()
+
+
+# --------------------------------------------------- pool pressure sweep
+def _pressure_requests(cfg, n_requests: int, seed: int = 0) -> List[Request]:
+    """Mixed-length trace: short prompts + long decodes, the shape that
+    stresses on-demand growth hardest (cheap admission, heavy growth)."""
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(8, 25))
+            ).astype(np.int32),
+            max_new=int(rng.integers(12, 33)),
+        )
+        for i in range(n_requests)
+    ]
+
+
+def pool_sweep(pool_blocks: Optional[Sequence[int]] = None, *,
+               quick: bool = False, n_requests: int = 8, slots: int = 6):
+    """Serve one trace across pool sizes, preemption on vs off."""
+    cfg, params = trained_model()
+    reqs = _pressure_requests(cfg, n_requests)
+    per_req = [-(-(len(r.prompt) + r.max_new) // BLOCK_SIZE) for r in reqs]
+    demand, biggest = sum(per_req), max(per_req)
+    if pool_blocks is None:
+        fracs = (1.0, 0.6) if quick else (1.0, 0.6, 0.4)
+        pool_blocks = [max(biggest, int(demand * f)) for f in fracs]
+    rows = []
+    for pool in pool_blocks:
+        pool = max(int(pool), biggest)  # completion needs the largest req to fit
+        for policy, reserve in (("preempt", False), ("reserve", True)):
+            engine = PagedServingEngine(
+                cfg, params,
+                EngineConfig(
+                    max_slots=slots, block_size=BLOCK_SIZE, num_blocks=pool,
+                    max_blocks_per_slot=biggest, prefill_chunk=BLOCK_SIZE,
+                    preempt_mode="swap", reserve_full=reserve,
+                ),
+            )
+            engine.serve(
+                [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+                 for r in reqs]
+            )
+            m = engine.metrics.summary()
+            rows.append(csv_row(
+                f"serving/pool{pool}_{policy}",
+                m["decode_step_mean_s"] * 1e6,
+                f"pool_frac={pool/demand:.2f};"
+                f"tps={m['tokens_per_s']:.1f};"
+                f"preempts={m['preemptions']};"
+                f"swap_mb={m['swap_bytes']/2**20:.2f};"
+                f"util_p95={m['page_util_p95']:.2f};"
+                f"ttft_p95_ms={m['ttft_p95_s']*1e3:.1f}",
+            ))
+    return rows
 
 
 def run(quick: bool = False):
@@ -88,8 +161,28 @@ def run(quick: bool = False):
                 f"act={m['expert_activation_mean']:.2f}",
             ))
     print(f"  pmq avg bits {avg_bits:.2f}; rows emitted: {len(rows)}")
+    print("== serving_latency (pool pressure: growth+preempt vs reserve) ==")
+    rows += pool_sweep(quick=quick, n_requests=4 if quick else 8,
+                       slots=3 if quick else 6)
     return rows
 
 
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--pool-blocks", type=int, nargs="+", default=None,
+                   metavar="N",
+                   help="explicit pool sizes (pages) for the pressure "
+                        "sweep; default derives ~3 sizes from the trace's "
+                        "worst-case demand")
+    args = p.parse_args()
+    if args.pool_blocks is not None:
+        pool_sweep(args.pool_blocks, quick=args.quick,
+                   n_requests=4 if args.quick else 8,
+                   slots=3 if args.quick else 6)
+    else:
+        run(quick=args.quick)
+
+
 if __name__ == "__main__":
-    run(quick=True)
+    main()

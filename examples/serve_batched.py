@@ -12,7 +12,10 @@ properties a wave batcher cannot provide:
    (visible as ``mid_flight_admissions`` / slot releases in metrics —
    slot turnover without a wave barrier),
 3. paged decode is *exactly* the dense decode: greedy tokens and logits
-   of a solo request match the dense prefill+decode reference allclose.
+   of a solo request match the dense prefill+decode reference allclose,
+4. dynamic page growth + preemption: the same workload through a pool at
+   ~half the worst-case demand still finishes every request with the
+   same tokens — victims are swapped to host memory and resumed.
 """
 import argparse
 
@@ -77,6 +80,31 @@ def main():
     paged_toks = solo.serve([Request(rid=0, prompt=prompt, max_new=max_new)])[0]
     assert paged_toks == ref_toks, (paged_toks, ref_toks)
     print(f"paged == dense greedy decode: {paged_toks}")
+
+    # --- pool pressure: growth + preemption, same outputs -------------
+    def fresh():
+        return [
+            Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new)
+            for r in reqs
+        ]
+
+    bs = 8  # block size shared by the page-count math and the engine
+    demand = sum(-(-(len(r.prompt) + r.max_new) // bs) for r in reqs)
+    biggest = max(-(-(len(r.prompt) + r.max_new) // bs) for r in reqs)
+    tight = PagedServingEngine(
+        cfg, params,
+        EngineConfig(max_slots=len(reqs), block_size=bs,
+                     num_blocks=max(biggest, demand // 2),
+                     max_blocks_per_slot=8, prefill_chunk=bs,
+                     preempt_mode="swap"),
+    )
+    out_tight = tight.serve(fresh())
+    mt = tight.metrics.summary()
+    assert out_tight == out, "pool pressure must never change outputs"
+    print(f"half-pool serve OK: {mt['preemptions']} preemptions, "
+          f"{mt['swap_bytes']} swap bytes, "
+          f"page util p95 {mt['page_util_p95']:.2f} "
+          f"(pool {tight.ecfg.num_blocks} of {demand} worst-case pages)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,11 @@ The default path is :class:`repro.serving.engine.PagedServingEngine`:
   preallocated pool; finished requests free their pages immediately,
 * admission queue + continuous batching — queued requests join the
   running batch mid-flight (no wave barrier, no dummy padding),
+* dynamic page growth + preemption — admission reserves prompt-sized
+  pages, decode pages are granted on demand, and under pool pressure
+  (``--pool-blocks``) the youngest request is swapped out to host memory
+  (``--preempt-mode swap``) or re-prefilled (``recompute``);
+  ``--no-preempt`` restores the conservative full-reservation baseline,
 * chunked prefill for long prompts,
 * bf16 or PMQ-compressed weights (§3.2 bit buckets); OTP masks at decode
   time (deterministic argmax — the τ→0 limit, paper §3.4),
@@ -136,6 +141,16 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--block-size", type=int, default=16)
+    p.add_argument("--pool-blocks", type=int, default=None,
+                   help="KV pool size in pages; undersize it to exercise "
+                        "growth + preemption (default: worst-case demand)")
+    p.add_argument("--preempt-mode", choices=["swap", "recompute"],
+                   default="swap",
+                   help="restore preempted requests from the host swap "
+                        "store or by re-prefilling their context")
+    p.add_argument("--no-preempt", action="store_true",
+                   help="reserve prompt+max_new pages at admission "
+                        "(PR-1 baseline: no growth, no preemption)")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
     args = p.parse_args()
@@ -156,13 +171,16 @@ def main() -> None:
         out = server.serve(reqs)
         print(f"served {len(out)} requests; stats: {server.summary()}")
         return
+    blocks_per_req = (24 + args.max_new) // args.block_size + 2
     engine = PagedServingEngine(
         cfg, params,
         EngineConfig(
             max_slots=args.slots,
             block_size=args.block_size,
-            num_blocks=args.slots * ((24 + args.max_new) // args.block_size + 2),
-            max_blocks_per_slot=(24 + args.max_new) // args.block_size + 2,
+            num_blocks=args.pool_blocks or args.slots * blocks_per_req,
+            max_blocks_per_slot=blocks_per_req,
+            preempt_mode=args.preempt_mode,
+            reserve_full=args.no_preempt,
         ),
     )
     out = engine.serve(
@@ -171,7 +189,11 @@ def main() -> None:
             for i in range(args.requests)
         ]
     )
+    m = engine.metrics.summary()
     print(f"served {len(out)} requests; metrics: {engine.metrics.to_json()}")
+    print(f"pool pressure: {m['preemptions']} preemptions, "
+          f"{m['swap_bytes']} swap bytes, "
+          f"page util p95 {m['page_util_p95']:.2f}")
 
 
 if __name__ == "__main__":

@@ -346,7 +346,15 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
     the dense path's single scalar ``pos``). Inactive slots compute but
     never write (their scatter destination is out of bounds → dropped),
     so freed pages can be re-used by a newly admitted request in the same
-    jitted program.
+    jitted program. ``"active"`` may be omitted — every slot then writes.
+
+    The block tables are static-shape ``[B, MB]`` rows padded with 0
+    beyond each slot's allocated pages: with dynamic page growth the
+    serving engine appends entries between jitted steps, and the only
+    invariant this step needs is that ``tables[slot, positions[slot]//BS]``
+    is an allocated page for every *active* slot (the engine grows before
+    decoding). Padding entries are never read — the attention gather is
+    clamped to ``lengths = positions + 1``.
 
     Returns ``(new_cache, logits [B,1,V], info)`` where
     ``info["expert_activation"]`` is the mean executed fraction of top-k
@@ -358,7 +366,7 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
     hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     g = hq // hkv
     tables = cache["block_tables"]
-    active = cache["active"]
+    active = cache.get("active")
     s_log = tables.shape[1] * bs
     windows = layer_windows(cfg, s_log)
     layer_ids = jnp.arange(nl, dtype=jnp.int32)
@@ -369,7 +377,9 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
     page = jnp.take_along_axis(
         tables, (positions // bs)[:, None], axis=1
     )[:, 0]
-    dest = jnp.where(active, page * bs + positions % bs, nb * bs)
+    dest = page * bs + positions % bs
+    if active is not None:
+        dest = jnp.where(active, dest, nb * bs)
     lengths = positions + 1
 
     def body(carry, xs):

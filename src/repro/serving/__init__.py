@@ -4,17 +4,23 @@ The production serving substrate around the MC# compressed model path
 (PMQ bit-bucketed experts, §3.2; OTP deterministic decode masks, §3.4):
 
 * :mod:`repro.serving.kvcache` — block-table paged KV pool (slots of
-  different lengths share one preallocated pool; no per-wave re-prefill),
+  different lengths share one preallocated pool; no per-wave re-prefill)
+  with on-demand page growth and a host-memory swap store for preempted
+  slots,
 * :mod:`repro.serving.scheduler` — admission queue + continuous batching
-  (finished requests free their blocks, queued ones join mid-flight),
+  (finished requests free their blocks, queued ones join mid-flight;
+  admission needs prompt-sized pages only, and under pool pressure the
+  youngest/least-progress request is preempted and re-queued at the head),
 * :mod:`repro.serving.engine` — jitted paged decode step + chunked
-  prefill over the model bundle,
+  prefill over the model bundle; grows block tables between jitted steps
+  and swap-restores or re-prefills preempted slots,
 * :mod:`repro.serving.metrics` — TTFT, per-token latency, queue depth,
   per-step expert-activation rate (the paper's >20% activation-reduction
-  claim as an observable serving metric).
+  claim as an observable serving metric), preemption/swap counters and
+  page-utilization gauges.
 """
 from .engine import EngineConfig, PagedServingEngine
-from .kvcache import BlockAllocator, PagedKVCache, PoolExhausted
+from .kvcache import BlockAllocator, PagedKVCache, PoolExhausted, SwappedKV
 from .metrics import ServingMetrics
 from .scheduler import Request, Scheduler
 
@@ -27,4 +33,5 @@ __all__ = [
     "Request",
     "Scheduler",
     "ServingMetrics",
+    "SwappedKV",
 ]

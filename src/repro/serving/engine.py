@@ -21,6 +21,19 @@ tree, including PMQ-compressed experts (``moe_ce`` buckets, paper §3.2)
 and OTP deterministic decode masks (§3.4 τ→0 argmax) when present; the
 per-step expert-activation rate lands in
 :class:`repro.serving.metrics.ServingMetrics`.
+
+**Dynamic page growth + preemption.** Admission reserves pages for the
+prompt only; before each decode step the engine grows every active
+slot's block table to cover its next write position (oldest admission
+first). When the pool runs dry, the youngest-admitted / least-progress
+request is preempted — its pages are swapped to a host backing store
+(``preempt_mode="swap"``) or dropped (``"recompute"``) — and it rejoins
+the FCFS queue at the head. On re-admission the engine swap-restores the
+pages or re-prefills ``prompt + out[:-1]``; greedy outputs are
+bit-identical either way for any pool that admits the largest single
+request (fuzzed in ``tests/test_serving_sim.py``). Block tables keep
+their static ``[max_slots, max_blocks_per_slot]`` shape throughout —
+growth only fills in rows between jitted steps, so nothing recompiles.
 """
 from __future__ import annotations
 
@@ -77,6 +90,15 @@ class EngineConfig:
     max_blocks_per_slot: int = 8
     prefill_chunk: int = 16
     use_otp: bool = True  # OTP decode masks when the model carries them
+    # Preempted-request restore path: "swap" moves victim KV pages to a
+    # host backing store and uploads them back at re-admission (bit-exact,
+    # costs PCIe/host bandwidth); "recompute" drops the pages and
+    # re-prefills prompt + generated-so-far (costs FLOPs, no host memory).
+    preempt_mode: str = "swap"
+    # True restores the PR-1 admission policy: reserve prompt + max_new
+    # pages up front so growth/preemption never trigger — the baseline leg
+    # of the --pool-blocks pressure sweeps.
+    reserve_full: bool = False
     # Serving must be batch-composition independent: a request's tokens
     # cannot change because of who it was co-scheduled with (continuous
     # batching reshuffles neighbors every step) nor how its prompt was
@@ -132,6 +154,11 @@ class PagedServingEngine:
                     max(cfg.moe_capacity_factor, cfg.num_experts)
                 ),
             )
+        if self.ecfg.preempt_mode not in ("swap", "recompute"):
+            raise ValueError(
+                f"preempt_mode must be 'swap' or 'recompute', "
+                f"got {self.ecfg.preempt_mode!r}"
+            )
         cfg = self.model_cfg
         self.params = params
         self.cache = PagedKVCache.create(
@@ -141,7 +168,7 @@ class PagedServingEngine:
             max_slots=self.ecfg.max_slots,
             max_blocks_per_slot=self.ecfg.max_blocks_per_slot,
         )
-        self.scheduler = Scheduler(self.cache)
+        self.scheduler = Scheduler(self.cache, reserve_full=self.ecfg.reserve_full)
         self.metrics = ServingMetrics()
         self.results: Dict[int, List[int]] = {}
         self._step_idx = 0
@@ -165,20 +192,35 @@ class PagedServingEngine:
 
     # -------------------------------------------------------------- loop
     def run(self) -> Dict[int, List[int]]:
-        """Drive admission + decode until queue and slots drain."""
-        while self.scheduler.has_work():
-            self._admit_all()
-            if not self.scheduler.active:
-                if self.scheduler.waiting:
-                    head = self.scheduler.waiting[0]
-                    raise PoolExhausted(
-                        f"request {head.rid} needs "
-                        f"{self.cache.blocks_needed(head.total_tokens)} blocks "
-                        f"but the whole pool has {self.cache.allocator.num_blocks}"
-                    )
-                break
-            self._decode_once()
+        """Drive admission + growth + decode until queue and slots drain."""
+        while self.step():
+            pass
         return dict(self.results)
+
+    def step(self) -> bool:
+        """One engine round: admit what fits, grow/preempt page tables,
+        decode every active slot one token. Returns whether work remains —
+        the simulation harness drives this directly to interleave
+        arrivals with decode steps.
+        """
+        if not self.scheduler.has_work():
+            return False
+        self._admit_all()
+        self._ensure_pages()
+        if not self.scheduler.active:
+            if self.scheduler.waiting:
+                # unreachable for pools that admit the largest request
+                # (submit guards that); kept as a thrash circuit-breaker
+                head = self.scheduler.waiting[0]
+                raise PoolExhausted(
+                    f"request {head.rid} needs "
+                    f"{self.cache.blocks_needed(head.context_tokens)} blocks "
+                    f"but cannot be admitted "
+                    f"({self.cache.allocator.num_free} free)"
+                )
+            return False
+        self._decode_once()
+        return self.scheduler.has_work()
 
     # --------------------------------------------------------- admission
     def _admit_all(self) -> None:
@@ -189,33 +231,93 @@ class PagedServingEngine:
                 return
             self.metrics.record_admission(
                 req.rid, req.slot, self._step_idx, active_before,
-                self.scheduler.queue_depth,
+                self.scheduler.queue_depth, resumed=req.preempt_count > 0,
             )
-            t0 = time.time()
-            self._prefill_request(req)
-            now = time.time()
-            self.metrics.record_ttft(now - req.arrival_s, now - t0)
-            self.results[req.rid] = req.out
+            if req.swapped is not None:  # swap-restore a preempted slot
+                self.metrics.record_swap_in(
+                    self.cache.swap_in(req.slot, req.swapped)
+                )
+                req.swapped = None
+            elif req.pos > 0:  # recompute-restore: re-prefill the context
+                self._prefill_request(req, resume=True)
+            else:
+                t0 = time.time()
+                self._prefill_request(req)
+                now = time.time()
+                self.metrics.record_ttft(now - req.arrival_s, now - t0)
+                self.results[req.rid] = req.out
             if req.done:  # max_new == 1: first token is the only token
                 self.scheduler.finish(req.slot)
                 self.metrics.record_release(req.rid, req.slot, self._step_idx)
 
-    def _prefill_request(self, req: Request) -> None:
-        p_len = len(req.prompt)
+    def _prefill_request(self, req: Request, resume: bool = False) -> None:
+        """Stream a context through chunked prefill into the slot's pages.
+
+        Fresh requests prefill the prompt and emit the first token
+        (TTFT). ``resume=True`` rebuilds a recompute-mode preempted slot:
+        the context is ``prompt + out[:-1]`` (everything already written
+        to KV before eviction) and the final chunk's logits are discarded
+        — they re-predict the already-known ``out[-1]``.
+        """
+        if resume:
+            seq = np.concatenate(
+                [req.prompt, np.asarray(req.out[:-1], np.int32)]
+            )
+            assert len(seq) == req.pos, (len(seq), req.pos)
+        else:
+            seq = req.prompt
+        p_len = len(seq)
         c = self.ecfg.prefill_chunk
         table_row = jnp.asarray(self.cache.block_tables[req.slot : req.slot + 1])
         logits = None
         for off in range(0, p_len, c):
             n = min(c, p_len - off)
             chunk = np.zeros((1, c), np.int32)
-            chunk[0, :n] = req.prompt[off : off + n]
+            chunk[0, :n] = seq[off : off + n]
             self.cache.k, self.cache.v, logits = self._prefill(
                 self.params, self.cache.k, self.cache.v,
                 jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row,
             )
+        if resume:
+            return
         jax.block_until_ready(logits)
         req.out.append(int(np.argmax(np.asarray(logits)[0, -1])))
         req.pos = p_len
+
+    # ---------------------------------------------------- growth/preempt
+    def _ensure_pages(self) -> None:
+        """Grow every active slot to cover its next decode write.
+
+        Oldest admission first, so the eldest request always wins the
+        page contest; on exhaustion the scheduler preempts the youngest
+        (possibly the grower itself — then it simply stops running and
+        rejoins at the queue head). ``reserve_full`` engines never need
+        growth: admission already covered ``prompt + max_new``.
+        """
+        swap = self.ecfg.preempt_mode == "swap"
+        for slot, req in sorted(
+            self.scheduler.active.items(), key=lambda kv: kv[1].admit_seq
+        ):
+            if slot not in self.scheduler.active:
+                continue  # preempted earlier in this pass
+            need = (
+                self.cache.blocks_needed(req.pos + 1)
+                - len(self.cache.slot_blocks[slot])
+            )
+            if need <= 0:
+                continue
+            while (
+                self.cache.allocator.num_free < need
+                and slot in self.scheduler.active
+            ):
+                vslot = self.scheduler.pick_victim()
+                vreq = self.scheduler.preempt(vslot, swap=swap)
+                self.metrics.record_preemption(
+                    vreq.rid, vslot, self._step_idx, self.ecfg.preempt_mode,
+                    swap_bytes=vreq.swapped.nbytes if vreq.swapped else 0,
+                )
+            if slot in self.scheduler.active:
+                self.cache.grow(slot, need)
 
     # ------------------------------------------------------------ decode
     def _decode_once(self) -> None:
@@ -236,7 +338,8 @@ class PagedServingEngine:
         jax.block_until_ready(logits)
         dt = time.time() - t0
         self.metrics.record_decode_step(
-            dt, int(active.sum()), float(act), self.scheduler.queue_depth
+            dt, int(active.sum()), float(act), self.scheduler.queue_depth,
+            page_utilization=self.cache.utilization,
         )
         logits_np = np.asarray(logits)
         for slot, req in list(self.scheduler.active.items()):

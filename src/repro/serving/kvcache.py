@@ -8,6 +8,14 @@ a finished request's pages return to the free list immediately and the
 next queued request reuses them, so pool sizing follows the *sum* of
 live context lengths instead of ``max_slots × max_len``.
 
+Slots grow **on demand**: admission reserves pages for the prompt only
+and :meth:`PagedKVCache.grow` appends pages one decode write at a time,
+so the pool can be sized well below the worst-case ``prompt + max_new``
+sum. Under pressure a victim slot's pages move to a host-memory backing
+store (:meth:`swap_out` → :class:`SwappedKV` → :meth:`swap_in`) — the
+device pages are freed immediately and the bit-exact KV is restored when
+the preempted request is re-admitted.
+
 Host-side bookkeeping (:class:`BlockAllocator`, slot tables) is plain
 python/numpy — it runs between jitted steps. Device-side gathers go
 through :func:`repro.kernels.ops.paged_attention`; writes compute a flat
@@ -22,7 +30,7 @@ from typing import Dict, List
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["BlockAllocator", "PagedKVCache", "PoolExhausted"]
+__all__ = ["BlockAllocator", "PagedKVCache", "PoolExhausted", "SwappedKV"]
 
 
 class PoolExhausted(RuntimeError):
@@ -50,9 +58,22 @@ class BlockAllocator:
     def num_free(self) -> int:
         return len(self._free)
 
+    @property
+    def allocated(self) -> frozenset:
+        return frozenset(self._allocated)
+
+    @property
+    def free_pages(self) -> tuple:
+        """Snapshot of the free list (for invariant checks)."""
+        return tuple(self._free)
+
     def alloc(self, n: int) -> List[int]:
+        """Return ``n`` distinct free pages; ``alloc(0) == []`` and is a
+        guaranteed no-op on allocator state."""
         if n < 0:
             raise ValueError(f"cannot allocate {n} blocks")
+        if n == 0:
+            return []
         if n > len(self._free):
             raise PoolExhausted(
                 f"requested {n} blocks, {len(self._free)} free "
@@ -68,6 +89,29 @@ class BlockAllocator:
                 raise ValueError(f"double free / unknown block {b}")
             self._allocated.remove(b)
             self._free.append(b)
+
+
+@dataclasses.dataclass
+class SwappedKV:
+    """Host-memory backing store of one preempted slot's KV pages.
+
+    Whole pages are saved (the partial tail page included), so
+    :meth:`PagedKVCache.swap_in` restores a bit-exact cache — a resumed
+    request's re-read KV is indistinguishable from never having been
+    preempted.
+    """
+
+    k: np.ndarray  # [L, n_pages, BS, Hkv, dh]
+    v: np.ndarray
+    n_tokens: int  # valid kv entries covered by the saved pages
+
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.k.nbytes + self.v.nbytes
 
 
 @dataclasses.dataclass
@@ -127,11 +171,13 @@ class PagedKVCache:
     def max_slot_tokens(self) -> int:
         return self.max_blocks_per_slot * self.block_size
 
-    def can_admit(self, total_tokens: int) -> bool:
+    def can_admit(self, total_tokens: int, headroom: int = 0) -> bool:
+        """``headroom`` pages are spoken for (pending growth of already
+        active slots) — admission may only use what's left above them."""
         n = self.blocks_needed(total_tokens)
         return (
             bool(self.free_slots)
-            and n <= self.allocator.num_free
+            and n <= self.allocator.num_free - headroom
             and n <= self.max_blocks_per_slot
         )
 
@@ -153,11 +199,101 @@ class PagedKVCache:
         self._tables_device = None
         return slot
 
+    def grow(self, slot: int, n: int) -> List[int]:
+        """Append ``n`` pages to a live slot (on-demand growth).
+
+        Raises :class:`PoolExhausted` — leaving the slot untouched — when
+        the pool is out of pages (the scheduler preempts a victim and
+        retries) or the slot would exceed ``max_blocks_per_slot``.
+        """
+        have = len(self.slot_blocks[slot])
+        if have + n > self.max_blocks_per_slot:
+            raise PoolExhausted(
+                f"slot {slot}: growing {have}+{n} blocks exceeds "
+                f"max_blocks_per_slot={self.max_blocks_per_slot}"
+            )
+        blocks = self.allocator.alloc(n)  # raises with state untouched
+        if not blocks:
+            return blocks
+        self.slot_blocks[slot].extend(blocks)
+        self.block_tables[slot, have : have + len(blocks)] = blocks
+        self._tables_device = None
+        return blocks
+
+    # ------------------------------------------------------------- swap
+    def swap_out(self, slot: int, n_tokens: int) -> SwappedKV:
+        """Move a victim slot's pages to host memory and free the slot.
+
+        Device→host copy of the slot's whole pages, then the pages and
+        the slot return to the free lists — the caller re-queues the
+        request and restores via :meth:`swap_in` at re-admission.
+        """
+        blocks = self.slot_blocks[slot]
+        idx = np.asarray(blocks, np.int32)
+        swapped = SwappedKV(
+            k=np.asarray(self.k[:, idx]),
+            v=np.asarray(self.v[:, idx]),
+            n_tokens=n_tokens,
+        )
+        self.release_slot(slot)
+        return swapped
+
+    def swap_in(self, slot: int, swapped: SwappedKV) -> int:
+        """Restore swapped pages into a freshly acquired slot.
+
+        The slot must already hold at least ``swapped.n_pages`` pages
+        (admission sizes it from the request's context length). Returns
+        the bytes uploaded (host→device) for the swap-traffic metric.
+        """
+        blocks = self.slot_blocks[slot][: swapped.n_pages]
+        if len(blocks) < swapped.n_pages:
+            raise ValueError(
+                f"slot {slot} holds {len(self.slot_blocks[slot])} pages, "
+                f"swap-in needs {swapped.n_pages}"
+            )
+        idx = jnp.asarray(np.asarray(blocks, np.int32))
+        self.k = self.k.at[:, idx].set(jnp.asarray(swapped.k, self.k.dtype))
+        self.v = self.v.at[:, idx].set(jnp.asarray(swapped.v, self.v.dtype))
+        return swapped.nbytes
+
     def release_slot(self, slot: int) -> None:
         self.allocator.free(self.slot_blocks.pop(slot))
         self.block_tables[slot] = 0
         self.free_slots.append(slot)
         self._tables_device = None
+
+    # -------------------------------------------------------- observability
+    @property
+    def utilization(self) -> float:
+        """Fraction of pool pages currently held by live slots."""
+        return 1.0 - self.allocator.num_free / self.allocator.num_blocks
+
+    def check_consistency(self) -> None:
+        """Assert the allocator/table invariants the simulation harness
+        fuzzes: no page owned by two live slots, free-count conservation,
+        block tables mirroring ``slot_blocks``, slot free-list disjoint
+        from live slots. Cheap (host-only) — callable after every step.
+        """
+        used = [b for bl in self.slot_blocks.values() for b in bl]
+        if len(used) != len(set(used)):
+            raise AssertionError("page owned by two live slots")
+        if set(used) != set(self.allocator.allocated):
+            raise AssertionError("slot_blocks out of sync with allocator")
+        free = self.allocator.free_pages
+        if len(free) != len(set(free)):
+            raise AssertionError("duplicate page in the free list")
+        if len(free) + len(used) != self.allocator.num_blocks:
+            raise AssertionError(
+                f"page conservation violated: {len(free)} free + "
+                f"{len(used)} used != {self.allocator.num_blocks}"
+            )
+        for slot, bl in self.slot_blocks.items():
+            if slot in self.free_slots:
+                raise AssertionError(f"live slot {slot} also in free_slots")
+            if len(bl) > self.max_blocks_per_slot:
+                raise AssertionError(f"slot {slot} over max_blocks_per_slot")
+            if list(self.block_tables[slot, : len(bl)]) != bl:
+                raise AssertionError(f"block table row {slot} != slot_blocks")
 
     def tables_device(self) -> jnp.ndarray:
         if self._tables_device is None:

@@ -1,5 +1,5 @@
 """Serving observability: TTFT, per-token latency, queue depth, expert
-activation.
+activation, preemption/swap traffic, page utilization.
 
 ``expert_activation`` is the fraction of the router's top-k expert slots
 actually executed per decode step — 1.0 without OTP; with the §3.4
@@ -7,7 +7,11 @@ deterministic decode masks the paper's >20% activation reduction shows
 up here as a sustained value ≲ 0.8. ``mid_flight_admissions`` counts
 requests admitted after decoding already started — the observable
 signature of continuous batching (a wave batcher would show 0: every
-admission happens at step 0 of its wave).
+admission happens at step 0 of its wave). ``preemptions`` / ``swap_*``
+count the dynamic-growth pressure path: victims evicted when the page
+pool ran dry, and the host↔device KV bytes moved to serve them.
+``page_utilization`` gauges how full the pool runs — the whole point of
+on-demand growth is pushing it toward 1.0 without corruption.
 """
 from __future__ import annotations
 
@@ -36,17 +40,22 @@ class ServingMetrics:
     active_per_step: List[int] = dataclasses.field(default_factory=list)
     queue_depth: List[int] = dataclasses.field(default_factory=list)
     expert_activation: List[float] = dataclasses.field(default_factory=list)
+    page_utilization: List[float] = dataclasses.field(default_factory=list)
     admissions: List[Dict] = dataclasses.field(default_factory=list)
     slot_releases: List[Dict] = dataclasses.field(default_factory=list)
+    preemptions: List[Dict] = dataclasses.field(default_factory=list)
+    swap_out_bytes: int = 0
+    swap_in_bytes: int = 0
 
     # ------------------------------------------------------------ record
     def record_admission(
         self, rid: int, slot: int, step_idx: int, active_before: int,
-        queue_depth: int,
+        queue_depth: int, resumed: bool = False,
     ) -> None:
         self.admissions.append(
             {"rid": rid, "slot": slot, "step": step_idx,
-             "active_before": active_before, "queue_depth": queue_depth}
+             "active_before": active_before, "queue_depth": queue_depth,
+             "resumed": resumed}
         )
 
     def record_ttft(self, seconds: float, prefill_seconds: float) -> None:
@@ -55,28 +64,64 @@ class ServingMetrics:
 
     def record_decode_step(
         self, seconds: float, n_active: int, expert_activation: float,
-        queue_depth: int,
+        queue_depth: int, page_utilization: float = 0.0,
     ) -> None:
         self.decode_step_s.append(seconds)
         self.active_per_step.append(n_active)
         self.expert_activation.append(expert_activation)
         self.queue_depth.append(queue_depth)
+        self.page_utilization.append(page_utilization)
 
     def record_release(self, rid: int, slot: int, step_idx: int) -> None:
         self.slot_releases.append({"rid": rid, "slot": slot, "step": step_idx})
 
+    def record_preemption(
+        self, rid: int, slot: int, step_idx: int, mode: str,
+        swap_bytes: int = 0,
+    ) -> None:
+        self.preemptions.append(
+            {"rid": rid, "slot": slot, "step": step_idx, "mode": mode,
+             "swap_bytes": swap_bytes}
+        )
+        self.swap_out_bytes += swap_bytes
+
+    def record_swap_in(self, nbytes: int) -> None:
+        self.swap_in_bytes += nbytes
+
     # ----------------------------------------------------------- derived
     @property
     def mid_flight_admissions(self) -> int:
-        """Admissions into a batch that was already decoding (turnover)."""
+        """Admissions into a batch that was already decoding (turnover).
+
+        Resumed re-admissions of preempted requests are excluded — they
+        are pressure artifacts, not the continuous-batching signature
+        this metric exists to surface.
+        """
         return sum(
             1 for a in self.admissions
             if a["step"] > 0 and a["active_before"] > 0
+            and not a.get("resumed")
         )
+
+    def counters(self) -> Dict:
+        """The wall-clock-free slice of the metrics: identical traces on
+        identical engines must produce *identical* counters (the
+        deterministic-replay test asserts dict equality on this)."""
+        return {
+            "admissions": list(self.admissions),
+            "slot_releases": list(self.slot_releases),
+            "preemptions": list(self.preemptions),
+            "swap_out_bytes": self.swap_out_bytes,
+            "swap_in_bytes": self.swap_in_bytes,
+            "active_per_step": list(self.active_per_step),
+            "queue_depth": list(self.queue_depth),
+            "page_utilization": list(self.page_utilization),
+            "generated_tokens": int(np.sum(self.active_per_step)) if self.active_per_step else 0,
+        }
 
     def summary(self) -> Dict[str, float]:
         total_decode = float(np.sum(self.decode_step_s)) if self.decode_step_s else 0.0
-        gen_tokens = int(np.sum(self.active_per_step))
+        gen_tokens = int(np.sum(self.active_per_step)) if self.active_per_step else 0
         return {
             "requests": len(self.ttft_s),
             "ttft_mean_s": _mean(self.ttft_s),
@@ -93,6 +138,12 @@ class ServingMetrics:
             "expert_activation_mean": _mean(self.expert_activation),
             "mid_flight_admissions": self.mid_flight_admissions,
             "slot_releases": len(self.slot_releases),
+            "preemptions": len(self.preemptions),
+            "swap_out_bytes": int(self.swap_out_bytes),
+            "swap_in_bytes": int(self.swap_in_bytes),
+            "swap_bytes": int(self.swap_out_bytes + self.swap_in_bytes),
+            "page_util_mean": _mean(self.page_utilization),
+            "page_util_p95": _p95(self.page_utilization),
         }
 
     def to_json(self) -> str:

@@ -4,10 +4,19 @@ No wave barrier and no dummy padding (contrast
 :class:`repro.launch.serve.BatchedServer`): a request is admitted the
 moment a slot *and* enough KV pages are free, joins the running batch at
 the next decode step, and frees its pages the step it finishes — the
-engine never waits for the slowest request of a wave. Pages are reserved
-up front for ``prompt + max_new`` tokens so a running request can never
-hit pool exhaustion mid-flight (dynamic page growth + preemption is a
-follow-on, see ROADMAP "Serving").
+engine never waits for the slowest request of a wave.
+
+Admission only needs **prompt-sized** pages (``reserve_full=False``, the
+default): decode pages are granted on demand via
+:meth:`repro.serving.kvcache.PagedKVCache.grow`, so the pool can be
+sized far below the worst-case ``Σ (prompt + max_new)``. When growth
+hits an empty free list the engine **preempts** a victim instead of
+failing: the youngest-admitted / least-progress request is swapped out
+(or dropped for re-prefill) and re-queued **at the head** of the FCFS
+queue, so it is the first to reclaim freed pages. ``reserve_full=True``
+restores the PR-1 behavior (pages for ``prompt + max_new`` reserved at
+admission, growth and preemption never trigger) — the conservative
+baseline the ``--pool-blocks`` benchmark sweep compares against.
 """
 from __future__ import annotations
 
@@ -17,7 +26,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
-from .kvcache import PagedKVCache
+from .kvcache import PagedKVCache, PoolExhausted, SwappedKV
 
 __all__ = ["Request", "Scheduler"]
 
@@ -33,12 +42,21 @@ class Request:
     pos: int = 0  # next kv write position (= current logical length)
     submit_step: int = -1
     admit_step: int = -1
+    admit_seq: int = -1  # monotone admission counter (victim ordering)
+    preempt_count: int = 0
+    swapped: Optional[SwappedKV] = None  # host KV while preempted (swap mode)
     arrival_s: float = 0.0  # wall-clock submit time (TTFT anchor)
 
     @property
     def total_tokens(self) -> int:
         """KV entries the request can ever write (prompt + decode)."""
         return len(self.prompt) + self.max_new
+
+    @property
+    def context_tokens(self) -> int:
+        """KV entries needed at (re-)admission: the prompt for a fresh
+        request, the full generated-so-far context for a preempted one."""
+        return self.pos if self.pos > 0 else len(self.prompt)
 
     @property
     def done(self) -> bool:
@@ -48,10 +66,12 @@ class Request:
 class Scheduler:
     """Pure host-side bookkeeping; the engine drives it between steps."""
 
-    def __init__(self, cache: PagedKVCache):
+    def __init__(self, cache: PagedKVCache, *, reserve_full: bool = False):
         self.cache = cache
+        self.reserve_full = reserve_full
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
+        self._admit_seq = 0
 
     # ---------------------------------------------------------- queue
     def submit(self, req: Request, step_idx: int = 0) -> None:
@@ -65,20 +85,91 @@ class Scheduler:
                 f"per-slot maximum {self.cache.max_slot_tokens()} "
                 f"(max_blocks_per_slot × block_size)"
             )
+        if self.cache.blocks_needed(req.total_tokens) > self.cache.allocator.num_blocks:
+            # growth + preemption guarantee completion only for pools that
+            # admit the largest single request; reject the rest up front
+            # instead of thrashing (admit → grow → self-preempt forever)
+            raise PoolExhausted(
+                f"request {req.rid} needs "
+                f"{self.cache.blocks_needed(req.total_tokens)} blocks but the "
+                f"whole pool has {self.cache.allocator.num_blocks}"
+            )
         req.submit_step = step_idx
         self.waiting.append(req)
 
+    def growth_reserve(self) -> int:
+        """Pages the current actives need for their next decode write.
+
+        Admission leaves this many pages untouched so a new request never
+        starves a running one into preempting it right back out — an
+        admitted request is guaranteed to survive ≥ 1 decode step.
+        """
+        if self.reserve_full:
+            return 0  # full reservation: actives never grow
+        need = 0
+        for slot, req in self.active.items():
+            need += max(
+                0,
+                self.cache.blocks_needed(req.pos + 1)
+                - len(self.cache.slot_blocks[slot]),
+            )
+        return need
+
     def try_admit(self, step_idx: int) -> Optional[Request]:
-        """FCFS admission: head of queue starts iff slot + pages free."""
+        """FCFS admission: head of queue starts iff slot + pages free.
+
+        Fresh requests need pages for the prompt **plus its first decode
+        write** (``context + 1`` tokens — one extra page only when the
+        context ends exactly on a block boundary); preempted requests the
+        same over their accumulated context; ``reserve_full`` needs
+        ``prompt + max_new`` either way. Pages already promised to active
+        slots' growth (:meth:`growth_reserve`) are off limits.
+        """
         if not self.waiting:
             return None
         req = self.waiting[0]
-        if not self.cache.can_admit(req.total_tokens):
+        tokens = (
+            req.total_tokens if self.reserve_full else req.context_tokens + 1
+        )
+        if not self.cache.can_admit(tokens, headroom=self.growth_reserve()):
             return None
         self.waiting.popleft()
-        req.slot = self.cache.acquire_slot(req.total_tokens)
+        req.slot = self.cache.acquire_slot(tokens)
         req.admit_step = step_idx
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
         self.active[req.slot] = req
+        return req
+
+    # ------------------------------------------------------- preemption
+    def pick_victim(self) -> int:
+        """Deterministic victim: the youngest admission — the request
+        that has had the least time to make progress, so eviction wastes
+        the least work. ``admit_seq`` is unique and monotone, so the
+        choice needs no tiebreaker and the oldest-admitted active request
+        is never victimized while others run — the page contest always
+        has a winner and the engine cannot livelock.
+        """
+        slot, _ = max(self.active.items(), key=lambda kv: kv[1].admit_seq)
+        return slot
+
+    def preempt(self, slot: int, *, swap: bool) -> Request:
+        """Evict one active request and re-queue it at the FCFS head.
+
+        ``swap=True`` moves its KV pages to the host backing store
+        (bit-exact restore at re-admission); ``swap=False`` drops them —
+        the engine re-prefills ``prompt + out[:-1]`` on resume. Either
+        way the pages and the slot are free when this returns.
+        """
+        req = self.active.pop(slot)
+        if swap:
+            req.swapped = self.cache.swap_out(slot, req.pos)
+        else:
+            req.swapped = None
+            self.cache.release_slot(slot)
+        req.slot = -1
+        req.preempt_count += 1
+        self.waiting.appendleft(req)
         return req
 
     def finish(self, slot: int) -> Request:

@@ -1,8 +1,37 @@
 """Pytest bootstrap: make tests/ importable regardless of import mode
-(``_hypothesis_compat`` is shared by the property-test modules)."""
+(``_hypothesis_compat`` is shared by the property-test modules), and
+register hypothesis profiles sized for CPU runners.
+
+Profiles (selected via ``HYPOTHESIS_PROFILE``, default ``dev``):
+
+* ``dev`` — a handful of examples; keeps the local tier-1 loop fast.
+* ``ci`` — the Actions job's budget: more examples, no deadline (CPU
+  runners jit-compile on the first example, which would trip any
+  per-example deadline).
+"""
+import os
 import pathlib
 import sys
 
 _HERE = str(pathlib.Path(__file__).resolve().parent)
 if _HERE not in sys.path:
     sys.path.insert(0, _HERE)
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    _COMMON = dict(
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    # dev: fixed examples for a fast, reproducible local loop; ci: fresh
+    # draws every run — replaying one frozen example set forever would
+    # make the "CI fuzzes the state machine" claim hollow (failures print
+    # a @reproduce_failure blob for replay)
+    settings.register_profile("dev", max_examples=5, derandomize=True,
+                              **_COMMON)
+    settings.register_profile("ci", max_examples=25, print_blob=True,
+                              **_COMMON)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:  # property tests skip via _hypothesis_compat
+    pass

@@ -65,6 +65,14 @@ def test_allocator_alloc_free_roundtrip():
     assert a.num_free == 8
 
 
+def test_allocator_alloc_zero_is_stateless():
+    a = BlockAllocator(4)
+    held = a.alloc(2)
+    assert a.alloc(0) == []
+    assert a.num_free == 2
+    assert a.allocated == frozenset(held)
+
+
 def test_allocator_exhaustion_raises_and_leaves_state():
     a = BlockAllocator(4)
     a.alloc(3)
@@ -276,3 +284,151 @@ def test_pool_too_small_raises(model):
     prompt = np.zeros(12, np.int32)  # needs 4 blocks, pool has 2
     with pytest.raises(PoolExhausted):
         eng.serve([Request(rid=0, prompt=prompt, max_new=4)])
+
+
+# ------------------------------------------- dynamic growth + preemption
+def test_kvcache_grow_extends_table():
+    cache = PagedKVCache.create(
+        TINY_MOE, num_blocks=8, block_size=4, max_slots=2,
+        max_blocks_per_slot=4,
+    )
+    slot = cache.acquire_slot(5)  # 2 blocks
+    assert cache.grow(slot, 0) == []
+    new = cache.grow(slot, 1)
+    assert len(new) == 1 and cache.allocator.num_free == 5
+    assert list(cache.block_tables[slot, :3]) == cache.slot_blocks[slot]
+    with pytest.raises(PoolExhausted):
+        cache.grow(slot, 2)  # 3 + 2 > max_blocks_per_slot
+    assert cache.allocator.num_free == 5  # failed grow took nothing
+    cache.check_consistency()
+    cache.release_slot(slot)
+
+
+def test_swap_roundtrip_preserves_kv_bits():
+    """swap_out → pages recycled by another tenant → swap_in restores the
+    preempted slot's KV bit-for-bit into fresh pages."""
+    rng = np.random.default_rng(0)
+    cache = PagedKVCache.create(
+        TINY_MOE, num_blocks=6, block_size=4, max_slots=2,
+        max_blocks_per_slot=3,
+    )
+    slot = cache.acquire_slot(10)  # 3 blocks
+    blocks = list(cache.slot_blocks[slot])
+    fill = rng.normal(size=(TINY_MOE.num_layers, 3, 4, 2, 16)).astype(np.float32)
+    cache.k = cache.k.at[:, np.asarray(blocks)].set(jnp.asarray(fill))
+    cache.v = cache.v.at[:, np.asarray(blocks)].set(jnp.asarray(2 * fill))
+    swapped = cache.swap_out(slot, 10)
+    assert swapped.n_pages == 3 and swapped.n_tokens == 10
+    assert cache.allocator.num_free == 6  # device pages freed immediately
+    # another tenant scribbles over the recycled pages
+    other = cache.acquire_slot(12)
+    cache.k = cache.k.at[:, np.asarray(cache.slot_blocks[other])].set(-1.0)
+    cache.release_slot(other)
+    slot2 = cache.acquire_slot(10)
+    nbytes = cache.swap_in(slot2, swapped)
+    assert nbytes == swapped.nbytes
+    got = np.asarray(cache.k[:, np.asarray(cache.slot_blocks[slot2])])
+    np.testing.assert_array_equal(got, fill)
+    got_v = np.asarray(cache.v[:, np.asarray(cache.slot_blocks[slot2])])
+    np.testing.assert_array_equal(got_v, 2 * fill)
+
+
+def test_grow_on_exhaustion_preempts_instead_of_raising(model):
+    """A pool far below Σ(prompt+max_new) — which PR-1 admission would
+    have rejected mid-run — now finishes every request by preempting on
+    page exhaustion instead of raising PoolExhausted."""
+    cfg, params = model
+    reqs = [
+        Request(rid=i, prompt=np.full(3, 5 + i, np.int32), max_new=12)
+        for i in range(3)
+    ]
+    demand = sum(-(-(3 + 12) // ECFG.block_size) for _ in reqs)  # 12 blocks
+    ecfg = dataclasses.replace(
+        ECFG, max_slots=3, num_blocks=demand // 2, max_blocks_per_slot=4,
+        preempt_mode="recompute",
+    )
+    eng = PagedServingEngine(cfg, params, ecfg)
+    out = eng.serve(reqs)
+    m = eng.metrics.summary()
+    assert m["preemptions"] >= 1
+    assert all(len(out[r.rid]) == r.max_new for r in reqs)
+    assert eng.cache.allocator.num_free == ecfg.num_blocks
+
+
+@pytest.mark.parametrize("preempt_mode", ["swap", "recompute"])
+def test_preempted_resume_matches_never_preempted(model, preempt_mode):
+    """A preempted-then-resumed request re-reads KV identical to a run
+    that was never preempted: greedy tokens agree request by request."""
+    cfg, params = model
+    def mk():
+        return [
+            Request(rid=i, prompt=np.asarray([7 + i, 3, 11 + i], np.int32),
+                    max_new=10)
+            for i in range(3)
+        ]
+    roomy = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=3, num_blocks=16,
+                            max_blocks_per_slot=4),
+    )
+    baseline = roomy.serve(mk())
+    assert roomy.metrics.summary()["preemptions"] == 0
+    tight = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=3, num_blocks=6,
+                            max_blocks_per_slot=4, preempt_mode=preempt_mode),
+    )
+    pressured = tight.serve(mk())
+    assert tight.metrics.summary()["preemptions"] >= 1
+    assert pressured == baseline
+
+
+def test_reserve_full_never_preempts(model):
+    """The PR-1 baseline policy: full up-front reservation serializes
+    under a tight pool but never grows, swaps, or preempts."""
+    cfg, params = model
+    reqs = [
+        Request(rid=i, prompt=np.full(4, 2 + i, np.int32), max_new=8)
+        for i in range(3)
+    ]
+    ecfg = dataclasses.replace(
+        ECFG, max_slots=3, num_blocks=6, max_blocks_per_slot=4,
+        reserve_full=True,
+    )
+    eng = PagedServingEngine(cfg, params, ecfg)
+    out = eng.serve(reqs)
+    m = eng.metrics.summary()
+    assert m["preemptions"] == 0 and m["swap_bytes"] == 0
+    assert all(len(out[r.rid]) == r.max_new for r in reqs)
+
+
+# ---------------------------------------------------------- metrics unit
+def test_metrics_new_counters_and_json_roundtrip():
+    import json
+
+    from repro.serving import ServingMetrics
+
+    m = ServingMetrics()
+    m.record_admission(0, 0, 0, 0, 0)
+    # a resumed re-admission mid-decode is a pressure artifact, not a
+    # continuous-batching admission
+    m.record_admission(1, 1, 3, 1, 0, resumed=True)
+    assert m.mid_flight_admissions == 0
+    m.record_ttft(0.5, 0.4)
+    m.record_decode_step(0.01, 2, 1.0, 1, page_utilization=0.5)
+    m.record_decode_step(0.01, 1, 1.0, 0, page_utilization=1.0)
+    m.record_preemption(0, 0, 1, "swap", swap_bytes=1024)
+    m.record_swap_in(1024)
+    m.record_release(0, 0, 2)
+    s = m.summary()
+    assert s["preemptions"] == 1
+    assert s["swap_out_bytes"] == 1024 and s["swap_in_bytes"] == 1024
+    assert s["swap_bytes"] == 2048
+    assert s["page_util_mean"] == pytest.approx(0.75)
+    assert s["page_util_p95"] == pytest.approx(np.percentile([0.5, 1.0], 95))
+    assert json.loads(m.to_json()) == s  # round-trip: every value JSON-safe
+    # recompute-mode preemptions move no bytes
+    m2 = ServingMetrics()
+    m2.record_preemption(1, 1, 0, "recompute", swap_bytes=0)
+    assert m2.summary()["swap_bytes"] == 0
+    assert m2.counters()["preemptions"][0]["mode"] == "recompute"
