@@ -19,6 +19,16 @@ argument (§3.2/§3.4) applied to the KV budget:
 
     PYTHONPATH=src python -m benchmarks.serving_latency --pool-blocks 12 20 32
 
+The ``--resident-experts`` sweep applies the same squeeze to the
+*expert* budget: PMQ buckets are host-offloaded
+(repro.serving.offload) and the same trace is served at shrinking
+per-layer resident-slot budgets, reporting throughput, prefetch hit
+rate, upload traffic and the device-resident expert bytes each budget
+buys. The fp leg (all experts resident, no offload — the only option
+for bf16 weights) anchors the comparison:
+
+    PYTHONPATH=src python -m benchmarks.serving_latency --resident-experts 8 6 4
+
 The compressed engine serves the *stacked* compressed tree: the PMQ plan
 is made layer-uniform (every layer gets layer 0's bit vector) so all
 layers share one bucket structure and ride the decode scan — the same
@@ -29,12 +39,12 @@ Emits the same CSV row shape as memory_speed: ``name,us_per_call,derived``.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import pipeline
-from repro.models import transformer as tf
 from repro.serving import EngineConfig, PagedServingEngine, Request
 
 from .common import calibration, csv_row, trained_model
@@ -45,15 +55,8 @@ BLOCK_SIZE = 16
 
 def _stacked_compressed_params(cfg, params, calib):
     """Compress with a layer-uniform PMQ plan and restack for the scan."""
-    eps = pipeline.compute_eps(params, calib, cfg, eps_tokens=128)
-    plan = pipeline.run_pmq(params, calib, cfg, target_avg_bits=2.05, eps=eps)
-    plan.bits = [plan.bits[0]] * cfg.num_layers  # uniform bucket structure
-    blocks_c, top = pipeline.compress_model(
-        params, calib, plan, cfg, use_gptq=False
-    )
-    out = dict(top)
-    out["blocks"] = tf.restack_blocks(blocks_c)
-    return out, plan.avg_bits
+    return pipeline.compress_for_serving(params, calib, cfg,
+                                         target_avg_bits=2.05)
 
 
 def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
@@ -135,6 +138,75 @@ def pool_sweep(pool_blocks: Optional[Sequence[int]] = None, *,
     return rows
 
 
+# ------------------------------------------------ expert residency sweep
+def resident_sweep(budgets: Optional[Sequence[int]] = None, *,
+                   quick: bool = False, n_requests: int = 6, slots: int = 3,
+                   compressed=None):
+    """Serve one trace at shrinking device expert budgets, fp vs PMQ.
+
+    The fp leg serves bf16 experts (necessarily all-resident) once; the
+    PMQ leg serves the same trace per budget with cold bucket rows
+    offloaded to host memory. Budgets below a step's working set are
+    honored best-effort: the manager grows the resident buffer rather
+    than serving wrong tokens, and the ``grows`` field reports how often
+    the configured budget was too small. ``compressed`` optionally reuses
+    an already-built ``(params_c, avg_bits)`` (run() passes its own).
+    """
+    cfg, params = trained_model()
+    if compressed is None:
+        calib = calibration(cfg, params)
+        compressed = _stacked_compressed_params(cfg, params, calib)
+    params_c, avg_bits = compressed
+    num_slots = params_c["blocks"]["moe_ce"].num_slots
+    if budgets is None:
+        fracs = (1.0, 0.5) if quick else (1.0, 0.75, 0.5)
+        budgets = sorted(
+            {max(1, int(round(num_slots * f))) for f in fracs}, reverse=True
+        )
+    max_new = 8 if quick else 16
+    rng = np.random.default_rng(3)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=PROMPT_LEN).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    ecfg = EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
+                        num_blocks=slots * mb, max_blocks_per_slot=mb,
+                        prefill_chunk=BLOCK_SIZE)
+    rows = []
+
+    def serve(prm, label, engine_cfg):
+        engine = PagedServingEngine(cfg, prm, engine_cfg)
+        engine.serve([
+            Request(rid=i, prompt=prompts[i], max_new=max_new)
+            for i in range(n_requests)
+        ])
+        m = engine.metrics.summary()
+        # fp serves all-resident: its hit rate is the trivial 1.0 anchor
+        extra = f";hit_rate={m['expert_hit_rate']:.2f}"
+        if engine.offload is not None:
+            extra += (
+                f";upload_mb={m['expert_upload_bytes']/2**20:.3f}"
+                f";resident_b={m['expert_resident_bytes_last']}"
+                f";grows={engine.offload.grows}"
+            )
+        rows.append(csv_row(
+            f"serving/{label}",
+            m["decode_step_mean_s"] * 1e6,
+            f"tps={m['tokens_per_s']:.1f};"
+            f"ttft_p95_ms={m['ttft_p95_s']*1e3:.1f}" + extra,
+        ))
+
+    serve(params, "resident_fp_all", ecfg)
+    for budget in budgets:
+        serve(
+            params_c, f"resident_pmq{budget}of{num_slots}",
+            dataclasses.replace(ecfg, resident_experts=int(budget)),
+        )
+    print(f"  pmq avg bits {avg_bits:.2f}; num_slots {num_slots}")
+    return rows
+
+
 def run(quick: bool = False):
     print("== serving_latency (paged engine, fp vs PMQ) ==")
     cfg, params = trained_model()
@@ -164,6 +236,9 @@ def run(quick: bool = False):
     print("== serving_latency (pool pressure: growth+preempt vs reserve) ==")
     rows += pool_sweep(quick=quick, n_requests=4 if quick else 8,
                        slots=3 if quick else 6)
+    print("== serving_latency (expert residency: offload vs all-resident) ==")
+    rows += resident_sweep(quick=quick, n_requests=4 if quick else 6,
+                           slots=3, compressed=(params_c, avg_bits))
     return rows
 
 
@@ -175,12 +250,20 @@ def main() -> None:
                    help="explicit pool sizes (pages) for the pressure "
                         "sweep; default derives ~3 sizes from the trace's "
                         "worst-case demand")
+    p.add_argument("--resident-experts", type=int, nargs="+", default=None,
+                   metavar="N",
+                   help="explicit per-layer expert-slot budgets for the "
+                        "residency sweep (fp + PMQ legs); default derives "
+                        "~3 budgets from the compressed model's slot count")
     args = p.parse_args()
     if args.pool_blocks is not None:
         pool_sweep(args.pool_blocks, quick=args.quick,
                    n_requests=4 if args.quick else 8,
                    slots=3 if args.quick else 6)
-    else:
+    if args.resident_experts is not None:
+        resident_sweep(args.resident_experts, quick=args.quick,
+                       n_requests=4 if args.quick else 6, slots=3)
+    if args.pool_blocks is None and args.resident_experts is None:
         run(quick=args.quick)
 
 

@@ -13,10 +13,23 @@ jnp path below is its oracle-equivalent and the dry-run path.
 The router remap (original expert id → permuted slot) rides the routing
 top-k output, so the rest of the MoE layer (capacity dispatch, OTP
 masking, combine) is unchanged.
+
+**Host-offloaded residency** (serving): a bucket may be split into a
+*resident* device partition of ``resident_rows[i]`` expert rows plus a
+host backing store (:mod:`repro.serving.offload`). ``resident_map[bᵢ]``
+maps every bucket slot to a row of the resident buffer; the compute
+gathers rows back to the full ``[count, ...]`` layout, so the math —
+and the bits — are identical to the all-resident path for every slot
+whose resident row holds its true weights. The pytree structure is a
+function of the *budget* only (array shapes + map shape), never of
+*which* experts are resident, so uploads between steps never retrace
+the jitted serving programs.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -49,7 +62,17 @@ class BucketMeta:
 
 @dataclasses.dataclass
 class CompressedExperts:
-    """Static metadata + array pytree for one layer's quantized experts."""
+    """Static metadata + array pytree for one layer's quantized experts.
+
+    All-resident (the default): ``arrays[bᵢ]`` leaves span the bucket's
+    full ``[count, ...]`` expert dim and ``resident_map is None``.
+
+    Host-offloaded (serving): ``arrays[bᵢ]`` leaves span only
+    ``resident_rows[i]`` device rows and ``resident_map[bᵢ]`` ([count]
+    int32, or [L, count] stacked) maps each bucket slot to its resident
+    row — non-resident slots point at row 0 and must not receive routed
+    tokens (the serving engine's miss/replay loop guarantees that).
+    """
 
     meta: Tuple[BucketMeta, ...]  # static
     slot_of_expert: jnp.ndarray  # [E] original id -> permuted slot
@@ -58,9 +81,12 @@ class CompressedExperts:
     group: int
     d_model: int
     d_ff: int
+    resident_map: Optional[Dict] = None  # {bucket_i: [count] int32 -> row}
+    resident_rows: Optional[Tuple[int, ...]] = None  # static, per bucket
 
     @property
     def weight_bytes(self) -> int:
+        """Device-resident quantized bytes (= total bytes when all-resident)."""
         tot = 0
         for i, m in enumerate(self.meta):
             for w in ("w_gate", "w_up", "w_down"):
@@ -79,12 +105,14 @@ def _flatten(xs):
 jax.tree_util.register_pytree_node(
     CompressedExperts,
     lambda ce: (
-        (ce.slot_of_expert, ce.arrays),
-        (ce.meta, ce.num_slots, ce.group, ce.d_model, ce.d_ff),
+        (ce.slot_of_expert, ce.arrays, ce.resident_map),
+        (ce.meta, ce.num_slots, ce.group, ce.d_model, ce.d_ff,
+         ce.resident_rows),
     ),
     lambda aux, ch: CompressedExperts(
         meta=aux[0], slot_of_expert=ch[0], arrays=ch[1], num_slots=aux[1],
         group=aux[2], d_model=aux[3], d_ff=aux[4],
+        resident_map=ch[2], resident_rows=aux[5],
     ),
 )
 
@@ -196,6 +224,26 @@ def _bmm_ep(x3, wd, bits: int, group: int):
     return jax.vmap(fn)(x3, packed, wd["scale"], wd["zero"])
 
 
+def _ep_fallback(count: int, ep: int) -> None:
+    """A bucket whose padded expert count does not divide the runtime
+    model-axis extent silently loses expert parallelism (the scan runs
+    every expert on every shard). That only happens when the bucket was
+    built with a different ``ep`` than the mesh it runs under — loud by
+    default, fatal under ``REPRO_STRICT_EP=1``.
+    """
+    msg = (
+        f"compressed_expert_ffn: bucket of {count} padded experts is not "
+        f"divisible by the model-axis size {ep}; falling back to ep=1 "
+        f"(expert parallelism disabled for this bucket). Rebuild the "
+        f"buckets with build_compressed_experts(..., ep={ep}) to restore "
+        f"EP, or set REPRO_STRICT_EP=1 to make this fatal."
+    )
+    strict = os.environ.get("REPRO_STRICT_EP", "0").strip().lower()
+    if strict not in ("", "0", "false", "off", "no"):
+        raise AssertionError(msg)
+    warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
 def compressed_expert_ffn(
     ce: CompressedExperts, xp: jnp.ndarray, cap: int
 ) -> jnp.ndarray:
@@ -208,13 +256,23 @@ def compressed_expert_ffn(
     shard concurrently, so only one [K, N] dequantized tile exists per
     shard at a time. The capacity dim additionally shards over ``data``
     ("moe_elcd") so dispatch buffers never replicate.
+
+    With a resident partition (``ce.resident_map``) the bucket's packed
+    leaves are first gathered from the ``[resident_rows, ...]`` device
+    buffer back to the full ``[count, ...]`` layout — bit-exact for every
+    slot whose resident row holds its true weights (non-resident slots
+    read row 0, which is only sound because they carry no routed tokens).
     """
     d = ce.d_model
     ys = []
     for i, m in enumerate(ce.meta):
         b = ce.arrays[f"b{i}"]
+        if ce.resident_map is not None:
+            rmap = ce.resident_map[f"b{i}"]
+            b = jax.tree.map(lambda a: jnp.take(a, rmap, axis=0), b)
         ep = model_axis_size()
         if m.count % ep:
+            _ep_fallback(m.count, ep)
             ep = 1
         local = m.count // ep
         xb = jax.lax.slice_in_dim(xp, m.start * cap, (m.start + m.count) * cap)
@@ -252,16 +310,23 @@ def compressed_moe_layer(
     otp_rng=None,
     otp_tau: float = 1.0,
     capacity_factor: Optional[float] = None,
+    count_weight: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Dict]:
     """MoE block with PMQ experts (+ optional OTP pruning).
 
     ``p`` carries the (full-precision or 4-bit) router and shared experts.
     Returns ``(y [B,S,D], info)`` where info holds the OTP mask & router
     outputs (for distillation / calibration). ``info["mask_l1"]`` is the
-    Eq. 14 ℓ1 statistic in both code paths.
+    Eq. 14 ℓ1 statistic in both code paths. ``info["slot_counts"]`` is
+    the per-permuted-slot count of dispatched (token, choice) pairs after
+    OTP masking — the router statistic the serving offload prefetcher
+    consumes; ``count_weight`` ([T], optional) zeroes the contribution of
+    padding/inactive tokens so the counts reflect real traffic only.
 
     Inside a mesh context the routed region runs the shard_map EP path
-    (zero all-to-all — see :mod:`repro.parallel.ep_shardmap`).
+    (zero all-to-all — see :mod:`repro.parallel.ep_shardmap`); a
+    host-offloaded ``ce`` (``resident_map`` set) always takes the local
+    path, which performs the resident-row gather.
     """
     from ..models.moe import ep_shardmap_ok
     from ..parallel.sharding import current_mesh
@@ -269,6 +334,7 @@ def compressed_moe_layer(
     mesh = current_mesh()
     if (
         mesh is not None
+        and ce.resident_map is None
         and ep_shardmap_ok(cfg, mesh, x, ce.num_slots)
         and all(m.count % mesh.shape["model"] == 0 for m in ce.meta)
     ):
@@ -285,6 +351,7 @@ def compressed_moe_layer(
         info = {
             "probs": None, "idx": None, "gates": None, "mask": None,
             "mask_l1": mask_l1 if otp_params is not None else None,
+            "slot_counts": None,
         }
         return y, info
     b, s, d = x.shape
@@ -299,6 +366,18 @@ def compressed_moe_layer(
         )
     # remap original expert ids -> permuted slots (dummy pads never hit)
     slots = ce.slot_of_expert[idx]
+    # per-slot dispatch counts (post-mask, padding-weighted): the serving
+    # offload manager's router statistic. The drop bucket (row num_slots)
+    # absorbs masked / padded picks and is discarded.
+    eff = slots.reshape(-1)
+    if mask is not None:
+        eff = jnp.where(mask.reshape(-1) > 0, eff, ce.num_slots)
+    if count_weight is not None:
+        cw = jnp.repeat(count_weight.reshape(-1).astype(bool), k)
+        eff = jnp.where(cw, eff, ce.num_slots)
+    slot_counts = (
+        jnp.zeros((ce.num_slots + 1,), jnp.int32).at[eff].add(1)[:-1]
+    )
     cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
     cap = max(8, ((int(cf * t * k / e) + 7) // 8) * 8)
     xp, dest, valid, gflat = capacity_dispatch(
@@ -312,5 +391,6 @@ def compressed_moe_layer(
     info = {
         "probs": probs, "idx": idx, "gates": gates, "mask": mask,
         "mask_l1": mask.mean() if mask is not None else None,
+        "slot_counts": slot_counts,
     }
     return y.reshape(b, s, d), info

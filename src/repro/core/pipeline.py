@@ -46,6 +46,7 @@ __all__ = [
     "compute_eps",
     "run_pmq",
     "compress_model",
+    "compress_for_serving",
     "compressed_forward",
     "synthetic_stacked_compressed",
     "quantize_tree_uniform",
@@ -239,6 +240,28 @@ def compress_model(
     if "unembed" in params:
         top["unembed"] = params["unembed"]
     return blocks_c, top
+
+
+def compress_for_serving(
+    params, calib: CalibrationResult, cfg, *,
+    target_avg_bits: float = 2.05, eps_tokens: int = 128,
+) -> Tuple[Dict, float]:
+    """Layer-uniform PMQ compression in the *stacked* serving layout.
+
+    The PMQ plan is made layer-uniform (every layer gets layer 0's bit
+    vector) so all layers share one bucket structure and ride the decode
+    scan — the layout ``repro.serving`` and the serving benchmarks
+    consume. Returns ``(params_compressed, avg_bits)`` where the tree
+    carries ``blocks`` restacked for :mod:`repro.models.transformer`.
+    """
+    eps = compute_eps(params, calib, cfg, eps_tokens=eps_tokens)
+    plan = run_pmq(params, calib, cfg, target_avg_bits=target_avg_bits,
+                   eps=eps)
+    plan.bits = [plan.bits[0]] * cfg.num_layers
+    blocks_c, top = compress_model(params, calib, plan, cfg, use_gptq=False)
+    out = dict(top)
+    out["blocks"] = tf.restack_blocks(blocks_c)
+    return out, plan.avg_bits
 
 
 def quantize_tree_uniform(tree, bits: int, group: int):

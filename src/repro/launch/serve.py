@@ -12,8 +12,13 @@ The default path is :class:`repro.serving.engine.PagedServingEngine`:
   (``--preempt-mode swap``) or re-prefilled (``recompute``);
   ``--no-preempt`` restores the conservative full-reservation baseline,
 * chunked prefill for long prompts,
-* bf16 or PMQ-compressed weights (§3.2 bit buckets); OTP masks at decode
-  time (deterministic argmax — the τ→0 limit, paper §3.4),
+* bf16 or PMQ-compressed weights (§3.2 bit buckets; ``--pmq`` compresses
+  the demo model in-process); OTP masks at decode time (deterministic
+  argmax — the τ→0 limit, paper §3.4),
+* host-offloaded expert buckets (``--resident-experts N``, implies
+  ``--pmq``): cold PMQ rows live in host memory, a router-stats EMA
+  prefetches the hot set, misses upload synchronously and replay
+  (:mod:`repro.serving.offload`),
 * TTFT / per-token latency / queue depth / expert-activation metrics
   (:mod:`repro.serving.metrics`).
 
@@ -134,6 +139,21 @@ class BatchedServer:
         }
 
 
+def _compress_for_serving(cfg, params):
+    """PMQ-compress the demo model on synthetic calibration tokens (the
+    layer-uniform stacked layout from repro.core.pipeline — the same
+    layout benchmarks/serving_latency.py serves)."""
+    from ..core import pipeline
+
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (4, 64)).astype(np.int32)
+    )
+    calib = pipeline.calibrate(params, tokens, cfg)
+    params_c, _ = pipeline.compress_for_serving(params, calib, cfg)
+    return params_c
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", choices=ARCH_IDS, default="moonshot-v1-16b-a3b")
@@ -141,6 +161,14 @@ def main() -> None:
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--block-size", type=int, default=16)
+    p.add_argument("--pmq", action="store_true",
+                   help="serve PMQ-compressed experts (§3.2 bit buckets) "
+                        "instead of full-precision weights")
+    p.add_argument("--resident-experts", type=int, default=None,
+                   metavar="N",
+                   help="per-layer device budget in expert slots; cold "
+                        "PMQ rows are offloaded to host memory and "
+                        "prefetched by router stats (implies --pmq)")
     p.add_argument("--pool-blocks", type=int, default=None,
                    help="KV pool size in pages; undersize it to exercise "
                         "growth + preemption (default: worst-case demand)")
@@ -157,6 +185,17 @@ def main() -> None:
     cfg = get_config(args.arch).reduced()
     bundle = get_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
+    if args.resident_experts is not None and args.legacy:
+        # the wave batcher has no offload path — refuse rather than
+        # silently serve everything device-resident
+        raise SystemExit("--resident-experts requires the paged engine "
+                         "(drop --legacy)")
+    if args.pmq or args.resident_experts is not None:
+        if not cfg.is_moe:
+            flag = "--pmq" if args.pmq else "--resident-experts"
+            raise SystemExit(f"{flag} requires an MoE arch")
+        print("compressing demo model (PMQ, layer-uniform plan)…")
+        params = _compress_for_serving(cfg, params)
     rng = np.random.default_rng(0)
     prompts = [
         rng.integers(0, cfg.vocab_size, size=24).astype(np.int32)
@@ -181,8 +220,14 @@ def main() -> None:
             max_blocks_per_slot=blocks_per_req,
             preempt_mode=args.preempt_mode,
             reserve_full=args.no_preempt,
+            resident_experts=args.resident_experts,
         ),
     )
+    if engine.offload is not None:
+        # the engine's tree holds the resident partition + host store;
+        # dropping the caller's reference releases the full-resident
+        # device buckets — the memory the budget exists to reclaim
+        del params
     out = engine.serve(
         [
             PagedRequest(rid=i, prompt=prompts[i], max_new=args.max_new)
@@ -194,6 +239,17 @@ def main() -> None:
     print(f"pool pressure: {m['preemptions']} preemptions, "
           f"{m['swap_bytes']} swap bytes, "
           f"page util p95 {m['page_util_p95']:.2f}")
+    if engine.offload is not None:
+        print(
+            f"expert offload: budget {engine.offload.budgets} "
+            f"(resident {engine.offload.resident_bytes} B of "
+            f"{engine.offload.host_bytes} B host), "
+            f"hit rate {m['expert_hit_rate']:.2f}, "
+            f"{m['expert_prefetch_uploads']} prefetch + "
+            f"{m['expert_miss_uploads']} miss uploads "
+            f"({m['expert_upload_bytes']} B), "
+            f"{engine.offload.grows} budget grows"
+        )
 
 
 if __name__ == "__main__":

@@ -215,12 +215,13 @@ def prefill(params, batch, cfg, *, moe_hooks=None, paged=None):
     dense cache (see :func:`paged_prefill_chunk`).
     """
     if paged is not None:
-        return paged_prefill_chunk(
+        new_cache, logits, _ = paged_prefill_chunk(
             params, paged["cache"], batch["tokens"],
             paged.get("start", 0),
             paged.get("valid_len", batch["tokens"].shape[1]),
             cfg, moe_hooks=moe_hooks,
         )
+        return new_cache, logits
     tokens = batch["tokens"]
     patch = batch.get("patch_embeds")
     hidden, _, cache = forward_hidden(
@@ -237,16 +238,25 @@ def prefill(params, batch, cfg, *, moe_hooks=None, paged=None):
 
 
 def _ffn_delta(p, h, cfg, moe_hooks=None):
-    """FFN half of a decode-style block → ``(Δx, expert_activation)``.
+    """FFN half of a decode-style block.
 
-    ``expert_activation`` is the executed fraction of top-k expert slots:
-    the mean of the OTP decode mask (deterministic argmax, paper §3.4 τ→0
-    limit) when masks are active, else 1.0. Shared by the dense and paged
-    decode paths so they stay numerically identical.
+    Returns ``(Δx, expert_activation [B, S], slot_counts [num_slots])``.
+
+    ``expert_activation`` is the **per-token** executed fraction of top-k
+    expert slots: the mean of the OTP decode mask (deterministic argmax,
+    paper §3.4 τ→0 limit) when masks are active, else 1.0. It is kept
+    per token so callers can exclude padding/inactive slots before
+    reducing (the paged decode step masks with ``cache["active"]``).
+    ``slot_counts`` is the PMQ layer's per-permuted-slot dispatch count
+    (the offload prefetcher's router statistic; empty ``[0]`` outside the
+    compressed path). ``moe_hooks["count_weight"]`` ([T] bool) marks
+    which tokens are real traffic. Shared by the dense and paged decode
+    paths so they stay numerically identical.
     """
-    one = jnp.float32(1.0)
+    ones = jnp.ones(h.shape[:2], jnp.float32)
+    no_counts = jnp.zeros((0,), jnp.int32)
     if not cfg.is_moe:
-        return L.mlp(p["mlp"], h), one
+        return L.mlp(p["mlp"], h), ones, no_counts
     if "moe_ce" in p:
         from ..core.compressed_moe import compressed_moe_layer
 
@@ -255,11 +265,15 @@ def _ffn_delta(p, h, cfg, moe_hooks=None):
         y, info = compressed_moe_layer(
             p["moe"], p["moe_ce"], h, cfg,
             otp_params=p.get("otp") if use_otp else None,
+            count_weight=hooks.get("count_weight"),
         )
-        act = info["mask"].mean() if info.get("mask") is not None else one
-        return y, act
+        act = ones
+        if info.get("mask") is not None:
+            act = info["mask"].mean(axis=-1).reshape(h.shape[:2])
+        counts = info.get("slot_counts")
+        return y, act, counts if counts is not None else no_counts
     out = moe_layer(p["moe"], h, cfg)
-    return out.y, one
+    return out.y, ones, no_counts
 
 
 def _decode_block(p, x, cfg, *, k_cache, v_cache, pos, window, moe_hooks=None):
@@ -269,7 +283,7 @@ def _decode_block(p, x, cfg, *, k_cache, v_cache, pos, window, moe_hooks=None):
     )
     x = x + attn_out
     h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
-    delta, _ = _ffn_delta(p, h, cfg, moe_hooks)
+    delta, _, _ = _ffn_delta(p, h, cfg, moe_hooks)
     x = x + delta
     return x, (k_cache, v_cache)
 
@@ -358,7 +372,13 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
 
     Returns ``(new_cache, logits [B,1,V], info)`` where
     ``info["expert_activation"]`` is the mean executed fraction of top-k
-    expert slots across layers (OTP §3.4 decode masks make it < 1).
+    expert slots across layers (OTP §3.4 decode masks make it < 1),
+    reduced over **active slots only** — inactive slots decode garbage
+    tokens whose masks would otherwise dilute the metric — and
+    ``info["slot_counts"]`` ([L, num_slots] int32, or [L, 0] outside the
+    PMQ path) counts dispatched (token, choice) pairs per permuted expert
+    slot per layer, again excluding inactive slots (the serving offload
+    manager's prefetch/miss signal).
     """
     x = L.embed_tokens(params["embed"], token)
     b = token.shape[0]
@@ -381,6 +401,9 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
     if active is not None:
         dest = jnp.where(active, dest, nb * bs)
     lengths = positions + 1
+    hooks = dict(moe_hooks or {})
+    if active is not None:
+        hooks["count_weight"] = active  # [B] = [T] at decode (S = 1)
 
     def body(carry, xs):
         xc, kf, vf = carry
@@ -400,11 +423,11 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
         attn = attn.reshape(b, 1, hq * dh).astype(xc.dtype)
         xc = xc + L.linear(p_l["attn"]["wo"], attn)
         h2 = L.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
-        delta, act = _ffn_delta(p_l, h2, cfg, moe_hooks)
+        delta, act, counts = _ffn_delta(p_l, h2, cfg, hooks)
         xc = xc + delta
-        return (xc, kf, vf), act
+        return (xc, kf, vf), (act, counts)
 
-    (x, kf, vf), acts = jax.lax.scan(
+    (x, kf, vf), (acts, slot_counts) = jax.lax.scan(
         body, (x, kf, vf), (params["blocks"], windows, layer_ids)
     )
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -417,7 +440,16 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
         k=kf.reshape(nl, nb, bs, hkv, dh),
         v=vf.reshape(nl, nb, bs, hkv, dh),
     )
-    return new_cache, logits, {"expert_activation": acts.mean()}
+    # acts [L, B, 1] per-token: reduce over active slots only, so garbage
+    # tokens decoded by empty slots cannot dilute the OTP activation metric
+    per_slot = acts.mean(axis=(0, 2))  # [B]
+    if active is None:
+        activation = per_slot.mean()
+    else:
+        w = active.astype(jnp.float32)
+        activation = jnp.sum(per_slot * w) / jnp.maximum(w.sum(), 1.0)
+    info = {"expert_activation": activation, "slot_counts": slot_counts}
+    return new_cache, logits, info
 
 
 def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
@@ -435,9 +467,11 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
     engine never materializes a full [P, P] score matrix nor re-prefills
     earlier chunks (contrast the wave batcher's per-wave re-prefill).
 
-    Returns ``(new_cache, logits [1,1,V])`` — logits of the last *valid*
-    token (the request's first generated token once the final chunk is
-    in).
+    Returns ``(new_cache, logits [1,1,V], info)`` — logits of the last
+    *valid* token (the request's first generated token once the final
+    chunk is in); ``info["slot_counts"]`` ([L, num_slots], or [L, 0]
+    outside the PMQ path) counts the chunk's per-slot expert dispatches,
+    excluding right-padded positions (see :func:`paged_decode_step`).
     """
     x = L.embed_tokens(params["embed"], tokens)
     c = tokens.shape[1]
@@ -460,6 +494,8 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
     logical = jnp.arange(s_log, dtype=jnp.int32)
     kv_pos = jnp.where(logical < length, logical, -1)
     phys = tables[0, logical // bs] * bs + logical % bs  # [S_log]
+    hooks = dict(moe_hooks or {})
+    hooks["count_weight"] = jnp.arange(c) < valid_len  # [C] = [T] at B=1
 
     def body(carry, xs):
         xc, kf, vf = carry
@@ -476,11 +512,11 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
         )
         xc = xc + attn_out
         h2 = L.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
-        delta, _ = _ffn_delta(p_l, h2, cfg, moe_hooks)
+        delta, _, counts = _ffn_delta(p_l, h2, cfg, hooks)
         xc = xc + delta
-        return (xc, kf, vf), None
+        return (xc, kf, vf), counts
 
-    (x, kf, vf), _ = jax.lax.scan(
+    (x, kf, vf), slot_counts = jax.lax.scan(
         body, (x, kf, vf), (params["blocks"], windows, layer_ids)
     )
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -494,7 +530,7 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
         k=kf.reshape(nl, nb, bs, hkv, dh),
         v=vf.reshape(nl, nb, bs, hkv, dh),
     )
-    return new_cache, logits
+    return new_cache, logits, {"slot_counts": slot_counts}
 
 
 # --------------------------------------------- python-loop (calibration)

@@ -16,17 +16,24 @@ The production serving substrate around the MC# compressed model path
   and swap-restores or re-prefills preempted slots,
 * :mod:`repro.serving.metrics` — TTFT, per-token latency, queue depth,
   per-step expert-activation rate (the paper's >20% activation-reduction
-  claim as an observable serving metric), preemption/swap counters and
-  page-utilization gauges.
+  claim as an observable serving metric), preemption/swap counters,
+  page-utilization gauges, and expert prefetch hit/miss + upload-byte
+  counters,
+* :mod:`repro.serving.offload` — host-offloaded PMQ expert buckets:
+  cold quantized-expert rows live in host memory and a router-stats EMA
+  prefetches the hot set onto the device (budget-shaped resident
+  partitions; misses upload synchronously and replay the step).
 """
 from .engine import EngineConfig, PagedServingEngine
 from .kvcache import BlockAllocator, PagedKVCache, PoolExhausted, SwappedKV
 from .metrics import ServingMetrics
+from .offload import ExpertOffloadManager
 from .scheduler import Request, Scheduler
 
 __all__ = [
     "BlockAllocator",
     "EngineConfig",
+    "ExpertOffloadManager",
     "PagedKVCache",
     "PagedServingEngine",
     "PoolExhausted",

@@ -34,6 +34,19 @@ bit-identical either way for any pool that admits the largest single
 request (fuzzed in ``tests/test_serving_sim.py``). Block tables keep
 their static ``[max_slots, max_blocks_per_slot]`` shape throughout —
 growth only fills in rows between jitted steps, so nothing recompiles.
+
+**Host-offloaded expert buckets.** With ``resident_experts`` set (PMQ
+params only), cold expert rows live in host memory
+(:class:`repro.serving.offload.ExpertOffloadManager`) and the jitted
+programs read a budget-shaped resident partition. Between steps the
+engine prefetches the router-stats-EMA-hottest experts alongside
+``_ensure_pages``; because routing happens inside the jitted step, a
+**miss** is only observable afterwards — the engine then uploads the
+missing experts synchronously and replays the program (KV writes land
+at position-determined destinations, so the replay overwrites them with
+correct values). Greedy outputs are therefore bit-identical to the
+all-resident engine for any budget that holds the per-step working set
+(fuzzed in ``tests/test_offload.py``).
 """
 from __future__ import annotations
 
@@ -106,6 +119,13 @@ class EngineConfig:
     # (cap ≥ tokens·top_k ⇔ capacity_factor ≥ num_experts) inside the
     # engine's jitted steps.
     drop_free_capacity: bool = True
+    # Per-layer device budget (in permuted expert slots) for PMQ buckets;
+    # None keeps every bucket fully resident. Requires compressed params
+    # ("moe_ce" in the stacked block tree). Cold rows live in host memory
+    # and are prefetched by a router-stats EMA; misses replay the step.
+    resident_experts: Optional[int] = None
+    # EMA decay of the per-(layer, slot) dispatch counts driving prefetch.
+    prefetch_ema: float = 0.8
 
 
 @functools.lru_cache(maxsize=None)
@@ -121,14 +141,17 @@ def _jitted_steps(model_cfg, use_otp: bool):
         new_cache, logits, info = tf.paged_decode_step(
             params, cache, token, positions, model_cfg, moe_hooks=hooks
         )
-        return new_cache["k"], new_cache["v"], logits, info["expert_activation"]
+        return (
+            new_cache["k"], new_cache["v"], logits,
+            info["expert_activation"], info["slot_counts"],
+        )
 
     def prefill_fn(params, k, v, tokens, start, valid_len, table_row):
         cache = {"k": k, "v": v, "block_tables": table_row}
-        new_cache, logits = tf.paged_prefill_chunk(
+        new_cache, logits, info = tf.paged_prefill_chunk(
             params, cache, tokens, start, valid_len, model_cfg, moe_hooks=hooks
         )
-        return new_cache["k"], new_cache["v"], logits
+        return new_cache["k"], new_cache["v"], logits, info["slot_counts"]
 
     return (
         jax.jit(decode_fn, donate_argnums=(1, 2)),
@@ -160,6 +183,22 @@ class PagedServingEngine:
                 f"got {self.ecfg.preempt_mode!r}"
             )
         cfg = self.model_cfg
+        self.offload = None
+        if self.ecfg.resident_experts is not None:
+            blocks = params.get("blocks") if isinstance(params, dict) else None
+            if not isinstance(blocks, dict) or "moe_ce" not in blocks:
+                raise ValueError(
+                    "resident_experts requires PMQ-compressed params "
+                    "(a stacked 'moe_ce' entry in params['blocks'])"
+                )
+            from .offload import ExpertOffloadManager
+
+            self.offload = ExpertOffloadManager(
+                blocks["moe_ce"],
+                resident_slots=self.ecfg.resident_experts,
+                ema_decay=self.ecfg.prefetch_ema,
+            )
+            params = dict(params, blocks=dict(blocks, moe_ce=self.offload.ce))
         self.params = params
         self.cache = PagedKVCache.create(
             cfg,
@@ -172,6 +211,7 @@ class PagedServingEngine:
         self.metrics = ServingMetrics()
         self.results: Dict[int, List[int]] = {}
         self._step_idx = 0
+        self._last_activation = None  # set by _run_offloaded (decode only)
         self._decode, self._prefill = _jitted_steps(
             self.model_cfg, self.ecfg.use_otp
         )
@@ -207,6 +247,7 @@ class PagedServingEngine:
             return False
         self._admit_all()
         self._ensure_pages()
+        self._prefetch_experts()
         if not self.scheduler.active:
             if self.scheduler.waiting:
                 # unreachable for pools that admit the largest request
@@ -226,12 +267,16 @@ class PagedServingEngine:
     def _admit_all(self) -> None:
         while True:
             active_before = len(self.scheduler.active)
+            # sample the depth before try_admit pops the queue head, so the
+            # recorded value counts the request being admitted (the depth
+            # the admission decision actually saw)
+            depth_before = self.scheduler.queue_depth
             req = self.scheduler.try_admit(self._step_idx)
             if req is None:
                 return
             self.metrics.record_admission(
                 req.rid, req.slot, self._step_idx, active_before,
-                self.scheduler.queue_depth, resumed=req.preempt_count > 0,
+                depth_before, resumed=req.preempt_count > 0,
             )
             if req.swapped is not None:  # swap-restore a preempted slot
                 self.metrics.record_swap_in(
@@ -274,15 +319,57 @@ class PagedServingEngine:
             n = min(c, p_len - off)
             chunk = np.zeros((1, c), np.int32)
             chunk[0, :n] = seq[off : off + n]
-            self.cache.k, self.cache.v, logits = self._prefill(
-                self.params, self.cache.k, self.cache.v,
-                jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row,
-            )
+            args = (jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row)
+            logits = self._run_offloaded(self._prefill, args)
         if resume:
             return
         jax.block_until_ready(logits)
         req.out.append(int(np.argmax(np.asarray(logits)[0, -1])))
         req.pos = p_len
+
+    # --------------------------------------------------- expert residency
+    def _run_offloaded(self, program, args, *, is_decode: bool = False):
+        """Run one jitted program (prefill chunk or decode step) under the
+        expert-residency contract: re-run after a synchronous upload until
+        every expert the program actually dispatched to was resident
+        *during* the run — only then are its outputs (and KV writes,
+        which land at position-determined destinations and are simply
+        overwritten by a replay) identical to the all-resident engine.
+        Returns the program's logits; extra outputs are consumed here
+        (``is_decode`` marks the decode program, whose 4th output is the
+        expert-activation scalar).
+        """
+        if self.offload is not None:
+            self.offload.begin_step()
+        missed = False
+        while True:
+            out = program(self.params, self.cache.k, self.cache.v, *args)
+            self.cache.k, self.cache.v = out[0], out[1]
+            logits = out[2]
+            self._last_activation = out[3] if is_decode else None
+            if self.offload is None:
+                return logits
+            counts = np.asarray(out[-1])
+            uploads, nbytes = self.offload.ensure_resident(counts)
+            if uploads == 0:
+                if missed:
+                    self.metrics.record_expert_miss_step()
+                else:
+                    self.metrics.record_expert_hit()
+                self.offload.update_stats(counts)
+                return logits
+            missed = True
+            self.metrics.record_expert_miss(uploads, nbytes)
+
+    def _prefetch_experts(self) -> None:
+        """Upload the EMA-hottest experts ahead of the next decode step —
+        the residency twin of ``_ensure_pages`` (issue: router-stats
+        prefetch between steps; misses inside the step replay)."""
+        if self.offload is None:
+            return
+        uploads, nbytes = self.offload.prefetch()
+        if uploads:
+            self.metrics.record_expert_prefetch(uploads, nbytes)
 
     # ---------------------------------------------------- growth/preempt
     def _ensure_pages(self) -> None:
@@ -330,17 +417,21 @@ class PagedServingEngine:
             positions[slot] = req.pos
             active[slot] = True
         t0 = time.time()
-        self.cache.k, self.cache.v, logits, act = self._decode(
-            self.params, self.cache.k, self.cache.v,
-            jnp.asarray(tokens), jnp.asarray(positions),
-            self.cache.tables_device(), jnp.asarray(active),
+        logits = self._run_offloaded(
+            self._decode,
+            (jnp.asarray(tokens), jnp.asarray(positions),
+             self.cache.tables_device(), jnp.asarray(active)),
+            is_decode=True,
         )
         jax.block_until_ready(logits)
         dt = time.time() - t0
         self.metrics.record_decode_step(
-            dt, int(active.sum()), float(act), self.scheduler.queue_depth,
+            dt, int(active.sum()), float(self._last_activation),
+            self.scheduler.queue_depth,
             page_utilization=self.cache.utilization,
         )
+        if self.offload is not None:
+            self.metrics.record_expert_residency(self.offload.resident_bytes)
         logits_np = np.asarray(logits)
         for slot, req in list(self.scheduler.active.items()):
             req.out.append(int(np.argmax(logits_np[slot, -1])))

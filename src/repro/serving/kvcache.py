@@ -84,9 +84,16 @@ class BlockAllocator:
         return blocks
 
     def free(self, blocks: List[int]) -> None:
+        """Return pages to the free list — atomically: the whole list is
+        validated (allocated, no duplicates) before any page moves, so a
+        bad entry raises ``ValueError`` with allocator state untouched
+        instead of half-freeing the good prefix."""
+        seen: set = set()
         for b in blocks:
-            if b not in self._allocated:
+            if b not in self._allocated or b in seen:
                 raise ValueError(f"double free / unknown block {b}")
+            seen.add(b)
+        for b in blocks:
             self._allocated.remove(b)
             self._free.append(b)
 

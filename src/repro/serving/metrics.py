@@ -12,6 +12,14 @@ count the dynamic-growth pressure path: victims evicted when the page
 pool ran dry, and the host↔device KV bytes moved to serve them.
 ``page_utilization`` gauges how full the pool runs — the whole point of
 on-demand growth is pushing it toward 1.0 without corruption.
+``expert_prefetch_*`` / ``expert_*_bytes`` / ``expert_resident_bytes``
+cover host-offloaded PMQ buckets (:mod:`repro.serving.offload`): a
+*hit* is a logical step (decode step or prefill chunk) whose whole
+expert working set was resident on the first run, a *miss* is a step
+that needed ≥ 1 replay after synchronous uploads; upload bytes split
+into ahead-of-need prefetch traffic and miss traffic, and the
+resident-bytes gauge tracks the device footprint the budget actually
+bought.
 """
 from __future__ import annotations
 
@@ -46,12 +54,23 @@ class ServingMetrics:
     preemptions: List[Dict] = dataclasses.field(default_factory=list)
     swap_out_bytes: int = 0
     swap_in_bytes: int = 0
+    # host-offloaded expert buckets (repro.serving.offload)
+    expert_prefetch_hits: int = 0
+    expert_prefetch_misses: int = 0
+    expert_miss_uploads: int = 0
+    expert_prefetch_uploads: int = 0
+    expert_miss_bytes: int = 0
+    expert_prefetch_bytes: int = 0
+    expert_resident_bytes: List[int] = dataclasses.field(default_factory=list)
 
     # ------------------------------------------------------------ record
     def record_admission(
         self, rid: int, slot: int, step_idx: int, active_before: int,
         queue_depth: int, resumed: bool = False,
     ) -> None:
+        """``queue_depth`` is the waiting-queue depth *at admission time*,
+        i.e. including the request being admitted (the engine samples it
+        before the scheduler pops the queue head)."""
         self.admissions.append(
             {"rid": rid, "slot": slot, "step": step_idx,
              "active_before": active_before, "queue_depth": queue_depth,
@@ -88,6 +107,29 @@ class ServingMetrics:
     def record_swap_in(self, nbytes: int) -> None:
         self.swap_in_bytes += nbytes
 
+    def record_expert_hit(self) -> None:
+        """One logical step (decode step / prefill chunk) found its whole
+        working set resident on the first run — no replay."""
+        self.expert_prefetch_hits += 1
+
+    def record_expert_miss_step(self) -> None:
+        """One logical step needed ≥ 1 replay before accepting."""
+        self.expert_prefetch_misses += 1
+
+    def record_expert_miss(self, uploads: int, nbytes: int) -> None:
+        """One replay's synchronous uploads (``uploads`` expert rows);
+        the owning step is counted once via :meth:`record_expert_miss_step`."""
+        self.expert_miss_uploads += uploads
+        self.expert_miss_bytes += nbytes
+
+    def record_expert_prefetch(self, uploads: int, nbytes: int) -> None:
+        """Ahead-of-need uploads driven by the router-stats EMA."""
+        self.expert_prefetch_uploads += uploads
+        self.expert_prefetch_bytes += nbytes
+
+    def record_expert_residency(self, nbytes: int) -> None:
+        self.expert_resident_bytes.append(int(nbytes))
+
     # ----------------------------------------------------------- derived
     @property
     def mid_flight_admissions(self) -> int:
@@ -103,6 +145,17 @@ class ServingMetrics:
             and not a.get("resumed")
         )
 
+    @property
+    def expert_hit_rate(self) -> float:
+        """Fraction of logical steps served without any replay."""
+        total = self.expert_prefetch_hits + self.expert_prefetch_misses
+        return self.expert_prefetch_hits / total if total else 1.0
+
+    @property
+    def expert_upload_bytes(self) -> int:
+        """Total host→device expert traffic (prefetch + miss)."""
+        return self.expert_miss_bytes + self.expert_prefetch_bytes
+
     def counters(self) -> Dict:
         """The wall-clock-free slice of the metrics: identical traces on
         identical engines must produce *identical* counters (the
@@ -117,6 +170,13 @@ class ServingMetrics:
             "queue_depth": list(self.queue_depth),
             "page_utilization": list(self.page_utilization),
             "generated_tokens": int(np.sum(self.active_per_step)) if self.active_per_step else 0,
+            "expert_prefetch_hits": self.expert_prefetch_hits,
+            "expert_prefetch_misses": self.expert_prefetch_misses,
+            "expert_miss_uploads": self.expert_miss_uploads,
+            "expert_prefetch_uploads": self.expert_prefetch_uploads,
+            "expert_miss_bytes": self.expert_miss_bytes,
+            "expert_prefetch_bytes": self.expert_prefetch_bytes,
+            "expert_resident_bytes": list(self.expert_resident_bytes),
         }
 
     def summary(self) -> Dict[str, float]:
@@ -144,6 +204,17 @@ class ServingMetrics:
             "swap_bytes": int(self.swap_out_bytes + self.swap_in_bytes),
             "page_util_mean": _mean(self.page_utilization),
             "page_util_p95": _p95(self.page_utilization),
+            "expert_hit_rate": self.expert_hit_rate,
+            "expert_prefetch_misses": int(self.expert_prefetch_misses),
+            "expert_miss_uploads": int(self.expert_miss_uploads),
+            "expert_prefetch_uploads": int(self.expert_prefetch_uploads),
+            "expert_miss_bytes": int(self.expert_miss_bytes),
+            "expert_prefetch_bytes": int(self.expert_prefetch_bytes),
+            "expert_upload_bytes": int(self.expert_upload_bytes),
+            "expert_resident_bytes_last": (
+                int(self.expert_resident_bytes[-1])
+                if self.expert_resident_bytes else 0
+            ),
         }
 
     def to_json(self) -> str:

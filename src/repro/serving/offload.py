@@ -1,0 +1,370 @@
+"""Host-offloaded PMQ expert buckets with router-stats prefetch.
+
+MC#'s PMQ buckets (§3.2) shrink expert *storage*; this module shrinks
+expert *device residency*: a device that holds only the hot slice of
+each bit-bucket (plus the paged KV pool) can serve models whose full
+expert set never fits. The pattern mirrors the serving swap store
+(:class:`repro.serving.kvcache.SwappedKV`): cold rows live in a
+host-memory backing store and move across the host↔device boundary in
+whole quantized-expert rows (packed codes + scales/zeros — a fraction
+of the bf16 bytes, which is exactly why PMQ makes offload cheap).
+
+Residency is managed per ``(layer, bucket, expert slot)``:
+
+* **Device**: per bucket, a ``[L, R_i, ...]`` resident buffer for each
+  packed leaf plus a ``[L, count_i]`` int32 map from bucket slot to
+  resident row. Both have *budget-determined* shapes, so changing which
+  experts are resident never changes the pytree — the jitted serving
+  programs compile once per budget, not per residency state.
+* **Host**: full numpy copies of every bucket leaf (``[L, count_i, ...]``).
+* **Prefetch**: an EMA over the per-(layer, slot) dispatch counts that
+  every decode/prefill program reports (EAC-MoE-style expert-selection
+  awareness, PAPERS.md) picks the top-``R_i`` slots per bucket; uploads
+  happen between engine steps, alongside KV page growth.
+* **Miss**: routing happens *inside* the jitted step, so the true
+  working set is only known after the program ran. The engine replays
+  the program after a synchronous upload of the missing experts
+  (:meth:`ensure_resident`); KV writes land at position-determined
+  destinations, so a replay simply overwrites them with the correct
+  values — residency is invisible to correctness for any budget that
+  holds the per-step working set. Only usage up to the first missed
+  layer is trusted (deeper layers routed on garbage activations);
+  authentic slots are **pinned** until the step is accepted, each
+  replay extends the correct layer prefix, and the loop accepts within
+  ``num_layers`` replays.
+* **Overflow**: if a single step's working set exceeds a bucket's
+  budget, the manager grows that bucket's resident buffer to fit (a
+  one-time retrace) rather than serving wrong tokens — ``grows`` counts
+  how often the configured budget was too small to be honored.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.compressed_moe import CompressedExperts
+
+__all__ = ["ExpertOffloadManager"]
+
+
+class ExpertOffloadManager:
+    """Residency manager for one model's layer-stacked PMQ buckets.
+
+    ``ce`` must be the serving layout: every bucket leaf stacked to
+    ``[L, count, ...]`` (see ``repro.models.transformer.restack_blocks``).
+    ``resident_slots`` is the per-layer device budget in expert slots,
+    split across buckets proportionally to their padded counts (every
+    bucket keeps ≥ 1 resident row). The manager owns :attr:`ce` — a new
+    :class:`CompressedExperts` whose arrays are the resident partitions;
+    callers splice it into their parameter tree and never touch the
+    original full-resident arrays again.
+    """
+
+    def __init__(self, ce: CompressedExperts, *, resident_slots: int,
+                 ema_decay: float = 0.8):
+        if ce.resident_map is not None:
+            raise ValueError("CompressedExperts is already host-offloaded")
+        self.meta = ce.meta
+        self.num_slots = ce.num_slots
+        self.ema_decay = float(ema_decay)
+        self._bkeys = [f"b{i}" for i in range(len(ce.meta))]
+        # full host backing store (numpy copies of every packed leaf)
+        self.host: Dict[str, Dict] = {
+            bk: jax.tree.map(np.asarray, ce.arrays[bk]) for bk in self._bkeys
+        }
+        first = jax.tree.leaves(self.host[self._bkeys[0]])[0]
+        if first.ndim < 3 or first.shape[1] != ce.meta[0].count:
+            raise ValueError(
+                "expert offload expects layer-stacked buckets "
+                f"[L, count, ...]; got leaf shape {first.shape} for "
+                f"bucket count {ce.meta[0].count}"
+            )
+        self.num_layers = int(first.shape[0])
+        self._budgets = self._split_budget(int(resident_slots))
+        # residency tables (host side): slot -> row (-1 absent), row -> slot
+        self.slot_row: Dict[str, np.ndarray] = {}
+        self.row_slot: Dict[str, np.ndarray] = {}
+        self.ema = np.zeros((self.num_layers, self.num_slots), np.float64)
+        # upload counts/bytes are returned to the caller per call and
+        # aggregated by ServingMetrics — the manager only tracks what the
+        # metrics cannot derive: budget growths (deterministic per trace)
+        self.grows = 0
+        self._pinned: List[Dict[str, set]] = []
+        self.begin_step()
+
+        dev_arrays: Dict[str, Dict] = {}
+        maps: Dict[str, jnp.ndarray] = {}
+        for i, bk in enumerate(self._bkeys):
+            r, cnt = self._budgets[i], self.meta[i].count
+            # seed residency with the first r slots of each bucket — the
+            # EMA prefetcher re-ranks them after the first real traffic
+            sr = np.full((self.num_layers, cnt), -1, np.int32)
+            sr[:, :r] = np.arange(r, dtype=np.int32)[None, :]
+            self.slot_row[bk] = sr
+            rs = np.full((self.num_layers, r), -1, np.int32)
+            rs[:, :] = np.arange(r, dtype=np.int32)[None, :]
+            self.row_slot[bk] = rs
+            dev_arrays[bk] = jax.tree.map(
+                lambda a: jnp.asarray(a[:, :r]), self.host[bk]
+            )
+            maps[bk] = jnp.asarray(np.maximum(sr, 0))
+        self.ce = dataclasses.replace(
+            ce, arrays=dev_arrays, resident_map=maps,
+            resident_rows=tuple(self._budgets),
+        )
+
+    # ---------------------------------------------------------- budgeting
+    def _split_budget(self, resident_slots: int) -> List[int]:
+        counts = [m.count for m in self.meta]
+        nb = len(counts)
+        total = min(self.num_slots, max(nb, resident_slots))
+        if total != resident_slots:
+            warnings.warn(
+                f"resident_slots={resident_slots} clamped to {total} "
+                f"(floor: one row per bucket = {nb}; ceiling: "
+                f"num_slots = {self.num_slots})",
+                RuntimeWarning, stacklevel=3,
+            )
+        r = [
+            max(1, min(c, int(round(resident_slots * c / self.num_slots))))
+            for c in counts
+        ]
+        while sum(r) > total:
+            i = max(range(nb), key=lambda j: r[j])
+            if r[i] <= 1:
+                break
+            r[i] -= 1
+        while sum(r) < total:
+            cands = [j for j in range(nb) if r[j] < counts[j]]
+            if not cands:
+                break
+            i = max(cands, key=lambda j: counts[j] - r[j])
+            r[i] += 1
+        return r
+
+    @property
+    def budgets(self) -> Tuple[int, ...]:
+        return tuple(self._budgets)
+
+    @property
+    def resident_bytes(self) -> int:
+        tot = 0
+        for bk in self._bkeys:
+            for a in jax.tree.leaves(self.ce.arrays[bk]):
+                tot += a.size * a.dtype.itemsize
+        return tot
+
+    @property
+    def host_bytes(self) -> int:
+        return sum(
+            a.nbytes for bk in self._bkeys
+            for a in jax.tree.leaves(self.host[bk])
+        )
+
+    def resident_slots_of(self, layer: int) -> Dict[str, set]:
+        """Bucket-local resident slot sets of one layer (for tests)."""
+        return {
+            bk: {int(s) for s in np.nonzero(self.slot_row[bk][layer] >= 0)[0]}
+            for bk in self._bkeys
+        }
+
+    # ----------------------------------------------------------- plumbing
+    def _upload_batch(self, bk: str, triples) -> int:
+        """Host→device copy of ``(layer, row, slot)`` placements — one
+        batched scatter per packed leaf per bucket, regardless of how
+        many layers the placements span (a per-layer ``.set`` would
+        rebuild the whole [L, R, ...] buffer once per layer)."""
+        if not triples:
+            return 0
+        l_idx = np.asarray([t[0] for t in triples], np.int32)
+        r_idx = np.asarray([t[1] for t in triples], np.int32)
+        s_idx = np.asarray([t[2] for t in triples], np.int32)
+        nbytes = 0
+
+        def up(dev, host):
+            nonlocal nbytes
+            src = host[l_idx, s_idx]  # [n, ...]
+            nbytes += src.nbytes
+            return dev.at[l_idx, r_idx].set(jnp.asarray(src))
+
+        self.ce.arrays[bk] = jax.tree.map(up, self.ce.arrays[bk], self.host[bk])
+        return nbytes
+
+    def _refresh_map(self, bk: str) -> None:
+        self.ce.resident_map[bk] = jnp.asarray(
+            np.maximum(self.slot_row[bk], 0).astype(np.int32)
+        )
+
+    def _grow(self, i: int, need: int) -> None:
+        """Enlarge bucket i's resident buffer to ``need`` rows (all
+        layers). Changes leaf shapes — the jitted programs re-specialize
+        once — and is only taken when a step's working set cannot fit the
+        configured budget (correctness beats the budget)."""
+        bk = self._bkeys[i]
+        old = self._budgets[i]
+        new_r = min(self.meta[i].count, int(need))
+        if new_r <= old:
+            return
+        pad = new_r - old
+        self.row_slot[bk] = np.concatenate(
+            [self.row_slot[bk],
+             np.full((self.num_layers, pad), -1, np.int32)], axis=1,
+        )
+        self.ce.arrays[bk] = jax.tree.map(
+            lambda a: jnp.concatenate(
+                [a, jnp.zeros((a.shape[0], pad) + a.shape[2:], a.dtype)],
+                axis=1,
+            ),
+            self.ce.arrays[bk],
+        )
+        self._budgets[i] = new_r
+        self.ce.resident_rows = tuple(self._budgets)
+        self.grows += 1
+
+    def _place(self, i: int, layer: int, want, protected, score_fn):
+        """Install bucket-local slots ``want`` into bucket ``i``'s rows of
+        one layer, filling free rows first and then evicting the
+        lowest-``score_fn`` rows whose slot is not in ``protected``.
+        Updates the host-side tables and returns the ``(layer, row,
+        slot)`` placements; the caller batch-uploads them
+        (:meth:`_upload_batch`) and refreshes the device map.
+        """
+        bk = self._bkeys[i]
+        sr = self.slot_row[bk]
+        rows = self.row_slot[bk]
+        r_i = self._budgets[i]
+        free = [j for j in range(r_i) if rows[layer, j] < 0]
+        evictable = sorted(
+            (j for j in range(r_i)
+             if rows[layer, j] >= 0 and int(rows[layer, j]) not in protected),
+            key=lambda j: (score_fn(int(rows[layer, j])),
+                           int(rows[layer, j])),
+        )
+        targets = (free + evictable)[: len(want)]
+        placed = []
+        for s, j in zip(want, targets):
+            old = int(rows[layer, j])
+            if old >= 0:
+                sr[layer, old] = -1
+            rows[layer, j] = s
+            sr[layer, s] = j
+            placed.append((layer, j, s))
+        return placed
+
+    # ------------------------------------------------------ step protocol
+    def begin_step(self) -> None:
+        """Reset the per-step pin sets. The engine calls this before each
+        jitted-program replay loop; every slot reported used during the
+        loop stays pinned (never evicted) until the loop accepts."""
+        self._pinned = [
+            {bk: set() for bk in self._bkeys} for _ in range(self.num_layers)
+        ]
+
+    def ensure_resident(self, counts: np.ndarray) -> Tuple[int, int]:
+        """Make the last program run's *authentic* working set resident.
+
+        ``counts [L, num_slots]`` is the run's ``slot_counts`` output.
+        Returns ``(uploads, bytes)`` — ``uploads == 0`` means the run's
+        whole working set was already resident (the run is *accepted*:
+        its outputs are bit-identical to the all-resident engine).
+        Otherwise the caller must replay the program after this
+        synchronous upload.
+
+        Usage is only trusted up to the **first layer with a miss**:
+        layers below it computed with correct expert rows, so their
+        routing — and the missed layer's own routing — is authentic;
+        deeper layers routed on garbage activations and are ignored
+        until a replay reaches them with correct inputs. Every pinned
+        slot is therefore part of the true working set — phantom usage
+        can never inflate uploads or trigger a budget grow — and each
+        replay extends the correct prefix by ≥ 1 layer, so the loop
+        accepts within ``num_layers`` replays. Evicts only unpinned
+        rows, coldest EMA first.
+        """
+        # fast path (the common all-hit case): nothing dispatched-to is
+        # non-resident, so the run is accepted without touching the pin
+        # sets — pins only matter across replays, and slots pinned by an
+        # earlier iteration are already resident (eviction protects them)
+        resident = np.concatenate(
+            [self.slot_row[bk] >= 0 for bk in self._bkeys], axis=1
+        )
+        if not np.any((counts > 0) & ~resident):
+            return 0, 0
+        ups = 0
+        nbytes = 0
+        pending = {bk: [] for bk in self._bkeys}
+        for l in range(self.num_layers):
+            layer_missed = False
+            for i, bk in enumerate(self._bkeys):
+                m = self.meta[i]
+                used = np.nonzero(counts[l, m.start:m.start + m.count] > 0)[0]
+                pin = self._pinned[l][bk]
+                pin.update(int(u) for u in used)
+                missing = [s for s in sorted(pin) if self.slot_row[bk][l, s] < 0]
+                if not missing:
+                    continue
+                layer_missed = True
+                if len(pin) > self._budgets[i]:
+                    self._grow(i, len(pin))
+                # pin ≤ budget now, so every missing slot finds a row
+                placed = self._place(
+                    i, l, missing, pin,
+                    lambda s, l=l, m=m: self.ema[l, m.start + s],
+                )
+                assert len(placed) == len(missing), "pin set exceeds budget"
+                pending[bk].extend(placed)
+                ups += len(placed)
+            if layer_missed:
+                break  # deeper layers routed on garbage — replay first
+        for bk in self._bkeys:  # one batched upload + map per bucket
+            if pending[bk]:
+                nbytes += self._upload_batch(bk, pending[bk])
+                self._refresh_map(bk)
+        return ups, nbytes
+
+    def update_stats(self, counts: np.ndarray) -> None:
+        """Fold an accepted step's dispatch counts into the routing EMA."""
+        d = self.ema_decay
+        self.ema = d * self.ema + (1.0 - d) * counts.astype(np.float64)
+
+    def prefetch(self) -> Tuple[int, int]:
+        """Upload the EMA-hottest slots ahead of need (between steps).
+
+        Per (layer, bucket): the top-``R_i`` slots by EMA score become
+        the desired resident set; missing ones are uploaded over the
+        coldest undesired residents. Stable ranking (score desc, slot
+        asc) keeps the selection deterministic and churn-free on ties.
+        Returns ``(uploads, bytes)``.
+        """
+        ups = 0
+        nbytes = 0
+        pending = {bk: [] for bk in self._bkeys}
+        for l in range(self.num_layers):
+            for i, bk in enumerate(self._bkeys):
+                m = self.meta[i]
+                r_i = self._budgets[i]
+                if r_i >= m.count:
+                    continue
+                scores = self.ema[l, m.start:m.start + m.count]
+                desired = set(
+                    int(s) for s in np.argsort(-scores, kind="stable")[:r_i]
+                )
+                want = sorted(
+                    s for s in desired if self.slot_row[bk][l, s] < 0
+                )
+                if not want:
+                    continue
+                placed = self._place(i, l, want, desired,
+                                     lambda s, scores=scores: scores[s])
+                pending[bk].extend(placed)
+                ups += len(placed)
+        for bk in self._bkeys:  # one batched upload + map per bucket
+            if pending[bk]:
+                nbytes += self._upload_batch(bk, pending[bk])
+                self._refresh_map(bk)
+        return ups, nbytes

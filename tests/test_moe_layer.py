@@ -103,3 +103,41 @@ def test_load_balance_loss_uniform_is_one():
     idx = jnp.asarray(rng.integers(0, e, size=(t, k)), jnp.int32)
     loss = load_balance_loss(probs, idx, e)
     np.testing.assert_allclose(float(loss), 1.0, atol=0.08)
+
+
+def test_compressed_ep_fallback_warns_and_strict_raises(monkeypatch):
+    """A bucket built for a different expert-parallel extent than the
+    runtime mesh silently dropped EP (ep=1 fallback); it must warn by
+    default and raise under REPRO_STRICT_EP=1 (regression for the silent
+    fallback in compressed_expert_ffn)."""
+    from repro.core import compressed_moe as cm
+
+    rng = np.random.default_rng(5)
+    e, d, f = 3, 16, 16
+    experts = {
+        "w_gate": rng.normal(size=(e, d, f)).astype(np.float32),
+        "w_up": rng.normal(size=(e, d, f)).astype(np.float32),
+        "w_down": rng.normal(size=(e, f, d)).astype(np.float32),
+    }
+    # one 2-bit bucket of 3 experts, built for ep=1
+    ce = cm.build_compressed_experts(experts, [2, 2, 2], group=8, ep=1,
+                                     refine=False)
+    cap = 8
+    xp = jnp.asarray(rng.normal(size=(ce.num_slots * cap, d)), jnp.float32)
+    y_ok = np.asarray(cm.compressed_expert_ffn(ce, xp, cap))  # ep=1: silent
+    # pretend the mesh has a model axis of 2: 3 % 2 != 0 -> fallback
+    monkeypatch.setattr(cm, "model_axis_size", lambda: 2)
+    monkeypatch.delenv("REPRO_STRICT_EP", raising=False)
+    with pytest.warns(RuntimeWarning, match="falling back to ep=1"):
+        y_warn = cm.compressed_expert_ffn(ce, xp, cap)
+    np.testing.assert_array_equal(np.asarray(y_warn), y_ok)  # math unchanged
+    monkeypatch.setenv("REPRO_STRICT_EP", "1")
+    with pytest.raises(AssertionError, match="not divisible"):
+        cm.compressed_expert_ffn(ce, xp, cap)
+    # a cleanly divisible bucket never trips the guard
+    ce4 = cm.build_compressed_experts(
+        experts, [2, 2, 2], group=8, ep=2, refine=False,
+    )  # count padded 3 -> 4: divisible by the fake model axis
+    cm.compressed_expert_ffn(
+        ce4, jnp.zeros((ce4.num_slots * cap, d), jnp.float32), cap
+    )

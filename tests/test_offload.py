@@ -1,0 +1,326 @@
+"""Host-offloaded PMQ expert buckets (repro.serving.offload).
+
+The contract under test: **residency is invisible to correctness**.
+Greedy outputs of the offloaded engine are bit-identical to the
+all-resident engine for any expert budget that holds the per-step
+working set — fuzzed over random traces and budgets the same way
+tests/test_serving_sim.py fuzzes KV pool pressure — including runs that
+force prefetch misses (the step replays after a synchronous upload) and
+runs whose budget is smaller than a step's working set (the manager
+grows the resident buffer rather than serving wrong tokens).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.compressed_moe import (
+    CompressedExperts,
+    build_compressed_experts,
+    compressed_expert_ffn,
+)
+from repro.models import transformer as tf
+from repro.models.registry import get_model
+from repro.serving import (
+    EngineConfig,
+    ExpertOffloadManager,
+    PagedServingEngine,
+    Request,
+)
+
+TINY_MOE = ModelConfig(
+    name="tiny-offload-moe",
+    family="moe",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    d_ff_expert=64,
+    vocab_size=128,
+    num_experts=4,
+    top_k=2,
+    num_shared_experts=1,
+    dtype="float32",
+    remat="none",
+    logits_chunk=32,
+    attn_q_chunk=16,
+    attn_kv_chunk=16,
+)
+
+BITS = [1, 2, 2, 3]  # buckets (count 1, 2, 1) -> num_slots = 4
+
+ECFG = EngineConfig(
+    max_slots=2, block_size=4, num_blocks=16, max_blocks_per_slot=6,
+    prefill_chunk=4,
+)
+
+
+def compress_for_serving(cfg, params, bits=BITS):
+    """Layer-uniform PMQ buckets in the stacked serving layout (no GPTQ,
+    fp attention/router — the expert buckets are what offload manages)."""
+    blocks = tf.unstack_blocks(params, cfg)
+    blocks_c = []
+    for p_l in blocks:
+        experts = {
+            k: np.asarray(p_l["moe"]["experts"][k])
+            for k in ("w_gate", "w_up", "w_down")
+        }
+        ce = build_compressed_experts(experts, bits, group=32, ep=1,
+                                      refine=False)
+        blocks_c.append({
+            "ln1": p_l["ln1"], "attn": p_l["attn"], "ln2": p_l["ln2"],
+            "moe": {"router": p_l["moe"]["router"],
+                    "shared": p_l["moe"]["shared"]},
+            "moe_ce": ce,
+        })
+    return {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "blocks": tf.restack_blocks(blocks_c),
+    }
+
+
+@pytest.fixture(scope="module")
+def compressed_model():
+    bundle = get_model(TINY_MOE)
+    params = bundle.init(jax.random.PRNGKey(0))
+    return TINY_MOE, compress_for_serving(TINY_MOE, params)
+
+
+def make_requests(cfg, n, seed, max_new=5, plen=6):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32),
+            max_new=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+# ------------------------------------------------------- gather bit-exact
+def test_resident_gather_bitwise_identical():
+    """compressed_expert_ffn through a resident partition whose rows hold
+    the true weights is bit-identical to the all-resident path — the
+    gather moves bytes, never values."""
+    rng = np.random.default_rng(0)
+    e, d, f = 4, 32, 48
+    experts = {
+        "w_gate": rng.normal(size=(e, d, f)).astype(np.float32),
+        "w_up": rng.normal(size=(e, d, f)).astype(np.float32),
+        "w_down": rng.normal(size=(e, f, d)).astype(np.float32),
+    }
+    ce = build_compressed_experts(experts, BITS, group=16, ep=1, refine=False)
+    cap = 8
+    xp = jnp.asarray(rng.normal(size=(ce.num_slots * cap, d)), jnp.float32)
+    y_full = np.asarray(compressed_expert_ffn(ce, xp, cap))
+    # identity maps (all resident, rows == slots)
+    rmap = {
+        f"b{i}": jnp.arange(m.count, dtype=jnp.int32)
+        for i, m in enumerate(ce.meta)
+    }
+    ce_id = dataclasses.replace(
+        ce, resident_map=rmap, resident_rows=tuple(m.count for m in ce.meta)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(compressed_expert_ffn(ce_id, xp, cap)), y_full
+    )
+    # permuted rows: bucket b1 (count 2) stored reversed in its buffer
+    arrays = dict(ce.arrays)
+    arrays["b1"] = jax.tree.map(lambda a: a[::-1], ce.arrays["b1"])
+    rmap2 = dict(rmap, b1=jnp.asarray([1, 0], jnp.int32))
+    ce_perm = dataclasses.replace(
+        ce, arrays=arrays, resident_map=rmap2,
+        resident_rows=tuple(m.count for m in ce.meta),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(compressed_expert_ffn(ce_perm, xp, cap)), y_full
+    )
+
+
+def test_residency_changes_keep_pytree_stable():
+    """Uploads change leaf *values* only: the flattened treedef — what
+    decides whether jit retraces — is identical across residency states
+    of the same budget, and differs once the budget (shapes) changes."""
+    bundle = get_model(TINY_MOE)
+    params = bundle.init(jax.random.PRNGKey(0))
+    ce = compress_for_serving(TINY_MOE, params)["blocks"]["moe_ce"]
+    mgr = ExpertOffloadManager(ce, resident_slots=3)
+    before = jax.tree_util.tree_structure(mgr.ce)
+    # residency-only movement: bucket b1 (slots 1..2, budget 1) swaps its
+    # resident slot — values move, treedef (what decides retraces) doesn't
+    counts = np.zeros((2, mgr.num_slots), np.int64)
+    counts[:, 2] = 1  # only the cold slot of b1 is used
+    mgr.begin_step()
+    ups, _ = mgr.ensure_resident(counts)
+    assert ups >= 1 and mgr.grows == 0
+    assert jax.tree_util.tree_structure(mgr.ce) == before
+    assert mgr.resident_slots_of(0)["b1"] == {1}
+    # working-set overflow (both b1 slots in one step) forces growth —
+    # a legitimate shape/structure change that re-specializes the jit
+    counts[:, 1] = 1
+    mgr.begin_step()
+    mgr.ensure_resident(counts)
+    assert mgr.grows == 1
+    assert jax.tree_util.tree_structure(mgr.ce) != before
+
+
+# -------------------------------------------------- engine equivalence
+@pytest.mark.parametrize("seed", [0, 1])
+def test_offload_equivalence_budget_sweep(compressed_model, seed):
+    """Greedy outputs are bit-identical to the all-resident engine at
+    every budget from fully resident down to the per-bucket floor, over
+    random traces with mid-flight admissions (3 requests, 2 slots)."""
+    cfg, params = compressed_model
+    baseline = PagedServingEngine(cfg, params, ECFG)
+    out0 = baseline.serve(make_requests(cfg, 3, seed))
+    assert baseline.offload is None
+    num_slots = params["blocks"]["moe_ce"].num_slots
+    for budget in range(num_slots, 2, -1):
+        eng = PagedServingEngine(
+            cfg, params, dataclasses.replace(ECFG, resident_experts=budget)
+        )
+        out = eng.serve(make_requests(cfg, 3, seed))
+        assert out == out0, f"budget {budget} diverged from all-resident"
+        m = eng.metrics.summary()
+        if budget >= num_slots:
+            # fully resident: every program run must hit
+            assert m["expert_prefetch_misses"] == 0
+            assert m["expert_hit_rate"] == 1.0
+
+
+def test_forced_prefetch_miss_replays_bit_identical(compressed_model):
+    """A budget below the slot count starts with cold experts resident
+    nowhere — the first programs that route to them MUST miss, upload
+    synchronously, replay, and still emit bit-identical tokens."""
+    cfg, params = compressed_model
+    baseline = PagedServingEngine(cfg, params, ECFG)
+    out0 = baseline.serve(make_requests(cfg, 3, 0))
+    eng = PagedServingEngine(
+        cfg, params, dataclasses.replace(ECFG, resident_experts=3)
+    )
+    # before any traffic the device holds only the budgeted slice
+    assert eng.offload.resident_bytes < eng.offload.host_bytes
+    out = eng.serve(make_requests(cfg, 3, 0))
+    m = eng.metrics.summary()
+    assert m["expert_prefetch_misses"] >= 1, "trace must force a miss"
+    assert m["expert_miss_uploads"] >= 1
+    assert m["expert_upload_bytes"] > 0
+    assert out == out0
+    # resident gauge tracks the (possibly grown) device footprint
+    assert eng.offload.resident_bytes <= eng.offload.host_bytes
+    assert m["expert_resident_bytes_last"] == eng.offload.resident_bytes
+
+
+def test_offload_composes_with_preemption(compressed_model):
+    """Expert offload and KV preemption squeeze different memories; both
+    at once must still reproduce the roomy all-resident run."""
+    cfg, params = compressed_model
+    roomy = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=3, num_blocks=16,
+                            max_blocks_per_slot=4),
+    )
+    out0 = roomy.serve(make_requests(cfg, 3, 2, max_new=8, plen=3))
+    tight = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=3, num_blocks=6,
+                            max_blocks_per_slot=4, preempt_mode="swap",
+                            resident_experts=3),
+    )
+    out = tight.serve(make_requests(cfg, 3, 2, max_new=8, plen=3))
+    m = tight.metrics.summary()
+    assert m["preemptions"] >= 1, "tight pool must preempt"
+    assert out == out0
+
+
+def test_offload_deterministic_replay(compressed_model):
+    """Same trace, same budget ⇒ identical outputs AND identical
+    wall-clock-free counters (prefetch decisions, miss uploads, upload
+    bytes are all deterministic functions of the trace)."""
+    cfg, params = compressed_model
+    runs = []
+    for _ in range(2):
+        eng = PagedServingEngine(
+            cfg, params, dataclasses.replace(ECFG, resident_experts=3)
+        )
+        out = eng.serve(make_requests(cfg, 3, 1))
+        runs.append((out, eng.metrics.counters()))
+    (out_a, ctr_a), (out_b, ctr_b) = runs
+    assert out_a == out_b
+    assert ctr_a == ctr_b
+
+
+def test_budget_below_working_set_grows_not_corrupts(compressed_model):
+    """The per-bucket floor (1 slot each) is below the decode working
+    set here; the manager must grow the buffer (counted) and keep the
+    outputs bit-identical — never silently compute with wrong rows."""
+    cfg, params = compressed_model
+    baseline = PagedServingEngine(cfg, params, ECFG)
+    out0 = baseline.serve(make_requests(cfg, 2, 3))
+    eng = PagedServingEngine(
+        cfg, params, dataclasses.replace(ECFG, resident_experts=1)
+    )
+    out = eng.serve(make_requests(cfg, 2, 3))
+    assert out == out0
+    assert eng.offload.grows >= 1
+    # grown buffers never exceed the bucket counts
+    ce = params["blocks"]["moe_ce"]
+    assert all(
+        r <= m.count for r, m in zip(eng.offload.budgets, ce.meta)
+    )
+
+
+# ------------------------------------------------------- manager units
+def test_prefetch_follows_router_stats(compressed_model):
+    """The EMA prefetcher uploads the hottest slot of an under-budget
+    bucket ahead of need and evicts the cold one."""
+    cfg, params = compressed_model
+    ce = params["blocks"]["moe_ce"]
+    mgr = ExpertOffloadManager(ce, resident_slots=3, ema_decay=0.5)
+    # bucket b1 spans slots 1..2 with budget 1: slot 1 (local 0) seeded
+    assert mgr.resident_slots_of(0)["b1"] == {0}
+    counts = np.zeros((2, ce.num_slots), np.int64)
+    counts[:, 2] = 5  # traffic hammers slot 2 (bucket-local 1)
+    mgr.update_stats(counts)
+    ups, nbytes = mgr.prefetch()
+    assert ups >= 1 and nbytes > 0
+    assert mgr.resident_slots_of(0)["b1"] == {1}
+    # stats now favor the resident slot: prefetch is idempotent
+    assert mgr.prefetch() == (0, 0)
+
+
+def test_manager_rejects_bad_inputs(compressed_model):
+    cfg, params = compressed_model
+    ce = params["blocks"]["moe_ce"]
+    mgr = ExpertOffloadManager(ce, resident_slots=2)
+    with pytest.raises(ValueError):
+        ExpertOffloadManager(mgr.ce, resident_slots=2)  # already offloaded
+    # unstacked (single-layer) buckets are not a serving layout
+    rng = np.random.default_rng(0)
+    e, d, f = 4, 32, 32
+    experts = {
+        "w_gate": rng.normal(size=(e, d, f)).astype(np.float32),
+        "w_up": rng.normal(size=(e, d, f)).astype(np.float32),
+        "w_down": rng.normal(size=(e, f, d)).astype(np.float32),
+    }
+    flat = build_compressed_experts(experts, BITS, group=16, ep=1,
+                                    refine=False)
+    with pytest.raises(ValueError):
+        ExpertOffloadManager(flat, resident_slots=2)
+
+
+def test_engine_requires_compressed_params_for_offload():
+    bundle = get_model(TINY_MOE)
+    params = bundle.init(jax.random.PRNGKey(0))  # fp experts, no moe_ce
+    with pytest.raises(ValueError):
+        PagedServingEngine(
+            TINY_MOE, params,
+            dataclasses.replace(ECFG, resident_experts=2),
+        )

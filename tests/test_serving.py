@@ -91,6 +91,24 @@ def test_allocator_double_free_raises():
         a.free([99])  # never allocated
 
 
+def test_allocator_free_is_atomic():
+    """A free list containing one bad block must leave the allocator
+    untouched (documented invariant) — not half-free the good prefix."""
+    a = BlockAllocator(8)
+    good = a.alloc(3)
+    free_before = a.num_free
+    with pytest.raises(ValueError):
+        a.free([good[0], good[1], 99])  # 99 was never allocated
+    assert a.num_free == free_before
+    assert a.allocated == frozenset(good)  # nothing partially freed
+    with pytest.raises(ValueError):
+        a.free([good[0], good[0]])  # duplicate within one call
+    assert a.num_free == free_before
+    assert a.allocated == frozenset(good)
+    a.free(good)  # the valid list still frees in full
+    assert a.num_free == 8 and a.allocated == frozenset()
+
+
 def test_allocator_recycles_blocks():
     a = BlockAllocator(4)
     first = a.alloc(4)
@@ -154,7 +172,7 @@ def test_paged_matches_dense_logits(model):
         n = min(c, len(prompt) - off)
         chunk = np.zeros((1, c), np.int32)
         chunk[0, :n] = prompt[off : off + n]
-        cache.k, cache.v, logits = eng._prefill(
+        cache.k, cache.v, logits, _ = eng._prefill(
             params, cache.k, cache.v, jnp.asarray(chunk),
             jnp.int32(off), jnp.int32(n), table_row,
         )
@@ -171,7 +189,7 @@ def test_paged_matches_dense_logits(model):
         positions[slot] = pos
         active = np.zeros((b,), bool)
         active[slot] = True
-        cache.k, cache.v, logits, _ = eng._decode(
+        cache.k, cache.v, logits, _, _ = eng._decode(
             params, cache.k, cache.v, jnp.asarray(token),
             jnp.asarray(positions), cache.tables_device(), jnp.asarray(active),
         )
@@ -221,6 +239,70 @@ def test_scheduler_mid_flight_admission(model):
     assert len(eng.cache.free_slots) == ECFG.max_slots
 
 
+def test_admission_depth_counts_admitted_request(model):
+    """record_admission logs the queue depth the admission decision saw —
+    including the request being admitted (regression: the engine used to
+    read queue_depth after try_admit popped the head, off by one)."""
+    cfg, params = model
+    eng = PagedServingEngine(cfg, params, ECFG)  # 2 slots
+    rng = np.random.default_rng(11)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=5).astype(np.int32),
+                max_new=3)
+        for i in range(3)
+    ]
+    eng.serve(reqs)
+    depths = [a["queue_depth"] for a in eng.metrics.admissions]
+    # step 0: three waiting, two slots -> depths 3 then 2; the third is
+    # admitted alone once a slot frees -> depth 1 (itself)
+    assert depths == [3, 2, 1]
+    assert all(d >= 1 for d in depths)  # an admitted request counts itself
+
+
+def test_expert_activation_ignores_inactive_slots(model):
+    """Regression for OTP activation dilution: the per-step activation
+    metric must be computed over *active* slots only — the garbage token
+    an empty slot decodes must not move it (paged_decode_step used to
+    average the mask over all slots)."""
+    cfg, _ = model
+    from test_offload import compress_for_serving
+
+    from repro.core.otp import init_otp_router
+
+    bundle = get_model(cfg)
+    params_c = compress_for_serving(cfg, bundle.init(jax.random.PRNGKey(0)))
+    otps = [
+        init_otp_router(jax.random.PRNGKey(100 + l), cfg.d_model, cfg.top_k)
+        for l in range(cfg.num_layers)
+    ]
+    params_c["blocks"]["otp"] = jax.tree.map(lambda *xs: jnp.stack(xs), *otps)
+    cache = PagedKVCache.create(
+        cfg, num_blocks=8, block_size=4, max_slots=2, max_blocks_per_slot=2
+    )
+    cache.acquire_slot(2)
+    cache.acquire_slot(2)
+    tables = jnp.asarray(cache.block_tables)
+    positions = jnp.zeros((2,), jnp.int32)
+
+    @jax.jit
+    def act_of(tokens, active):
+        pc = {"k": cache.k, "v": cache.v, "block_tables": tables,
+              "active": active}
+        _, _, info = tf.paged_decode_step(params_c, pc, tokens, positions, cfg)
+        return info["expert_activation"]
+
+    masked, unmasked = [], []
+    for garbage in range(10):
+        tokens = jnp.asarray([[7], [garbage]], jnp.int32)
+        masked.append(float(act_of(tokens, jnp.asarray([True, False]))))
+        unmasked.append(float(act_of(tokens, jnp.asarray([True, True]))))
+    # sanity: slot 1's token genuinely moves the metric when it counts
+    assert len({round(u, 6) for u in unmasked}) > 1
+    # regression: with slot 1 inactive its token must not move the metric
+    assert len({round(m, 6) for m in masked}) == 1
+
+
 def test_model_api_paged_dispatch(model):
     """The bundle-level API accepts the paged cache layout: decode_step
     dispatches on ``"block_tables" in cache`` and prefill on ``paged=``,
@@ -239,7 +321,7 @@ def test_model_api_paged_dispatch(model):
         params, {"tokens": jnp.asarray(prompt[None])}, cfg,
         paged={"cache": pc},
     )
-    pc2, logits2 = tf.paged_prefill_chunk(
+    pc2, logits2, _ = tf.paged_prefill_chunk(
         params, pc, jnp.asarray(prompt[None]), jnp.int32(0),
         jnp.int32(len(prompt)), cfg,
     )
