@@ -1,0 +1,228 @@
+"""Expert-FFN hot path: legacy per-expert scan vs grouped GEMM dispatch.
+
+The compressed MoE layer's compute used to be a ``lax.scan`` over
+experts on the dense ``[num_slots·cap, D]`` capacity layout — every
+padded capacity row was dequantized against and multiplied, routed or
+not. The grouped path (:func:`repro.core.compressed_moe.
+compressed_expert_ffn`, default backend) compacts each bucket's
+occupied row prefixes into bm-aligned ragged groups and lets the
+``moe_gmm`` kernel skip every row-block past the routed frontier, so
+its useful-FLOP count scales with *traffic*, not with capacity.
+
+This bench seeds the perf trajectory for that path: scan vs grouped
+legs across bit mixes × capacity factors × batch shapes, reporting
+
+* CPU wall-clock per call (what this host can measure — the jnp oracle
+  computes skipped blocks and masks them, so treat CPU wall-clock as a
+  dispatch-overhead check, not the kernel story),
+* analytic MAC FLOPs actually *required* by each path per routed
+  (token, choice) pair — the capacity-padding waste the grouped path's
+  ``num_active`` frontier eliminates on TPU, exact by construction,
+
+and writes every leg to ``results/BENCH_moe_ffn.json``:
+
+    PYTHONPATH=src python -m benchmarks.moe_ffn_bench [--quick|--smoke]
+
+``--smoke`` is the CI leg: tiny shapes, still ≥3 capacity factors, and
+it asserts scan/grouped numerical equivalence on every leg it times.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from types import SimpleNamespace
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compressed_moe as cm
+from repro.models.moe import (
+    capacity_dispatch,
+    dispatch_capacity,
+    slot_fill_counts,
+)
+
+from .common import csv_row
+
+OUT_PATH = os.path.join("results", "BENCH_moe_ffn.json")
+
+BIT_MIXES = {
+    "uniform2": lambda e: [2] * e,
+    "mixed124": lambda e: [1, 2, 4] * (e // 3) + [2] * (e % 3),
+    "mixed23": lambda e: [2] * (e // 2) + [3] * (e - e // 2),
+}
+
+
+def _routing(ce, t: int, k: int, cap: int, seed: int, skew: float = 1.2):
+    """Zipf-ish routed batch → (xp, slot_fill, routed_pairs)."""
+    rng = np.random.default_rng(seed)
+    d = ce.d_model
+    x2 = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    p = 1.0 / np.arange(1, ce.num_slots + 1) ** skew
+    p /= p.sum()
+    slots = jnp.asarray(
+        rng.choice(ce.num_slots, size=(t, k), p=p), jnp.int32
+    )
+    gates = jax.nn.softmax(jnp.asarray(rng.normal(size=(t, k)), jnp.float32))
+    xp, dest, valid, _ = capacity_dispatch(
+        x2, slots, gates, ce.num_slots, cap, None
+    )
+    fill = slot_fill_counts(dest, valid, ce.num_slots, cap)
+    return xp, fill, int(np.asarray(valid).sum())
+
+
+def _flops(ce, cap: int, fill: np.ndarray, path: str) -> int:
+    """Exact MAC FLOPs the path must execute (2·rows·D·F per projection).
+
+    scan: every capacity row of every bucket. grouped: only bm-aligned
+    blocks carrying routed rows (``num_active`` skips the rest)."""
+    total = 0
+    per_row = 3 * 2 * ce.d_model * ce.d_ff  # gate + up + down
+    bm = cm.gmm_block_rows(cap)
+    for i, m in enumerate(ce.meta):
+        if path == "scan":
+            rows = m.count * cap
+        else:
+            f = np.minimum(fill[m.start : m.start + m.count], cap)
+            rows = int((np.ceil(f / bm) * bm).sum())
+        total += rows * per_row
+    return total
+
+
+def _time_call(fn, *args, iters: int = 5) -> float:
+    y = jax.block_until_ready(fn(*args))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        y = fn(*args)
+    jax.block_until_ready(y)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(quick: bool = False, smoke: bool = False) -> List[str]:
+    print("== moe_ffn_bench (scan vs grouped expert dispatch) ==")
+    # cf sweeps lean toward the drop-free serving regime (cf = E): that
+    # is where capacity padding dominates and the ragged skip pays
+    if smoke:
+        e, d, f, group = 4, 64, 128, 32
+        cfs = (2.0, 4.0, 8.0)
+        shapes = ((32, 2),)
+        mixes = ("mixed124",)
+        iters = 2
+    elif quick:
+        e, d, f, group = 8, 128, 256, 64
+        cfs = (2.0, 4.0, 8.0)
+        shapes = ((64, 2),)
+        mixes = ("uniform2", "mixed124")
+        iters = 3
+    else:
+        e, d, f, group = 8, 256, 512, 128
+        cfs = (1.5, 2.0, 4.0, 8.0)
+        shapes = ((64, 2), (256, 2), (16, 2))
+        mixes = tuple(BIT_MIXES)
+        iters = 5
+    rng = np.random.default_rng(0)
+    rows: List[str] = []
+    legs: List[Dict] = []
+    for mix in mixes:
+        bits = BIT_MIXES[mix](e)
+        experts = {
+            "w_gate": rng.normal(size=(e, d, f)).astype(np.float32),
+            "w_up": rng.normal(size=(e, d, f)).astype(np.float32),
+            "w_down": rng.normal(size=(e, f, d)).astype(np.float32),
+        }
+        ce = cm.build_compressed_experts(experts, bits, group=group, ep=1,
+                                         refine=False)
+        for t, k in shapes:
+            for cf in cfs:
+                # the exact capacity the model paths would dispatch with
+                cap = dispatch_capacity(
+                    SimpleNamespace(
+                        moe_capacity_factor=cf, top_k=k, num_experts=e
+                    ),
+                    t,
+                )
+                xp, fill, routed = _routing(ce, t, k, cap, seed=t + int(cf * 8))
+                fill_np = np.asarray(fill)
+                outs = {}
+                for backend, use_fill in (("scan", False), ("grouped", True)):
+                    sf = fill if use_fill else None
+
+                    def call(xp_, sf_=sf, kb_=backend):
+                        return cm.compressed_expert_ffn(
+                            ce, xp_, cap, backend=kb_, slot_fill=sf_
+                        )
+
+                    fn = jax.jit(call)
+                    us = _time_call(fn, xp, iters=iters)
+                    outs[backend] = np.asarray(fn(xp))
+                    flops = _flops(ce, cap, fill_np, backend)
+                    fpr = flops / max(routed, 1)
+                    cap_rows = ce.num_slots * cap
+                    leg = {
+                        "bit_mix": mix,
+                        "bits": bits,
+                        "capacity_factor": cf,
+                        "tokens": t,
+                        "top_k": k,
+                        "cap": cap,
+                        "backend": backend,
+                        "us_per_call": us,
+                        "flops": flops,
+                        "flops_per_routed_pair": fpr,
+                        "routed_pairs": routed,
+                        "capacity_rows": cap_rows,
+                        "capacity_utilization": routed / cap_rows,
+                    }
+                    legs.append(leg)
+                    rows.append(csv_row(
+                        f"moe_ffn/{mix}_cf{cf:g}_t{t}_{backend}",
+                        us,
+                        f"flops_per_pair={fpr:.3g};"
+                        f"routed={routed};cap_rows={cap_rows};"
+                        f"util={routed / cap_rows:.2f}",
+                    ))
+                np.testing.assert_allclose(
+                    outs["scan"], outs["grouped"], rtol=2e-4, atol=2e-4
+                )
+    # pair up scan/grouped legs for the headline reduction numbers
+    for i in range(0, len(legs), 2):
+        s, g = legs[i], legs[i + 1]
+        s["flops_reduction_vs_scan"] = 1.0
+        g["flops_reduction_vs_scan"] = s["flops"] / max(g["flops"], 1)
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(
+            {
+                "bench": "moe_ffn",
+                "d_model": d, "d_ff": f, "num_experts": e, "group": group,
+                "note": (
+                    "FLOPs are exact per-path MAC requirements; wall-clock "
+                    "is this host (CPU oracle computes skipped blocks)"
+                ),
+                "legs": legs,
+            },
+            fh, indent=1,
+        )
+    red = [l["flops_reduction_vs_scan"] for l in legs
+           if l["backend"] == "grouped"]
+    print(f"  wrote {OUT_PATH}: {len(legs)} legs; grouped FLOP reduction "
+          f"vs scan {min(red):.2f}x–{max(red):.2f}x")
+    return rows
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized: tiny shapes, still 3 capacity factors, "
+                        "asserts scan/grouped equivalence per leg")
+    args = p.parse_args()
+    run(quick=args.quick, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,6 +27,7 @@ def main() -> None:
         kernel_bench,
         lambda_sweep,
         memory_speed,
+        moe_ffn_bench,
         otp_ablation,
         pareto,
         roofline,
@@ -35,6 +36,7 @@ def main() -> None:
 
     benches = {
         "kernel_bench": lambda: kernel_bench.run(args.quick),
+        "moe_ffn": lambda: moe_ffn_bench.run(args.quick),
         "bit_allocation": lambda: bit_allocation.run(args.quick),
         "pareto": lambda: pareto.run(args.quick),
         "otp_ablation": lambda: otp_ablation.run(args.quick),

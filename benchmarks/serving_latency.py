@@ -60,13 +60,13 @@ def _stacked_compressed_params(cfg, params, calib):
 
 
 def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
-                seed: int = 0):
+                seed: int = 0, ffn_backend: Optional[str] = None):
     mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
     engine = PagedServingEngine(
         cfg, params,
         EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
                      num_blocks=slots * mb, max_blocks_per_slot=mb,
-                     prefill_chunk=BLOCK_SIZE),
+                     prefill_chunk=BLOCK_SIZE, ffn_backend=ffn_backend),
     )
     rng = np.random.default_rng(seed)
     reqs = [
@@ -207,7 +207,7 @@ def resident_sweep(budgets: Optional[Sequence[int]] = None, *,
     return rows
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, ffn_backend: Optional[str] = None):
     print("== serving_latency (paged engine, fp vs PMQ) ==")
     cfg, params = trained_model()
     calib = calibration(cfg, params)
@@ -220,9 +220,10 @@ def run(quick: bool = False):
         for load in loads:
             n = max(1, int(round(load * slots)))
             m = _serve_once(cfg, prm, n_requests=n, slots=slots,
-                            max_new=max_new)
+                            max_new=max_new, ffn_backend=ffn_backend)
             rows.append(csv_row(
-                f"serving/{label}_load{load:g}",
+                f"serving/{label}_load{load:g}"
+                + (f"_{ffn_backend}" if ffn_backend else ""),
                 m["decode_step_mean_s"] * 1e6,
                 f"ttft_ms={m['ttft_mean_s']*1e3:.1f};"
                 f"ttft_p95_ms={m['ttft_p95_s']*1e3:.1f};"
@@ -230,7 +231,8 @@ def run(quick: bool = False):
                 f"tok_p95_ms={m['decode_step_p95_s']*1e3:.1f};"
                 f"tps={m['tokens_per_s']:.1f};"
                 f"midflight={m['mid_flight_admissions']};"
-                f"act={m['expert_activation_mean']:.2f}",
+                f"act={m['expert_activation_mean']:.2f};"
+                f"cap_util={m['capacity_util_mean']:.2f}",
             ))
     print(f"  pmq avg bits {avg_bits:.2f}; rows emitted: {len(rows)}")
     print("== serving_latency (pool pressure: growth+preempt vs reserve) ==")
@@ -255,7 +257,19 @@ def main() -> None:
                    help="explicit per-layer expert-slot budgets for the "
                         "residency sweep (fp + PMQ legs); default derives "
                         "~3 budgets from the compressed model's slot count")
+    p.add_argument("--ffn-backend", choices=["grouped", "scan", "ref"],
+                   default=None,
+                   help="compressed expert-FFN implementation for every "
+                        "engine this run builds (grouped GEMM vs legacy "
+                        "per-expert scan vs forced jnp reference) — "
+                        "reproducible A/B legs from the CLI")
     args = p.parse_args()
+    if args.ffn_backend:
+        # pressure/residency sweeps build engines through shared helpers;
+        # the process default reaches all of them (trace-time static)
+        import os
+
+        os.environ["REPRO_FFN_BACKEND"] = args.ffn_backend
     if args.pool_blocks is not None:
         pool_sweep(args.pool_blocks, quick=args.quick,
                    n_requests=4 if args.quick else 8,
@@ -264,7 +278,7 @@ def main() -> None:
         resident_sweep(args.resident_experts, quick=args.quick,
                        n_requests=4 if args.quick else 6, slots=3)
     if args.pool_blocks is None and args.resident_experts is None:
-        run(quick=args.quick)
+        run(quick=args.quick, ffn_backend=args.ffn_backend)
 
 
 if __name__ == "__main__":

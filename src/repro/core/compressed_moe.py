@@ -1,14 +1,36 @@
-"""PMQ-compressed MoE experts: bit-bucketed storage + EP-chunked compute.
+"""PMQ-compressed MoE experts: bit-bucketed storage + grouped-GEMM compute.
 
 After :func:`repro.core.pmq.allocate_model` assigns per-expert bit-widths,
 experts are **permuted so equal-width experts are contiguous** and stacked
 into ≤3 *buckets* (one per bit-width). Each bucket is padded to a multiple
-of the expert-parallel shard count so the compute scans one local expert
-per shard per step — dequantized weights exist only as a
-[ep, D, F]-transient in bf16, never the whole bucket (DESIGN.md §5.4).
+of the expert-parallel shard count (DESIGN.md §5.4).
 
-On TPU the scan body is replaced by the ``moe_gmm`` Pallas kernel; the
-jnp path below is its oracle-equivalent and the dry-run path.
+**Compute path (default: ``grouped``).** The capacity-dispatch layout is
+already expert-major — slot ``s`` owns rows ``[s·cap, (s+1)·cap)`` — so
+each bucket's slice is a token-sorted ragged batch in disguise: the
+occupied rows of every slot are a *prefix* (capacity dispatch assigns
+rank-within-expert destinations). :func:`compressed_expert_ffn` compacts
+those prefixes into back-to-back ``bm``-aligned groups, issues the
+bucket's whole SwiGLU as grouped GEMMs via :func:`repro.kernels.ops`
+(one fused gate/up call with the SwiGLU epilogue + one down call) with a
+scalar-prefetched ``block_expert`` table, and scatters the results back
+to the capacity layout. Row-blocks past the routed-token frontier are
+skipped inside the kernel (``num_active``), so the dead compute on
+unrouted capacity padding — which the old per-expert ``lax.scan`` paid
+in full, dequantizing every expert against every padded row — is gone.
+On TPU ``ops.moe_gmm`` lowers to the Pallas kernel in
+:mod:`repro.kernels.moe_gmm`; on CPU it runs the jnp oracle
+(``moe_gmm_ref``), and tests opt into ``interpret``.
+
+**Backend knob.** ``backend=`` / ``ffn_backend=`` selects per call:
+``"grouped"`` (platform-default kernel — Pallas on TPU, oracle on CPU),
+``"interpret"`` / ``"ref"`` (grouped layout, forced kernel backend), or
+``"scan"`` (the legacy per-expert scan, kept as the A/B baseline and
+numeric reference; its dequant-matmul now routes through
+``ops.quant_matmul_parts`` so even the scan gets the Pallas
+dequant-GEMM on TPU). ``REPRO_FFN_BACKEND`` overrides the default
+process-wide — it is read at trace time, so a jitted serving engine
+keeps whichever backend it was traced with.
 
 The router remap (original expert id → permuted slot) rides the routing
 top-k output, so the rest of the MoE layer (capacity dispatch, OTP
@@ -17,17 +39,20 @@ masking, combine) is unchanged.
 **Host-offloaded residency** (serving): a bucket may be split into a
 *resident* device partition of ``resident_rows[i]`` expert rows plus a
 host backing store (:mod:`repro.serving.offload`). ``resident_map[bᵢ]``
-maps every bucket slot to a row of the resident buffer; the compute
-gathers rows back to the full ``[count, ...]`` layout, so the math —
-and the bits — are identical to the all-resident path for every slot
-whose resident row holds its true weights. The pytree structure is a
-function of the *budget* only (array shapes + map shape), never of
-*which* experts are resident, so uploads between steps never retrace
-the jitted serving programs.
+maps every bucket slot to a row of the resident buffer. The grouped path
+never materializes the gathered bucket: the indirection is folded into
+the scalar ``block_expert`` table once per bucket
+(``block_expert = resident_map[block_expert]``), so the kernel fetches
+resident rows directly — bit-identical to the all-resident path for
+every slot whose resident row holds its true weights. The pytree
+structure is a function of the *budget* only (array shapes + map shape),
+never of *which* experts are resident, so uploads between steps never
+retrace the jitted serving programs.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import os
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -36,8 +61,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels import ref as kref
-from ..models.moe import capacity_dispatch, combine, route_topk
+from ..kernels import ops
+from ..models.moe import (
+    capacity_dispatch,
+    combine,
+    dispatch_capacity,
+    route_topk,
+    slot_fill_counts,
+)
 from ..models.layers import mlp
 from ..parallel.sharding import model_axis_size, shard
 from . import otp as otp_mod
@@ -47,10 +78,42 @@ from .quantizers import quantize_to_packed
 __all__ = [
     "BucketMeta",
     "CompressedExperts",
+    "FFN_BACKENDS",
     "build_compressed_experts",
     "compressed_expert_ffn",
     "compressed_moe_layer",
+    "default_ffn_backend",
+    "gmm_block_rows",
+    "grouped_bucket_ffn",
 ]
+
+FFN_BACKENDS = ("grouped", "scan", "ref", "interpret")
+
+
+def default_ffn_backend() -> str:
+    """Process-wide expert-FFN path: ``REPRO_FFN_BACKEND`` or ``grouped``."""
+    b = os.environ.get("REPRO_FFN_BACKEND", "").strip().lower() or "grouped"
+    if b not in FFN_BACKENDS:
+        raise ValueError(
+            f"REPRO_FFN_BACKEND={b!r} not in {FFN_BACKENDS}"
+        )
+    return b
+
+
+def _resolve_backend(backend: Optional[str]) -> Tuple[str, Optional[str]]:
+    """``backend`` → ``(path, kernel_backend)``.
+
+    ``path`` is ``"grouped"`` or ``"scan"``; ``kernel_backend`` feeds the
+    :mod:`repro.kernels.ops` platform selection (None = platform default).
+    """
+    b = backend or default_ffn_backend()
+    if b == "scan":
+        return "scan", None
+    if b == "grouped":
+        return "grouped", None
+    if b in ("ref", "interpret"):
+        return "grouped", b
+    raise ValueError(f"ffn backend {b!r} not in {FFN_BACKENDS}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,25 +271,29 @@ def build_compressed_experts(
     )
 
 
-def _bmm_ep(x3, wd, bits: int, group: int):
+def _bmm_ep(x3, wd, bits: int, group: int, kernel_backend: Optional[str] = None):
     """Dequant-matmul vmapped over the (model-sharded) ep axis.
 
     ``x3 [ep, cap, K]``, ``wd`` packed arrays sliced to one local expert:
-    [ep, K/per, N] (+ scale/zero [ep, ngroups, N]).
+    [ep, K/per, N] (+ scale/zero [ep, ngroups, N]). Routed through the
+    :func:`repro.kernels.ops.quant_matmul_parts` backend selection, so
+    TPU shards run the fused dequant-GEMM Pallas kernel.
     """
     if bits == 3:
-        packed = (wd["hi"], wd["lo"])
-    else:
-        packed = wd["data"]
-    fn = lambda x2, pk, s, z: kref.quant_matmul_ref(
-        x2, pk, s, z, bits=bits, group=group
+        fn = lambda x2, hi, lo, s, z: ops.quant_matmul_parts(
+            x2, (hi, lo), s, z, bits=bits, group=group,
+            backend=kernel_backend,
+        )
+        return jax.vmap(fn)(x3, wd["hi"], wd["lo"], wd["scale"], wd["zero"])
+    fn = lambda x2, pk, s, z: ops.quant_matmul_parts(
+        x2, pk, s, z, bits=bits, group=group, backend=kernel_backend
     )
-    return jax.vmap(fn)(x3, packed, wd["scale"], wd["zero"])
+    return jax.vmap(fn)(x3, wd["data"], wd["scale"], wd["zero"])
 
 
 def _ep_fallback(count: int, ep: int) -> None:
     """A bucket whose padded expert count does not divide the runtime
-    model-axis extent silently loses expert parallelism (the scan runs
+    model-axis extent silently loses expert parallelism (the compute runs
     every expert on every shard). That only happens when the bucket was
     built with a different ``ep`` than the mesh it runs under — loud by
     default, fatal under ``REPRO_STRICT_EP=1``.
@@ -244,58 +311,211 @@ def _ep_fallback(count: int, ep: int) -> None:
     warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
+def _gmm_parts(w: Dict, bits: int):
+    pk = (w["hi"], w["lo"]) if bits == 3 else w["data"]
+    return pk, w["scale"], w["zero"]
+
+
+def gmm_block_rows(cap: int) -> int:
+    """Row-block size ``bm`` for the grouped path at capacity ``cap``.
+
+    ``bm`` must divide ``cap`` (so slot boundaries are block-aligned) and
+    trades MXU tile height against ragged-skip granularity: each
+    nonempty expert wastes < ``bm`` rows of compute, so smaller blocks
+    skip more dead padding while larger blocks feed the 128-row MXU
+    better. Default target 16 — drop-free serving capacities
+    (cf = num_experts) run single-digit-percent utilization, where skip
+    granularity dominates; override with ``REPRO_GMM_BM`` (e.g. 128 for
+    long-prefill TPU runs). Always a multiple of 8 because ``cap`` is.
+    """
+    target = int(os.environ.get("REPRO_GMM_BM", "0") or 0) or 16
+    target = max(8, ((target + 7) // 8) * 8)  # sublane-align the target
+    return math.gcd(cap, target)
+
+
+def grouped_bucket_ffn(
+    xb: jnp.ndarray,
+    wdict: Dict,
+    *,
+    bits: int,
+    group: int,
+    count: int,
+    cap: int,
+    kernel_backend: Optional[str] = None,
+    fill: Optional[jnp.ndarray] = None,
+    rmap: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """One bucket's SwiGLU over its capacity slice as grouped GEMMs.
+
+    ``xb [count·cap, D]`` is the bucket's expert-major capacity slice;
+    ``wdict`` its packed gate/up/down arrays (leading dim = ``count``,
+    or the resident row count when ``rmap`` indirects). Returns
+    ``[count·cap, D]`` in the same layout.
+
+    ``fill [count]`` (optional) gives each slot's occupied-row count —
+    occupancy is a *prefix* per slot (capacity dispatch ranks within the
+    expert), so compaction is a pure index shuffle: slot ``s`` row ``j``
+    (``j < fill[s]``) moves to ``offsets[s] + j`` where groups are packed
+    back-to-back at ``bm`` boundaries. The trailing ``num_active`` block
+    count lets the kernel skip every block past the routed-token
+    frontier; results are scattered back so unoccupied capacity rows are
+    exactly zero — identical to what the scan path computes for them.
+    Without ``fill`` every capacity row is treated as live (the layout
+    is already bm-aligned and expert-major, so no shuffle is needed).
+
+    ``rmap [count]`` folds host-offload residency into the scalar
+    ``block_expert`` table instead of gathering the packed bucket.
+    """
+    m = count * cap
+    d = xb.shape[-1]
+    bm = gmm_block_rows(cap)
+    if fill is not None:
+        fill = jnp.minimum(fill.astype(jnp.int32), cap)
+        padded = ((fill + bm - 1) // bm) * bm  # [count], bm | cap ⇒ Σ ≤ m
+        nblk = padded // bm
+        offsets = jnp.cumsum(padded) - padded  # exclusive
+        s_of = jnp.arange(m, dtype=jnp.int32) // cap
+        j_of = jnp.arange(m, dtype=jnp.int32) % cap
+        # capacity row (s, j) → compacted row; dropped/empty rows → m
+        gdest = jnp.where(j_of < fill[s_of], offsets[s_of] + j_of, m)
+        inv = jnp.zeros((m + 1,), jnp.int32)
+        inv = inv.at[gdest].set(jnp.arange(m, dtype=jnp.int32) + 1)[:m]
+        src = jnp.where(inv > 0, inv - 1, m)  # m = appended zero row
+        x_pad = jnp.concatenate([xb, jnp.zeros((1, d), xb.dtype)], axis=0)
+        xg = x_pad[src]
+        block_expert = jnp.repeat(
+            jnp.arange(count, dtype=jnp.int32), nblk,
+            total_repeat_length=m // bm,
+        )  # trailing pad entries repeat a valid id; num_active masks them
+        num_active = jnp.sum(nblk).astype(jnp.int32).reshape(1)
+    else:
+        xg = xb
+        gdest = None
+        block_expert = jnp.repeat(jnp.arange(count, dtype=jnp.int32), cap // bm)
+        num_active = None
+    if rmap is not None:
+        block_expert = rmap[block_expert].astype(jnp.int32)
+
+    gp, gs, gz = _gmm_parts(wdict["w_gate"], bits)
+    up, us, uz = _gmm_parts(wdict["w_up"], bits)
+    dp, ds, dz = _gmm_parts(wdict["w_down"], bits)
+    h = ops.moe_gmm_swiglu(
+        xg, gp, up, gs, gz, us, uz, block_expert, num_active,
+        bits=bits, group=group, backend=kernel_backend, bm=bm,
+    )
+    yg = ops.moe_gmm(
+        h, dp, ds, dz, block_expert, num_active,
+        bits=bits, group=group, backend=kernel_backend, bm=bm,
+    )
+    if gdest is None:
+        return yg
+    y_pad = jnp.concatenate([yg, jnp.zeros((1, d), yg.dtype)], axis=0)
+    return y_pad[gdest]
+
+
 def compressed_expert_ffn(
-    ce: CompressedExperts, xp: jnp.ndarray, cap: int
+    ce: CompressedExperts, xp: jnp.ndarray, cap: int,
+    *,
+    backend: Optional[str] = None,
+    slot_fill: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """SwiGLU over permuted capacity layout ``xp [num_slots*cap, D]``.
 
-    Expert-parallel execution (DESIGN.md §5.4): each bucket's experts are
-    reshaped ``[count·cap, D] → [ep, local, cap, D]`` (ep = model-axis
-    extent, baked into bucket padding at build time) and a ``lax.scan``
-    walks the *local* expert index — every step runs one expert per model
-    shard concurrently, so only one [K, N] dequantized tile exists per
-    shard at a time. The capacity dim additionally shards over ``data``
-    ("moe_elcd") so dispatch buffers never replicate.
+    Default (``backend="grouped"``): each bucket runs as two grouped
+    GEMM calls — fused gate/up with the SwiGLU epilogue, then down —
+    through :func:`grouped_bucket_ffn` (see its docstring for the
+    compacted ragged layout driven by ``slot_fill``, the per-permuted-
+    slot occupied-row counts from capacity dispatch). With a resident
+    partition (``ce.resident_map``) the indirection is folded into the
+    scalar ``block_expert`` table once per bucket, before the GEMM —
+    never a per-step weight gather (non-resident slots read row 0, which
+    is only sound because they carry no routed tokens).
 
-    With a resident partition (``ce.resident_map``) the bucket's packed
-    leaves are first gathered from the ``[resident_rows, ...]`` device
-    buffer back to the full ``[count, ...]`` layout — bit-exact for every
-    slot whose resident row holds its true weights (non-resident slots
-    read row 0, which is only sound because they carry no routed tokens).
+    ``backend="scan"`` keeps the legacy expert-parallel scan (DESIGN.md
+    §5.4): each bucket reshaped ``[count·cap, D] → [ep, local, cap, D]``
+    (ep = model-axis extent, baked into bucket padding at build time),
+    a ``lax.scan`` over the local expert index, one dequantized [K, N]
+    tile per shard per step, dequant-matmul via
+    ``ops.quant_matmul_parts``. It gathers resident rows back to the
+    full bucket layout instead of remapping ``block_expert``.
+
+    Under ``ep > 1`` the grouped path vmaps :func:`grouped_bucket_ffn`
+    over the shard axis (the ``moe_elcd`` capacity sharding is kept); the
+    production multi-host EP route is the shard_map region in
+    :mod:`repro.parallel.ep_shardmap`, which calls the same primitive
+    device-locally.
     """
     d = ce.d_model
+    path, kb = _resolve_backend(backend)
     ys = []
     for i, m in enumerate(ce.meta):
         b = ce.arrays[f"b{i}"]
+        rmap = None
         if ce.resident_map is not None:
             rmap = ce.resident_map[f"b{i}"]
-            b = jax.tree.map(lambda a: jnp.take(a, rmap, axis=0), b)
         ep = model_axis_size()
         if m.count % ep:
             _ep_fallback(m.count, ep)
             ep = 1
         local = m.count // ep
         xb = jax.lax.slice_in_dim(xp, m.start * cap, (m.start + m.count) * cap)
-        x4 = xb.reshape(ep, local, cap, d)
-        x4 = shard(x4, "moe_elcd")
-        w4 = jax.tree.map(
-            lambda a: jnp.moveaxis(a.reshape(ep, local, *a.shape[1:]), 1, 0),
-            b,
-        )  # leaves [local, ep, ...]
-
-        def step(_, inp, bits=m.bits):
-            x3, wg, wu, wd_ = inp
-            h = jax.nn.silu(_bmm_ep(x3, wg, bits, ce.group)) * _bmm_ep(
-                x3, wu, bits, ce.group
+        fill = None
+        if slot_fill is not None:
+            fill = jax.lax.slice_in_dim(
+                slot_fill, m.start, m.start + m.count
             )
-            return None, _bmm_ep(h, wd_, bits, ce.group)
 
-        _, y = jax.lax.scan(
-            step,
-            None,
-            (jnp.moveaxis(x4, 1, 0), w4["w_gate"], w4["w_up"], w4["w_down"]),
-        )  # y [local, ep, cap, D]
-        y = jnp.moveaxis(y, 0, 1).reshape(m.count * cap, d)
+        if path == "scan":
+            if rmap is not None:
+                b = jax.tree.map(lambda a: jnp.take(a, rmap, axis=0), b)
+            x4 = xb.reshape(ep, local, cap, d)
+            x4 = shard(x4, "moe_elcd")
+            w4 = jax.tree.map(
+                lambda a: jnp.moveaxis(a.reshape(ep, local, *a.shape[1:]), 1, 0),
+                b,
+            )  # leaves [local, ep, ...]
+
+            def step(_, inp, bits=m.bits):
+                x3, wg, wu, wd_ = inp
+                h = jax.nn.silu(
+                    _bmm_ep(x3, wg, bits, ce.group, kb)
+                ) * _bmm_ep(x3, wu, bits, ce.group, kb)
+                return None, _bmm_ep(h, wd_, bits, ce.group, kb)
+
+            _, y = jax.lax.scan(
+                step,
+                None,
+                (jnp.moveaxis(x4, 1, 0), w4["w_gate"], w4["w_up"], w4["w_down"]),
+            )  # y [local, ep, cap, D]
+            ys.append(jnp.moveaxis(y, 0, 1).reshape(m.count * cap, d))
+            continue
+
+        if ep == 1:
+            y = grouped_bucket_ffn(
+                xb, b, bits=m.bits, group=ce.group, count=m.count, cap=cap,
+                kernel_backend=kb, fill=fill, rmap=rmap,
+            )
+        else:
+            if rmap is not None:
+                # resident buffers are not ep-structured; materialize the
+                # bucket gather once, then shard as usual
+                b = jax.tree.map(lambda a: jnp.take(a, rmap, axis=0), b)
+            x4 = xb.reshape(ep, local, cap, d)
+            x4 = shard(x4, "moe_elcd")
+            x3 = x4.reshape(ep, local * cap, d)
+            w3 = jax.tree.map(lambda a: a.reshape(ep, local, *a.shape[1:]), b)
+
+            def gfn(xe, we, fe, bits=m.bits):
+                return grouped_bucket_ffn(
+                    xe, we, bits=bits, group=ce.group, count=local, cap=cap,
+                    kernel_backend=kb, fill=fe,
+                )
+
+            if fill is None:
+                y = jax.vmap(lambda xe, we: gfn(xe, we, None))(x3, w3)
+            else:
+                y = jax.vmap(gfn)(x3, w3, fill.reshape(ep, local))
+            y = y.reshape(m.count * cap, d)
         ys.append(y)
     return jnp.concatenate(ys, axis=0)
 
@@ -311,6 +531,7 @@ def compressed_moe_layer(
     otp_tau: float = 1.0,
     capacity_factor: Optional[float] = None,
     count_weight: Optional[jnp.ndarray] = None,
+    ffn_backend: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Dict]:
     """MoE block with PMQ experts (+ optional OTP pruning).
 
@@ -322,11 +543,14 @@ def compressed_moe_layer(
     OTP masking — the router statistic the serving offload prefetcher
     consumes; ``count_weight`` ([T], optional) zeroes the contribution of
     padding/inactive tokens so the counts reflect real traffic only.
+    ``ffn_backend`` selects the expert-FFN implementation (see
+    :data:`FFN_BACKENDS`; default ``grouped``).
 
     Inside a mesh context the routed region runs the shard_map EP path
     (zero all-to-all — see :mod:`repro.parallel.ep_shardmap`); a
     host-offloaded ``ce`` (``resident_map`` set) always takes the local
-    path, which performs the resident-row gather.
+    path, which folds the resident-row indirection into the grouped
+    dispatch tables.
     """
     from ..models.moe import ep_shardmap_ok
     from ..parallel.sharding import current_mesh
@@ -343,7 +567,7 @@ def compressed_moe_layer(
         y, mask_l1 = compressed_moe_region_sharded(
             p, ce, x, cfg, mesh,
             otp_params=otp_params, otp_rng=otp_rng, otp_tau=otp_tau,
-            capacity_factor=capacity_factor,
+            capacity_factor=capacity_factor, ffn_backend=ffn_backend,
         )
         if "shared" in p:
             b, s, d = x.shape
@@ -378,13 +602,17 @@ def compressed_moe_layer(
     slot_counts = (
         jnp.zeros((ce.num_slots + 1,), jnp.int32).at[eff].add(1)[:-1]
     )
-    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
-    cap = max(8, ((int(cf * t * k / e) + 7) // 8) * 8)
+    cap = dispatch_capacity(cfg, t, capacity_factor)
     xp, dest, valid, gflat = capacity_dispatch(
         x2, slots, gates, ce.num_slots, cap, mask
     )
+    # occupied-row counts after capacity clipping: occupancy is a prefix
+    # per slot, so these drive the grouped path's ragged compaction
+    slot_fill = slot_fill_counts(dest, valid, ce.num_slots, cap)
     xp = shard(xp, "moe_ed")
-    yp = compressed_expert_ffn(ce, xp, cap)
+    yp = compressed_expert_ffn(
+        ce, xp, cap, backend=ffn_backend, slot_fill=slot_fill
+    )
     y = combine(yp, dest, valid, gflat, t, k)
     if "shared" in p:
         y = y + mlp(p["shared"], x2)

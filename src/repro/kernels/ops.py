@@ -15,14 +15,21 @@ import jax.numpy as jnp
 from ..core.packing import PackedTensor
 from . import ref
 from .binary_matmul import binary_matmul_pallas
-from .moe_gmm import moe_gmm_pallas, pad_groups, sort_by_expert
+from .moe_gmm import (
+    moe_gmm_pallas,
+    moe_gmm_swiglu_pallas,
+    pad_groups,
+    sort_by_expert,
+)
 from .paged_attention import paged_attention_pallas
 from .quant_matmul import quant_matmul_pallas
 
 __all__ = [
     "quant_matmul",
+    "quant_matmul_parts",
     "binary_matmul",
     "moe_gmm",
+    "moe_gmm_swiglu",
     "paged_attention",
     "pad_groups",
     "sort_by_expert",
@@ -81,6 +88,50 @@ def quant_matmul(
     return y[:m].reshape(*lead, n)
 
 
+def quant_matmul_parts(
+    x: jnp.ndarray,
+    w_packed,
+    scale: jnp.ndarray,
+    zero: jnp.ndarray,
+    *,
+    bits: int,
+    group: int = 128,
+    backend: str | None = None,
+    bm: int = 256,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """``y = x @ dequant(w)`` from raw packed parts (no PackedTensor).
+
+    The backend-selection twin of :func:`quant_matmul` for call sites
+    that hold per-expert stacked/sliced arrays rather than a
+    :class:`PackedTensor` — the EP shard bodies and the legacy scan path
+    route through here so TPU shards get the Pallas kernel and CPU tests
+    keep the jnp oracle. ``w_packed`` is ``[K/per, N]`` uint8 (or the
+    ``(hi, lo)`` plane pair for 3-bit).
+    """
+    backend = backend or default_backend()
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    if backend == "ref":
+        y = ref.quant_matmul_ref(
+            x2, w_packed, scale, zero, bits=bits, group=group
+        )
+        return y.reshape(*lead, y.shape[-1])
+    m = x2.shape[0]
+    n = (w_packed[0] if bits == 3 else w_packed).shape[-1]
+    bm_ = min(bm, _next_mult(m, 8))
+    bn_, bk_ = _gmm_blocks(n, k, group, bn, bk)
+    x2p = _pad_to(x2, bm_, 0)
+    y = quant_matmul_pallas(
+        x2p, w_packed, scale, zero,
+        bits=bits, group=group, bm=bm_, bn=bn_, bk=bk_,
+        interpret=(backend == "interpret"),
+    )
+    return y[:m].reshape(*lead, n)
+
+
 def binary_matmul(
     x: jnp.ndarray,
     b_packed: jnp.ndarray,
@@ -109,12 +160,20 @@ def binary_matmul(
     return y[:m].reshape(*lead, b_packed.shape[1])
 
 
+def _gmm_blocks(n: int, k: int, group: int, bn: int, bk: int):
+    """Clamp default bn/bk to shapes the Pallas kernel's asserts accept."""
+    bn_ = bn if n % min(bn, n) == 0 else n
+    bk_ = bk if (k % min(bk, k) == 0 and min(bk, k) % group == 0) else k
+    return bn_, bk_
+
+
 def moe_gmm(
     x_padded: jnp.ndarray,
     w_packed,
     scale: jnp.ndarray,
     zero: jnp.ndarray,
     block_expert: jnp.ndarray,
+    num_active: jnp.ndarray | None = None,
     *,
     bits: int,
     group: int = 128,
@@ -123,14 +182,55 @@ def moe_gmm(
     bn: int = 256,
     bk: int = 512,
 ) -> jnp.ndarray:
+    """Grouped expert GEMM; ``num_active`` enables the ragged skip of
+    row-blocks past the routed-token frontier (see moe_gmm.py)."""
     backend = backend or default_backend()
     if backend == "ref":
         return ref.moe_gmm_ref(
-            x_padded, w_packed, scale, zero, block_expert,
+            x_padded, w_packed, scale, zero, block_expert, num_active,
             bits=bits, group=group, bm=bm,
         )
+    n = (w_packed[0] if bits == 3 else w_packed).shape[-1]
+    bn, bk = _gmm_blocks(n, x_padded.shape[-1], group, bn, bk)
     return moe_gmm_pallas(
-        x_padded, w_packed, scale, zero, block_expert,
+        x_padded, w_packed, scale, zero, block_expert, num_active,
+        bits=bits, group=group, bm=bm, bn=bn, bk=bk,
+        interpret=(backend == "interpret"),
+    )
+
+
+def moe_gmm_swiglu(
+    x_padded: jnp.ndarray,
+    wg_packed,
+    wu_packed,
+    g_scale: jnp.ndarray,
+    g_zero: jnp.ndarray,
+    u_scale: jnp.ndarray,
+    u_zero: jnp.ndarray,
+    block_expert: jnp.ndarray,
+    num_active: jnp.ndarray | None = None,
+    *,
+    bits: int,
+    group: int = 128,
+    backend: str | None = None,
+    bm: int = 128,
+    bn: int = 256,
+    bk: int = 512,
+) -> jnp.ndarray:
+    """Fused gate/up grouped GEMM + SwiGLU epilogue (one x stream, the
+    [M, F] hidden never round-trips HBM between the two projections)."""
+    backend = backend or default_backend()
+    if backend == "ref":
+        return ref.moe_gmm_swiglu_ref(
+            x_padded, wg_packed, wu_packed, g_scale, g_zero,
+            u_scale, u_zero, block_expert, num_active,
+            bits=bits, group=group, bm=bm,
+        )
+    n = (wg_packed[0] if bits == 3 else wg_packed).shape[-1]
+    bn, bk = _gmm_blocks(n, x_padded.shape[-1], group, bn, bk)
+    return moe_gmm_swiglu_pallas(
+        x_padded, wg_packed, wu_packed, g_scale, g_zero, u_scale, u_zero,
+        block_expert, num_active,
         bits=bits, group=group, bm=bm, bn=bn, bk=bk,
         interpret=(backend == "interpret"),
     )

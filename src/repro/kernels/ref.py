@@ -18,6 +18,7 @@ __all__ = [
     "quant_matmul_ref",
     "binary_matmul_ref",
     "moe_gmm_ref",
+    "moe_gmm_swiglu_ref",
     "paged_attention_ref",
 ]
 
@@ -69,13 +70,20 @@ def moe_gmm_ref(
     scale,
     zero,
     block_expert: jnp.ndarray,
+    num_active=None,
     *,
     bits: int,
     group: int = 128,
     bm: int = 128,
     out_dtype=None,
 ) -> jnp.ndarray:
-    """Row-block i of ``x_padded`` hits expert ``block_expert[i]``."""
+    """Row-block i of ``x_padded`` hits expert ``block_expert[i]``.
+
+    ``num_active`` (scalar or [1], optional) mirrors the kernel's ragged
+    skip: row-blocks at index ≥ it are zero-filled (the kernel never
+    computes them; the oracle computes then masks — same values, the
+    FLOP saving is the kernel's job).
+    """
     m, k = x_padded.shape
     if bits == 3:
         e = w_packed[0].shape[0]
@@ -100,7 +108,42 @@ def moe_gmm_ref(
         "bmk,bkn->bmn", xb.astype(cd), wb.astype(cd),
         preferred_element_type=jnp.float32,
     )
+    if num_active is not None:
+        live = jnp.arange(nblocks) < jnp.asarray(num_active).reshape(())
+        y = jnp.where(live[:, None, None], y, 0.0)
     return y.reshape(m, n).astype(out_dtype or x_padded.dtype)
+
+
+def moe_gmm_swiglu_ref(
+    x_padded: jnp.ndarray,
+    wg_packed,
+    wu_packed,
+    g_scale,
+    g_zero,
+    u_scale,
+    u_zero,
+    block_expert: jnp.ndarray,
+    num_active=None,
+    *,
+    bits: int,
+    group: int = 128,
+    bm: int = 128,
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Oracle for the fused gate/up grouped GEMM:
+    ``silu(x @ Wg) * (x @ Wu)`` per row-block's expert. Inactive blocks
+    are exactly zero (``silu(0)·0``), matching the kernel's skip path."""
+    f32 = jnp.float32
+    g = moe_gmm_ref(
+        x_padded, wg_packed, g_scale, g_zero, block_expert, num_active,
+        bits=bits, group=group, bm=bm, out_dtype=f32,
+    )
+    u = moe_gmm_ref(
+        x_padded, wu_packed, u_scale, u_zero, block_expert, num_active,
+        bits=bits, group=group, bm=bm, out_dtype=f32,
+    )
+    h = jax.nn.silu(g) * u
+    return h.astype(out_dtype or x_padded.dtype)
 
 
 def paged_attention_ref(

@@ -179,9 +179,21 @@ def main() -> None:
     p.add_argument("--no-preempt", action="store_true",
                    help="reserve prompt+max_new pages at admission "
                         "(PR-1 baseline: no growth, no preemption)")
+    p.add_argument("--ffn-backend", choices=["grouped", "scan", "ref"],
+                   default=None,
+                   help="compressed expert-FFN implementation: grouped "
+                        "GEMM (default; Pallas moe_gmm on TPU), the "
+                        "legacy per-expert scan, or the forced jnp "
+                        "reference — reproducible A/B legs from the CLI")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
     args = p.parse_args()
+    if args.ffn_backend:
+        # process default too, so the --legacy wave batcher (no engine
+        # config, plain decode_step) honors the same A/B knob
+        import os
+
+        os.environ["REPRO_FFN_BACKEND"] = args.ffn_backend
     cfg = get_config(args.arch).reduced()
     bundle = get_model(cfg)
     params = bundle.init(jax.random.PRNGKey(0))
@@ -221,6 +233,7 @@ def main() -> None:
             preempt_mode=args.preempt_mode,
             reserve_full=args.no_preempt,
             resident_experts=args.resident_experts,
+            ffn_backend=args.ffn_backend,
         ),
     )
     if engine.offload is not None:

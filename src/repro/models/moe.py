@@ -22,7 +22,26 @@ import jax.numpy as jnp
 from ..parallel.sharding import shard
 from .layers import init_linear, init_mlp, linear, mlp
 
-__all__ = ["init_moe", "moe_layer", "route_topk", "capacity_dispatch", "MoEOut"]
+__all__ = [
+    "init_moe",
+    "moe_layer",
+    "route_topk",
+    "capacity_dispatch",
+    "dispatch_capacity",
+    "slot_fill_counts",
+    "MoEOut",
+]
+
+
+def dispatch_capacity(cfg, t: int, capacity_factor=None) -> int:
+    """Per-expert capacity for ``t`` tokens: ``cf·t·k/E``, sublane-aligned
+    (multiple of 8, floor 8). One formula shared by the pjit MoE layer,
+    the compressed path, the shard_map EP bodies and the serving
+    engine's capacity-utilization gauge — they must agree or dispatch
+    layouts and their observability drift apart."""
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    cap = int(cf * t * cfg.top_k / cfg.num_experts)
+    return max(8, ((cap + 7) // 8) * 8)
 
 
 class MoEOut(NamedTuple):
@@ -128,6 +147,21 @@ def capacity_dispatch(
     return xp, dest, valid, gflat
 
 
+def slot_fill_counts(
+    dest: jnp.ndarray, valid: jnp.ndarray, num_units: int, capacity: int
+) -> jnp.ndarray:
+    """Occupied-row count per dispatch unit of a capacity layout.
+
+    Inverts :func:`capacity_dispatch`'s encoding (``dest = unit·cap +
+    rank`` for valid slots, drop bucket beyond): returns ``[num_units]``
+    int32 counts ≤ capacity. Because ranks are assigned densely from 0,
+    each unit's occupied rows are a *prefix* — the invariant the grouped
+    expert-GEMM compaction (``grouped_bucket_ffn``) builds on.
+    """
+    occ = jnp.where(valid, dest // capacity, num_units)
+    return jnp.zeros((num_units + 1,), jnp.int32).at[occ].add(1)[:-1]
+
+
 def combine(yp: jnp.ndarray, dest, valid, gflat, t: int, k: int) -> jnp.ndarray:
     """Gather expert outputs back to token order and mix by gates."""
     d = yp.shape[-1]
@@ -216,8 +250,7 @@ def moe_layer(
     gate_mask = None
     if gate_mask_fn is not None:
         gate_mask = gate_mask_fn(x2, idx, gates)
-    cap = int(cfg.moe_capacity_factor * t * k / e)
-    cap = max(8, ((cap + 7) // 8) * 8)  # sublane-aligned
+    cap = dispatch_capacity(cfg, t)
     xp, dest, valid, gflat = capacity_dispatch(x2, idx, gates, e, cap, gate_mask)
     xp = shard(xp, "moe_ed")
     if expert_ffn_fn is not None:

@@ -122,6 +122,7 @@ def _block(p, x, cfg, *, positions, window, moe_hooks=None):
                 otp_params=p.get("otp") if use_otp else None,
                 otp_rng=hooks.get("otp_rng"),
                 otp_tau=hooks.get("otp_tau", 1.0),
+                ffn_backend=hooks.get("ffn_backend"),
             )
             # save the region output across remat: recomputing it would
             # re-all-gather the packed expert weights in the backward pass
@@ -250,8 +251,11 @@ def _ffn_delta(p, h, cfg, moe_hooks=None):
     ``slot_counts`` is the PMQ layer's per-permuted-slot dispatch count
     (the offload prefetcher's router statistic; empty ``[0]`` outside the
     compressed path). ``moe_hooks["count_weight"]`` ([T] bool) marks
-    which tokens are real traffic. Shared by the dense and paged decode
-    paths so they stay numerically identical.
+    which tokens are real traffic; ``moe_hooks["ffn_backend"]`` selects
+    the compressed expert-FFN implementation (grouped GEMM vs legacy
+    scan — a static trace-time choice, so the serving engine's jitted
+    programs never retrace over it). Shared by the dense and paged
+    decode paths so they stay numerically identical.
     """
     ones = jnp.ones(h.shape[:2], jnp.float32)
     no_counts = jnp.zeros((0,), jnp.int32)
@@ -266,6 +270,7 @@ def _ffn_delta(p, h, cfg, moe_hooks=None):
             p["moe"], p["moe_ce"], h, cfg,
             otp_params=p.get("otp") if use_otp else None,
             count_weight=hooks.get("count_weight"),
+            ffn_backend=hooks.get("ffn_backend"),
         )
         act = ones
         if info.get("mask") is not None:

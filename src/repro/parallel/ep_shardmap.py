@@ -62,7 +62,7 @@ def moe_region_sharded(p: Dict, x: jnp.ndarray, cfg, mesh,
         if mask is not None:
             sel = sel * mask
         local_idx = jnp.clip(idx - lo, 0, eploc - 1)
-        cap = max(8, ((int(cfg.moe_capacity_factor * t * k / e) + 7) // 8) * 8)
+        cap = moe_mod.dispatch_capacity(cfg, t)
         xp, dest, valid, gflat = moe_mod.capacity_dispatch(
             x2, local_idx, gates, eploc, cap, gate_mask=sel
         )
@@ -117,18 +117,26 @@ def compressed_moe_region_sharded(
     p: Dict, ce, x: jnp.ndarray, cfg, mesh,
     otp_params: Optional[Dict] = None, otp_rng=None, otp_tau: float = 1.0,
     capacity_factor: Optional[float] = None,
+    ffn_backend: Optional[str] = None,
 ):
     """PMQ-compressed expert path (bit-bucketed, device-local dequant).
 
     Bucket counts are multiples of the model extent (builder guarantee);
-    each shard scans its local experts one at a time, so a single
-    dequantized [K, N] tile is live per shard (the Pallas ``moe_gmm``
-    kernel replaces the scan body on real TPUs).
+    each shard runs its local share of every bucket through the same
+    grouped-GEMM primitive as the local path
+    (:func:`repro.core.compressed_moe.grouped_bucket_ffn`): occupied rows
+    compact into bm-aligned ragged groups, one fused gate/up + one down
+    ``ops.moe_gmm`` call per bucket, dead capacity blocks skipped via
+    ``num_active``. ``ffn_backend="scan"`` keeps the legacy one-expert-
+    at-a-time scan (dequant-matmul through ``ops.quant_matmul_parts``,
+    so TPU shards still get the Pallas dequant-GEMM).
     """
+    from ..core import compressed_moe as cmoe
     from ..core import otp as otp_mod
-    from ..kernels import ref as kref
+    from ..kernels import ops
     from ..models import moe as moe_mod
 
+    path, kb = cmoe._resolve_backend(ffn_backend)
     ba = batch_axes(mesh)
     model = mesh.shape["model"]
     data = mesh.shape.get("data", 1)
@@ -254,37 +262,50 @@ def compressed_moe_region_sharded(
         if mask is not None:
             sel = sel * mask
         local_idx = local_of[sidx]
-        cap = max(8, ((int(cf * t * k / e) + 7) // 8) * 8)
+        cap = moe_mod.dispatch_capacity(cfg, t, cf)
         xp, dest, valid, gflat = moe_mod.capacity_dispatch(
             x2, local_idx, gates, eploc, cap, gate_mask=sel
         )
+        # occupied-row counts per local slot (prefix occupancy — see
+        # grouped_bucket_ffn): the ragged frontier of the grouped GEMMs
+        local_fill = moe_mod.slot_fill_counts(dest, valid, eploc, cap)
 
         ys = []
         for i, m in enumerate(ce.meta):
             cnt_loc = m.count // model
             st_loc = m.start // model
             xb = jax.lax.slice_in_dim(xp, st_loc * cap, (st_loc + cnt_loc) * cap)
-            x3 = xb.reshape(cnt_loc, cap, d)
             wdict = local[f"b{i}"]
 
-            def step(_, inp, bits=m.bits):
-                x2_, wg, wu, wd_ = inp
+            if path == "scan":
+                x3 = xb.reshape(cnt_loc, cap, d)
 
-                def mm(xx, wd2):
-                    pk = (wd2["hi"], wd2["lo"]) if bits == 3 else wd2["data"]
-                    return kref.quant_matmul_ref(
-                        xx, pk, wd2["scale"], wd2["zero"],
-                        bits=bits, group=ce.group,
-                    )
+                def step(_, inp, bits=m.bits):
+                    x2_, wg, wu, wd_ = inp
 
-                h = jax.nn.silu(mm(x2_, wg)) * mm(x2_, wu)
-                return None, mm(h, wd_)
+                    def mm(xx, wd2):
+                        pk = (wd2["hi"], wd2["lo"]) if bits == 3 else wd2["data"]
+                        return ops.quant_matmul_parts(
+                            xx, pk, wd2["scale"], wd2["zero"],
+                            bits=bits, group=ce.group, backend=kb,
+                        )
 
-            _, y = jax.lax.scan(
-                step, None,
-                (x3, wdict["w_gate"], wdict["w_up"], wdict["w_down"]),
+                    h = jax.nn.silu(mm(x2_, wg)) * mm(x2_, wu)
+                    return None, mm(h, wd_)
+
+                _, y = jax.lax.scan(
+                    step, None,
+                    (x3, wdict["w_gate"], wdict["w_up"], wdict["w_down"]),
+                )
+                ys.append(y.reshape(cnt_loc * cap, d))
+                continue
+
+            fill = jax.lax.slice_in_dim(local_fill, st_loc, st_loc + cnt_loc)
+            y = cmoe.grouped_bucket_ffn(
+                xb, wdict, bits=m.bits, group=ce.group, count=cnt_loc,
+                cap=cap, kernel_backend=kb, fill=fill,
             )
-            ys.append(y.reshape(cnt_loc * cap, d))
+            ys.append(y)
         yp = jnp.concatenate(ys, axis=0)
         if etp_mode == "replicate_tokens":
             # tokens replicated over data: F-partials sum across data, and

@@ -126,15 +126,22 @@ class EngineConfig:
     resident_experts: Optional[int] = None
     # EMA decay of the per-(layer, slot) dispatch counts driving prefetch.
     prefetch_ema: float = 0.8
+    # Compressed expert-FFN implementation inside the jitted programs:
+    # "grouped" (default — bucket-at-a-time grouped GEMM, Pallas moe_gmm
+    # on TPU / jnp oracle on CPU), "scan" (legacy per-expert scan, the
+    # A/B baseline), "ref"/"interpret" (grouped layout, forced kernel
+    # backend). Trace-time static: changing it costs one retrace, using
+    # it never retraces. None = repro.core.compressed_moe default.
+    ffn_backend: Optional[str] = None
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_steps(model_cfg, use_otp: bool):
+def _jitted_steps(model_cfg, use_otp: bool, ffn_backend: Optional[str] = None):
     """Compiled decode/prefill step builders, shared across engines with
     the same (hashable, frozen) model config — jit caching then dedupes
     by array shapes, so two engines differing only in pool geometry cost
     one trace each, not one per instance."""
-    hooks = {"use_otp": use_otp}
+    hooks = {"use_otp": use_otp, "ffn_backend": ffn_backend}
 
     def decode_fn(params, k, v, token, positions, tables, active):
         cache = {"k": k, "v": v, "block_tables": tables, "active": active}
@@ -212,8 +219,16 @@ class PagedServingEngine:
         self.results: Dict[int, List[int]] = {}
         self._step_idx = 0
         self._last_activation = None  # set by _run_offloaded (decode only)
+        self._last_slot_counts = None  # [L, num_slots] of the last program
+        # PMQ trees report per-slot dispatch counts; the capacity gauge
+        # needs the slot total to turn them into a utilization fraction
+        blocks = params.get("blocks") if isinstance(params, dict) else None
+        self._num_slots = (
+            blocks["moe_ce"].num_slots
+            if isinstance(blocks, dict) and "moe_ce" in blocks else None
+        )
         self._decode, self._prefill = _jitted_steps(
-            self.model_cfg, self.ecfg.use_otp
+            self.model_cfg, self.ecfg.use_otp, self.ecfg.ffn_backend
         )
 
     # ------------------------------------------------------------ intake
@@ -321,6 +336,7 @@ class PagedServingEngine:
             chunk[0, :n] = seq[off : off + n]
             args = (jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row)
             logits = self._run_offloaded(self._prefill, args)
+            self._record_capacity_util(c)
         if resume:
             return
         jax.block_until_ready(logits)
@@ -347,9 +363,12 @@ class PagedServingEngine:
             self.cache.k, self.cache.v = out[0], out[1]
             logits = out[2]
             self._last_activation = out[3] if is_decode else None
+            # [L, num_slots] dispatch counts ([L, 0] outside PMQ): kept
+            # for the capacity-utilization gauge even without offload
+            self._last_slot_counts = np.asarray(out[-1])
             if self.offload is None:
                 return logits
-            counts = np.asarray(out[-1])
+            counts = self._last_slot_counts
             uploads, nbytes = self.offload.ensure_resident(counts)
             if uploads == 0:
                 if missed:
@@ -360,6 +379,27 @@ class PagedServingEngine:
                 return logits
             missed = True
             self.metrics.record_expert_miss(uploads, nbytes)
+
+    def _record_capacity_util(self, t: int) -> None:
+        """Feed the MoE capacity-padding gauge from the step's reported
+        ``slot_counts``: routed (token, choice) pairs over the dispatch
+        buffer's total capacity rows (``L · num_slots · cap`` for the
+        ``t`` tokens the program ran). The complement is the dead-padding
+        compute the grouped FFN path skips (see serving.metrics)."""
+        counts = self._last_slot_counts
+        if self._num_slots is None or counts is None or counts.size == 0:
+            return
+        from ..models.moe import dispatch_capacity
+
+        cap = dispatch_capacity(self.model_cfg, t)
+        denom = counts.shape[0] * self._num_slots * cap
+        # slot_counts are pre-clip dispatch counts; clamp to cap so pairs
+        # dropped by capacity (possible with drop_free_capacity=False)
+        # don't push the occupied-row gauge past 1.0
+        occupied = np.minimum(counts, cap).sum()
+        self.metrics.record_capacity_utilization(
+            float(occupied) / float(denom)
+        )
 
     def _prefetch_experts(self) -> None:
         """Upload the EMA-hottest experts ahead of the next decode step —
@@ -425,6 +465,7 @@ class PagedServingEngine:
         )
         jax.block_until_ready(logits)
         dt = time.time() - t0
+        self._record_capacity_util(b)
         self.metrics.record_decode_step(
             dt, int(active.sum()), float(self._last_activation),
             self.scheduler.queue_depth,

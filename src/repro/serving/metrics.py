@@ -12,6 +12,12 @@ count the dynamic-growth pressure path: victims evicted when the page
 pool ran dry, and the host↔device KV bytes moved to serve them.
 ``page_utilization`` gauges how full the pool runs — the whole point of
 on-demand growth is pushing it toward 1.0 without corruption.
+``capacity_utilization`` gauges what fraction of the MoE dispatch
+buffer's capacity rows carried a routed (token, choice) pair each
+logical step — the dead padding ``1 - util`` is exactly the compute the
+grouped expert-GEMM path skips via its ragged ``num_active`` frontier
+(the per-expert scan paid for every row), so this gauge is the
+serving-side witness of that win.
 ``expert_prefetch_*`` / ``expert_*_bytes`` / ``expert_resident_bytes``
 cover host-offloaded PMQ buckets (:mod:`repro.serving.offload`): a
 *hit* is a logical step (decode step or prefill chunk) whose whole
@@ -49,6 +55,7 @@ class ServingMetrics:
     queue_depth: List[int] = dataclasses.field(default_factory=list)
     expert_activation: List[float] = dataclasses.field(default_factory=list)
     page_utilization: List[float] = dataclasses.field(default_factory=list)
+    capacity_utilization: List[float] = dataclasses.field(default_factory=list)
     admissions: List[Dict] = dataclasses.field(default_factory=list)
     slot_releases: List[Dict] = dataclasses.field(default_factory=list)
     preemptions: List[Dict] = dataclasses.field(default_factory=list)
@@ -90,6 +97,13 @@ class ServingMetrics:
         self.expert_activation.append(expert_activation)
         self.queue_depth.append(queue_depth)
         self.page_utilization.append(page_utilization)
+
+    def record_capacity_utilization(self, frac: float) -> None:
+        """Routed (token, choice) pairs ÷ total expert capacity rows for
+        one logical step (decode step or prefill chunk) — derived from
+        the jitted program's reported ``slot_counts``, so it is
+        deterministic per trace."""
+        self.capacity_utilization.append(float(frac))
 
     def record_release(self, rid: int, slot: int, step_idx: int) -> None:
         self.slot_releases.append({"rid": rid, "slot": slot, "step": step_idx})
@@ -169,6 +183,7 @@ class ServingMetrics:
             "active_per_step": list(self.active_per_step),
             "queue_depth": list(self.queue_depth),
             "page_utilization": list(self.page_utilization),
+            "capacity_utilization": list(self.capacity_utilization),
             "generated_tokens": int(np.sum(self.active_per_step)) if self.active_per_step else 0,
             "expert_prefetch_hits": self.expert_prefetch_hits,
             "expert_prefetch_misses": self.expert_prefetch_misses,
@@ -204,6 +219,8 @@ class ServingMetrics:
             "swap_bytes": int(self.swap_out_bytes + self.swap_in_bytes),
             "page_util_mean": _mean(self.page_utilization),
             "page_util_p95": _p95(self.page_utilization),
+            "capacity_util_mean": _mean(self.capacity_utilization),
+            "capacity_util_p95": _p95(self.capacity_utilization),
             "expert_hit_rate": self.expert_hit_rate,
             "expert_prefetch_misses": int(self.expert_prefetch_misses),
             "expert_miss_uploads": int(self.expert_miss_uploads),
