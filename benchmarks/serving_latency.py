@@ -1,5 +1,6 @@
 """Serving latency: TTFT + per-token latency vs offered load, fp vs PMQ,
-plus throughput-vs-pool-size pressure sweeps for growth + preemption.
+decode-horizon A/B legs, plus throughput-vs-pool-size pressure sweeps
+for growth + preemption.
 
 Drives the paged continuous-batching engine (repro.serving) over the
 trained benchmark MoE at different offered loads (queued requests per
@@ -29,6 +30,20 @@ for bf16 weights) anchors the comparison:
 
     PYTHONPATH=src python -m benchmarks.serving_latency --resident-experts 8 6 4
 
+The ``--horizons`` sweep A/Bs the fused decode megastep: the same trace
+is served at ``H = 1`` (the per-token baseline program) and larger
+horizons, asserting bit-identical greedy outputs per leg and recording
+steady-state decode tokens/s, TTFT, per-token latency and the
+deterministic dispatch/sync amortization (``dispatches_per_step`` falls
+from 1 toward 1/H). Legs land in ``results/BENCH_serving.json`` so the
+serving perf trajectory accumulates per PR:
+
+    PYTHONPATH=src python -m benchmarks.serving_latency --horizons 1 8
+
+``--smoke`` is the CI leg: a tiny random MoE (no training), H=1 vs H=8,
+asserts greedy-output equivalence + dispatch amortization, and still
+writes ``results/BENCH_serving.json``.
+
 The compressed engine serves the *stacked* compressed tree: the PMQ plan
 is made layer-uniform (every layer gets layer 0's bit vector) so all
 layers share one bucket structure and ride the decode scan — the same
@@ -40,7 +55,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-from typing import List, Optional, Sequence
+import json
+import os
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -51,6 +68,7 @@ from .common import calibration, csv_row, trained_model
 
 PROMPT_LEN = 32
 BLOCK_SIZE = 16
+OUT_PATH = os.path.join("results", "BENCH_serving.json")
 
 
 def _stacked_compressed_params(cfg, params, calib):
@@ -62,11 +80,15 @@ def _stacked_compressed_params(cfg, params, calib):
 def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
                 seed: int = 0, ffn_backend: Optional[str] = None):
     mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    # decode_horizon=1 keeps these rows comparable with the per-token
+    # trajectory accumulated by earlier PRs; the horizon A/B legs carry
+    # their H in the row label (serving/*_hN)
     engine = PagedServingEngine(
         cfg, params,
         EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
                      num_blocks=slots * mb, max_blocks_per_slot=mb,
-                     prefill_chunk=BLOCK_SIZE, ffn_backend=ffn_backend),
+                     prefill_chunk=BLOCK_SIZE, ffn_backend=ffn_backend,
+                     decode_horizon=1),
     )
     rng = np.random.default_rng(seed)
     reqs = [
@@ -79,6 +101,146 @@ def _serve_once(cfg, params, *, n_requests: int, slots: int, max_new: int,
     ]
     engine.serve(reqs)
     return engine.metrics.summary()
+
+
+# ------------------------------------------------- decode horizon sweep
+def _horizon_leg_summary(h: int, m: Dict) -> Dict:
+    """The slice of a leg's metrics the perf trajectory tracks."""
+    return {
+        "horizon": h,
+        "tokens_per_s": m["tokens_per_s"],
+        "ttft_mean_s": m["ttft_mean_s"],
+        "ttft_p95_s": m["ttft_p95_s"],
+        "per_token_latency_s": m["decode_step_mean_s"],
+        "per_token_latency_p95_s": m["decode_step_p95_s"],
+        "decode_compute_mean_s": m["decode_compute_mean_s"],
+        "decode_offload_mean_s": m["decode_offload_mean_s"],
+        "generated_tokens": m["generated_tokens"],
+        "megasteps": m["megasteps"],
+        "dispatches_per_step": m["dispatches_per_step"],
+        "dispatches_per_token": m["dispatches_per_token"],
+        "syncs_per_token": m["syncs_per_token"],
+    }
+
+
+def horizon_sweep(cfg, params, horizons: Sequence[int], *,
+                  n_requests: int = 4, slots: int = 4, max_new: int = 49,
+                  label: str = "fp", check_equal: bool = True):
+    """Serve one decode-heavy trace per horizon; assert bit-identical
+    greedy outputs across legs (the fusion invariant) and return
+    ``(csv_rows, json_legs)``.
+
+    Measures *steady-state* decode: a warmup request compiles both
+    jitted programs before metrics reset, the timed trace fills every
+    slot from step 0 with equal ``max_new`` (no ragged tail, no
+    mid-flight churn), and ``max_new`` leans long so decode — the regime
+    the megastep amortizes — dominates the timing.
+    """
+    from repro.serving import ServingMetrics
+
+    rng = np.random.default_rng(17)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=PROMPT_LEN).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    warm = rng.integers(0, cfg.vocab_size, size=PROMPT_LEN).astype(np.int32)
+    mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    rows, legs, outs = [], [], {}
+    for h in horizons:
+        engine = PagedServingEngine(
+            cfg, params,
+            EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
+                         num_blocks=slots * mb, max_blocks_per_slot=mb,
+                         prefill_chunk=BLOCK_SIZE, decode_horizon=int(h)),
+        )
+        # compile prefill + the H-step megastep outside the timed window
+        engine.serve([Request(rid=-1, prompt=warm, max_new=max(h + 1, 2))])
+        engine.metrics = ServingMetrics()
+        outs[h] = engine.serve([
+            Request(rid=i, prompt=prompts[i], max_new=max_new)
+            for i in range(n_requests)
+        ])
+        m = engine.metrics.summary()
+        leg = dict(_horizon_leg_summary(int(h), m), label=label)
+        legs.append(leg)
+        rows.append(csv_row(
+            f"serving/{label}_h{h}",
+            m["decode_step_mean_s"] * 1e6,
+            f"tps={m['tokens_per_s']:.1f};"
+            f"ttft_p95_ms={m['ttft_p95_s']*1e3:.1f}"
+            f";disp_per_step={m['dispatches_per_step']:.3f}"
+            f";megasteps={m['megasteps']}",
+        ))
+    if check_equal:
+        h0 = horizons[0]
+        for h in horizons[1:]:
+            assert outs[h] == outs[h0], (
+                f"horizon {h} changed greedy outputs vs horizon {h0}"
+            )
+    return rows, legs
+
+
+def _write_bench_json(legs: List[Dict], note: str) -> None:
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump({"bench": "serving", "note": note, "legs": legs}, fh,
+                  indent=1)
+    print(f"  wrote {OUT_PATH}: {len(legs)} legs")
+
+
+def _smoke_model():
+    """Tiny random MoE for the CI smoke leg — the horizon invariant and
+    the dispatch amortization are model-free, so no training needed."""
+    import jax
+
+    from repro.configs.base import ModelConfig
+    from repro.models.registry import get_model
+
+    cfg = ModelConfig(
+        name="smoke-serving-moe", family="moe", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128, d_ff_expert=64,
+        vocab_size=128, num_experts=4, top_k=2, num_shared_experts=1,
+        dtype="float32", remat="none", logits_chunk=32, attn_q_chunk=16,
+        attn_kv_chunk=16,
+    )
+    return cfg, get_model(cfg).init(jax.random.PRNGKey(0))
+
+
+def smoke() -> List[str]:
+    """CI leg: H=1 vs H=8 on a tiny model — greedy outputs must be
+    bit-identical, dispatches/step must amortize by ~H, and the JSON
+    perf artifact is written."""
+    print("== serving_latency --smoke (decode horizon H=1 vs H=8) ==")
+    cfg, params = _smoke_model()
+    for attempt in (1, 2):
+        rows, legs = horizon_sweep(
+            cfg, params, (1, 8), n_requests=2, slots=2, max_new=33,
+            label="smoke", check_equal=True,
+        )
+        by_h = {l["horizon"]: l for l in legs}
+        # deterministic amortization proof — never retried
+        assert by_h[1]["dispatches_per_step"] == 1.0
+        assert by_h[8]["dispatches_per_step"] <= 1 / 8 + 0.1, (
+            "H=8 must amortize jitted dispatches per logical step by ~8x"
+        )
+        # wall-clock throughput can flake on noisy shared runners (the
+        # local margin is ~5x, but CI timings are sub-second): re-measure
+        # once, then warn rather than fail — the deterministic asserts
+        # above are the gating proof of the amortization
+        if by_h[8]["tokens_per_s"] > by_h[1]["tokens_per_s"]:
+            break
+        if attempt == 2:
+            print(
+                "  WARNING: H=8 wall-clock tps did not beat H=1 on this "
+                f"host (H=8 {by_h[8]['tokens_per_s']:.1f} vs "
+                f"H=1 {by_h[1]['tokens_per_s']:.1f} tok/s, twice) — "
+                "dispatch amortization held; timing likely noisy"
+            )
+    _write_bench_json(
+        legs, "smoke legs: tiny random MoE (CI); wall-clock is this host"
+    )
+    print("  smoke OK: H=1 and H=8 greedy outputs bit-identical")
+    return rows
 
 
 # --------------------------------------------------- pool pressure sweep
@@ -112,12 +274,15 @@ def pool_sweep(pool_blocks: Optional[Sequence[int]] = None, *,
     for pool in pool_blocks:
         pool = max(int(pool), biggest)  # completion needs the largest req to fit
         for policy, reserve in (("preempt", False), ("reserve", True)):
+            # decode_horizon=1: keep the pressure rows comparable with
+            # the per-token trajectory of earlier PRs
             engine = PagedServingEngine(
                 cfg, params,
                 EngineConfig(
                     max_slots=slots, block_size=BLOCK_SIZE, num_blocks=pool,
                     max_blocks_per_slot=biggest, prefill_chunk=BLOCK_SIZE,
                     preempt_mode="swap", reserve_full=reserve,
+                    decode_horizon=1,
                 ),
             )
             engine.serve(
@@ -170,9 +335,11 @@ def resident_sweep(budgets: Optional[Sequence[int]] = None, *,
         for _ in range(n_requests)
     ]
     mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    # decode_horizon=1: keep the residency rows comparable with the
+    # per-token trajectory of earlier PRs
     ecfg = EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
                         num_blocks=slots * mb, max_blocks_per_slot=mb,
-                        prefill_chunk=BLOCK_SIZE)
+                        prefill_chunk=BLOCK_SIZE, decode_horizon=1)
     rows = []
 
     def serve(prm, label, engine_cfg):
@@ -235,6 +402,20 @@ def run(quick: bool = False, ffn_backend: Optional[str] = None):
                 f"cap_util={m['capacity_util_mean']:.2f}",
             ))
     print(f"  pmq avg bits {avg_bits:.2f}; rows emitted: {len(rows)}")
+    print("== serving_latency (decode horizon: fused megastep A/B) ==")
+    # slot-aligned trace (n == slots, budget divisible by 8) so every leg
+    # measures pure steady-state decode, not admission churn/ragged tails
+    hs = (1, 8) if quick else (1, 2, 4, 8)
+    hrows, legs = horizon_sweep(
+        cfg, params, hs, n_requests=2 if quick else 4,
+        slots=2 if quick else 4, max_new=17 if quick else 49, label="fp",
+    )
+    rows += hrows
+    _write_bench_json(
+        legs,
+        "fp legs over the trained bench MoE (decode-heavy trace); "
+        "wall-clock is this host",
+    )
     print("== serving_latency (pool pressure: growth+preempt vs reserve) ==")
     rows += pool_sweep(quick=quick, n_requests=4 if quick else 8,
                        slots=3 if quick else 6)
@@ -247,6 +428,15 @@ def run(quick: bool = False, ffn_backend: Optional[str] = None):
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--quick", action="store_true")
+    p.add_argument("--smoke", action="store_true",
+                   help="CI-sized horizon A/B on a tiny random MoE: "
+                        "asserts H=1 vs H=8 greedy-output equivalence + "
+                        "dispatch amortization, writes the JSON artifact")
+    p.add_argument("--horizons", type=int, nargs="+", default=None,
+                   metavar="H",
+                   help="explicit decode horizons for the fused-megastep "
+                        "A/B sweep over the trained bench model (always "
+                        "includes the outputs-identical assertion)")
     p.add_argument("--pool-blocks", type=int, nargs="+", default=None,
                    metavar="N",
                    help="explicit pool sizes (pages) for the pressure "
@@ -267,9 +457,18 @@ def main() -> None:
     if args.ffn_backend:
         # pressure/residency sweeps build engines through shared helpers;
         # the process default reaches all of them (trace-time static)
-        import os
-
         os.environ["REPRO_FFN_BACKEND"] = args.ffn_backend
+    if args.smoke:
+        smoke()
+        return
+    if args.horizons is not None:
+        cfg, params = trained_model()
+        _, legs = horizon_sweep(cfg, params, args.horizons)
+        _write_bench_json(
+            legs,
+            "fp legs over the trained bench MoE (decode-heavy trace); "
+            "wall-clock is this host",
+        )
     if args.pool_blocks is not None:
         pool_sweep(args.pool_blocks, quick=args.quick,
                    n_requests=4 if args.quick else 8,
@@ -277,7 +476,8 @@ def main() -> None:
     if args.resident_experts is not None:
         resident_sweep(args.resident_experts, quick=args.quick,
                        n_requests=4 if args.quick else 6, slots=3)
-    if args.pool_blocks is None and args.resident_experts is None:
+    if (args.pool_blocks is None and args.resident_experts is None
+            and args.horizons is None):
         run(quick=args.quick, ffn_backend=args.ffn_backend)
 
 

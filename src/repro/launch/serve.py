@@ -185,6 +185,20 @@ def main() -> None:
                         "GEMM (default; Pallas moe_gmm on TPU), the "
                         "legacy per-expert scan, or the forced jnp "
                         "reference — reproducible A/B legs from the CLI")
+    p.add_argument("--decode-horizon", type=int, default=None, metavar="H",
+                   help="fused decode megastep length: one jitted "
+                        "program advances every slot up to H tokens with "
+                        "on-device sampling — one dispatch + one host "
+                        "sync per megastep (default: "
+                        "REPRO_DECODE_HORIZON or 8; 1 = the per-token "
+                        "baseline program)")
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="on-device sampling temperature inside the "
+                        "horizon scan (0 = greedy argmax, the "
+                        "bit-reproducible default)")
+    p.add_argument("--sample-seed", type=int, default=0,
+                   help="seed for temperature sampling; one subkey per "
+                        "megastep, so runs replay deterministically")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
     args = p.parse_args()
@@ -234,6 +248,10 @@ def main() -> None:
             reserve_full=args.no_preempt,
             resident_experts=args.resident_experts,
             ffn_backend=args.ffn_backend,
+            temperature=args.temperature,
+            sample_seed=args.sample_seed,
+            **({"decode_horizon": args.decode_horizon}
+               if args.decode_horizon is not None else {}),
         ),
     )
     if engine.offload is not None:

@@ -11,9 +11,12 @@ The production serving substrate around the MC# compressed model path
   (finished requests free their blocks, queued ones join mid-flight;
   admission needs prompt-sized pages only, and under pool pressure the
   youngest/least-progress request is preempted and re-queued at the head),
-* :mod:`repro.serving.engine` — jitted paged decode step + chunked
-  prefill over the model bundle; grows block tables between jitted steps
-  and swap-restores or re-prefills preempted slots,
+* :mod:`repro.serving.engine` — fused decode-horizon megasteps (one
+  jitted program advances every slot up to H tokens with on-device
+  greedy/temperature sampling and per-slot stop logic — one dispatch +
+  one host sync per megastep) + chunked prefill over the model bundle;
+  grows block tables horizon-ahead between megasteps and swap-restores
+  or re-prefills preempted slots,
 * :mod:`repro.serving.metrics` — TTFT, per-token latency, queue depth,
   per-step expert-activation rate (the paper's >20% activation-reduction
   claim as an observable serving metric), preemption/swap counters,

@@ -8,50 +8,83 @@ compile exactly once each:
   chunks, writing K/V straight into the request's pages (no dense
   [L,B,S,…] cache, no per-wave re-prefill). The final chunk's logits give
   the first generated token — the TTFT event.
-* **decode step** — all ``max_slots`` slots advance one token through
-  :func:`repro.models.transformer.paged_decode_step`; slots decode at
-  different logical lengths via per-slot positions, inactive slots are
-  masked from K/V writes. The pool arrays are donated, so the multi-GB
-  cache is updated in place.
+* **decode megastep** — all ``max_slots`` slots advance up to
+  ``decode_horizon`` tokens through one
+  :func:`repro.models.transformer.paged_decode_horizon` program: an
+  on-device ``lax.scan`` over H single-step bodies with on-device
+  sampling (greedy argmax by default, categorical at
+  ``temperature > 0``) feeding each step's token into the next, and
+  per-slot stop logic (emission budget exhausted, EOS emitted, slot
+  inactive) folded into the carried ``active`` mask. The pool arrays are
+  donated, so the multi-GB cache is updated in place.
 
-Between steps the (host-side) :class:`repro.serving.scheduler.Scheduler`
-admits queued requests into freed slots — continuous batching with no
-wave barrier and no dummy padding. The model path is the standard bundle
-tree, including PMQ-compressed experts (``moe_ce`` buckets, paper §3.2)
-and OTP deterministic decode masks (§3.4 τ→0 argmax) when present; the
-per-step expert-activation rate lands in
-:class:`repro.serving.metrics.ServingMetrics`.
+**What syncs when.** The host orchestration cost — one jitted dispatch,
+one ``device→host`` fetch, one Python bookkeeping pass — is paid once
+per *megastep*, not once per token: the engine fetches the ``[H, slots]``
+emitted-token matrix plus its emit mask, per-step activation, and
+per-step dispatch counts in a single sync, then applies up to
+``H · slots`` tokens host-side. ``H = 1`` reproduces the historical
+per-token program exactly (the A/B baseline); any ``H`` emits greedy
+tokens bit-identical to ``dense_greedy_reference`` because each scan
+step runs the same traced body as ``paged_decode_step``.
+:class:`repro.serving.metrics.ServingMetrics` reconstructs per-logical-
+step records from each megastep (emit counts, activation and pool gauges
+are exact per step — admissions, queue depth and page utilization are
+genuinely constant within a megastep since all scheduling happens at its
+boundary) and counts dispatches/syncs per token, the horizon's
+deterministic witness.
+
+Between megasteps the (host-side)
+:class:`repro.serving.scheduler.Scheduler` admits queued requests into
+freed slots — continuous batching with no wave barrier and no dummy
+padding, FCFS at megastep granularity. The model path is the standard
+bundle tree, including PMQ-compressed experts (``moe_ce`` buckets, paper
+§3.2) and OTP deterministic decode masks (§3.4 τ→0 argmax) when present.
 
 **Dynamic page growth + preemption.** Admission reserves pages for the
-prompt only; before each decode step the engine grows every active
-slot's block table to cover its next write position (oldest admission
-first). When the pool runs dry, the youngest-admitted / least-progress
-request is preempted — its pages are swapped to a host backing store
-(``preempt_mode="swap"``) or dropped (``"recompute"``) — and it rejoins
-the FCFS queue at the head. On re-admission the engine swap-restores the
-pages or re-prefills ``prompt + out[:-1]``; greedy outputs are
-bit-identical either way for any pool that admits the largest single
-request (fuzzed in ``tests/test_serving_sim.py``). Block tables keep
-their static ``[max_slots, max_blocks_per_slot]`` shape throughout —
-growth only fills in rows between jitted steps, so nothing recompiles.
+prompt plus the first megastep's writes; before each megastep the engine
+grows every active slot's block table **horizon-ahead** — enough pages
+for all ``min(H, budget)`` KV writes the fused program will perform
+(oldest admission first), so no write inside the scan can land on an
+unallocated page. When the pool runs dry, the youngest-admitted /
+least-progress request is preempted — its pages are swapped to a host
+backing store (``preempt_mode="swap"``) or dropped (``"recompute"``) —
+and it rejoins the FCFS queue at the head. On re-admission the engine
+swap-restores the pages or re-prefills ``prompt + out[:-1]``; greedy
+outputs are bit-identical either way for any pool that admits the
+largest single request (fuzzed in ``tests/test_serving_sim.py``). Block
+tables keep their static ``[max_slots, max_blocks_per_slot]`` shape
+throughout — growth only fills in rows between jitted programs, so
+nothing recompiles.
 
-**Host-offloaded expert buckets.** With ``resident_experts`` set (PMQ
-params only), cold expert rows live in host memory
-(:class:`repro.serving.offload.ExpertOffloadManager`) and the jitted
-programs read a budget-shaped resident partition. Between steps the
-engine prefetches the router-stats-EMA-hottest experts alongside
-``_ensure_pages``; because routing happens inside the jitted step, a
-**miss** is only observable afterwards — the engine then uploads the
-missing experts synchronously and replays the program (KV writes land
-at position-determined destinations, so the replay overwrites them with
-correct values). Greedy outputs are therefore bit-identical to the
-all-resident engine for any budget that holds the per-step working set
-(fuzzed in ``tests/test_offload.py``).
+**Host-offloaded expert buckets + replay semantics.** With
+``resident_experts`` set (PMQ params only), cold expert rows live in
+host memory (:class:`repro.serving.offload.ExpertOffloadManager`) and
+the jitted programs read a budget-shaped resident partition. Between
+megasteps the engine prefetches the router-stats-EMA-hottest experts
+alongside ``_ensure_pages``; because routing happens inside the jitted
+program, a **miss** is only observable afterwards — from the reported
+``[H, L, slots]`` dispatch counts, whose step-major flattening is the
+horizon-union working set in computation order. The engine then uploads
+the missing experts synchronously and **replays the whole megastep**:
+KV writes land at position-determined destinations and the token
+sequence is deterministic (greedy, or categorical under the megastep's
+fixed key), so a replay simply overwrites every write with identical
+values — the same authentic-prefix induction as the single-step case,
+now bounded by ``H · num_layers`` replays. Greedy outputs are therefore
+bit-identical to the all-resident engine for any budget that holds the
+megastep working set (fuzzed in ``tests/test_offload.py``). The
+megastep timer reports **compute** (first run) and **offload overhead**
+(uploads + replays) as separate metrics — ``decode_step_s`` and
+``tokens_per_s`` stay honest end-to-end wall-clock, and the new split
+makes the replay share separately attributable instead of silently
+folded in.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import time
 from typing import Dict, Iterable, List, Optional
 
@@ -133,23 +166,43 @@ class EngineConfig:
     # backend). Trace-time static: changing it costs one retrace, using
     # it never retraces. None = repro.core.compressed_moe default.
     ffn_backend: Optional[str] = None
+    # Fused decode horizon H: one jitted megastep advances every slot up
+    # to H tokens with on-device sampling, paying one dispatch + one
+    # host sync per megastep instead of per token. H = 1 reproduces the
+    # historical per-token program (the A/B baseline); greedy outputs
+    # are bit-identical across H. Trace-time static.
+    decode_horizon: int = dataclasses.field(
+        default_factory=lambda: int(os.environ.get(
+            "REPRO_DECODE_HORIZON", "8"))
+    )
+    # On-device sampling inside the horizon scan: 0 (default) compiles
+    # greedy argmax — the path every bit-identity invariant runs; > 0
+    # compiles categorical sampling from logits/T, seeded per megastep
+    # from sample_seed so runs (and offload replays) are deterministic.
+    temperature: float = 0.0
+    sample_seed: int = 0
 
 
 @functools.lru_cache(maxsize=None)
-def _jitted_steps(model_cfg, use_otp: bool, ffn_backend: Optional[str] = None):
-    """Compiled decode/prefill step builders, shared across engines with
-    the same (hashable, frozen) model config — jit caching then dedupes
-    by array shapes, so two engines differing only in pool geometry cost
-    one trace each, not one per instance."""
+def _jitted_steps(model_cfg, use_otp: bool, ffn_backend: Optional[str] = None,
+                  horizon: int = 1, temperature: float = 0.0):
+    """Compiled decode-megastep/prefill builders, shared across engines
+    with the same (hashable, frozen) model config and the same static
+    horizon/sampling knobs — jit caching then dedupes by array shapes,
+    so two engines differing only in pool geometry cost one trace each,
+    not one per instance."""
     hooks = {"use_otp": use_otp, "ffn_backend": ffn_backend}
 
-    def decode_fn(params, k, v, token, positions, tables, active):
+    def decode_fn(params, k, v, token, positions, tables, active, budgets,
+                  eos_ids, key):
         cache = {"k": k, "v": v, "block_tables": tables, "active": active}
-        new_cache, logits, info = tf.paged_decode_step(
-            params, cache, token, positions, model_cfg, moe_hooks=hooks
+        new_cache, toks, emits, info = tf.paged_decode_horizon(
+            params, cache, token, positions, model_cfg, horizon=horizon,
+            budgets=budgets, eos_ids=eos_ids, moe_hooks=hooks,
+            temperature=temperature, rng_key=key,
         )
         return (
-            new_cache["k"], new_cache["v"], logits,
+            new_cache["k"], new_cache["v"], toks, emits,
             info["expert_activation"], info["slot_counts"],
         )
 
@@ -189,6 +242,14 @@ class PagedServingEngine:
                 f"preempt_mode must be 'swap' or 'recompute', "
                 f"got {self.ecfg.preempt_mode!r}"
             )
+        if self.ecfg.decode_horizon < 1:
+            raise ValueError(
+                f"decode_horizon must be ≥ 1, got {self.ecfg.decode_horizon}"
+            )
+        if self.ecfg.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be ≥ 0, got {self.ecfg.temperature}"
+            )
         cfg = self.model_cfg
         self.offload = None
         if self.ecfg.resident_experts is not None:
@@ -214,12 +275,21 @@ class PagedServingEngine:
             max_slots=self.ecfg.max_slots,
             max_blocks_per_slot=self.ecfg.max_blocks_per_slot,
         )
-        self.scheduler = Scheduler(self.cache, reserve_full=self.ecfg.reserve_full)
+        self.scheduler = Scheduler(
+            self.cache, reserve_full=self.ecfg.reserve_full,
+            horizon=self.ecfg.decode_horizon,
+        )
         self.metrics = ServingMetrics()
         self.results: Dict[int, List[int]] = {}
-        self._step_idx = 0
-        self._last_activation = None  # set by _run_offloaded (decode only)
-        self._last_slot_counts = None  # [L, num_slots] of the last program
+        self._step_idx = 0  # logical decode steps completed
+        self._megastep_idx = 0  # fused megasteps run (sampling-key index)
+        # two independent key streams off sample_seed: decode megasteps
+        # fold in the megastep index, prefill first-token draws fold in
+        # the request id (admission-order independent, replay stable)
+        base = jax.random.PRNGKey(self.ecfg.sample_seed)
+        self._sample_key = jax.random.fold_in(base, 0)
+        self._prefill_key = jax.random.fold_in(base, 1)
+        self._last_run_stats: Dict[str, float] = {}
         # PMQ trees report per-slot dispatch counts; the capacity gauge
         # needs the slot total to turn them into a utilization fraction
         blocks = params.get("blocks") if isinstance(params, dict) else None
@@ -228,7 +298,8 @@ class PagedServingEngine:
             if isinstance(blocks, dict) and "moe_ce" in blocks else None
         )
         self._decode, self._prefill = _jitted_steps(
-            self.model_cfg, self.ecfg.use_otp, self.ecfg.ffn_backend
+            self.model_cfg, self.ecfg.use_otp, self.ecfg.ffn_backend,
+            self.ecfg.decode_horizon, float(self.ecfg.temperature),
         )
 
     # ------------------------------------------------------------ intake
@@ -253,10 +324,11 @@ class PagedServingEngine:
         return dict(self.results)
 
     def step(self) -> bool:
-        """One engine round: admit what fits, grow/preempt page tables,
-        decode every active slot one token. Returns whether work remains —
-        the simulation harness drives this directly to interleave
-        arrivals with decode steps.
+        """One engine round (megastep boundary): admit what fits,
+        grow/preempt page tables horizon-ahead, then advance every
+        active slot up to ``decode_horizon`` tokens in one fused jitted
+        program. Returns whether work remains — the simulation harness
+        drives this directly to interleave arrivals with decode.
         """
         if not self.scheduler.has_work():
             return False
@@ -275,7 +347,7 @@ class PagedServingEngine:
                     f"({self.cache.allocator.num_free} free)"
                 )
             return False
-        self._decode_once()
+        self._decode_megastep()
         return self.scheduler.has_work()
 
     # --------------------------------------------------------- admission
@@ -335,40 +407,73 @@ class PagedServingEngine:
             chunk = np.zeros((1, c), np.int32)
             chunk[0, :n] = seq[off : off + n]
             args = (jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row)
-            logits = self._run_offloaded(self._prefill, args)
-            self._record_capacity_util(c)
+            logits, counts = self._run_offloaded(self._prefill, args)
+            self.metrics.record_prefill_runs(self._last_run_stats["runs"])
+            self._record_capacity_util(counts, c)
         if resume:
             return
         jax.block_until_ready(logits)
-        req.out.append(int(np.argmax(np.asarray(logits)[0, -1])))
+        last = np.asarray(logits)[0, -1]
+        if self.ecfg.temperature > 0.0:
+            # the TTFT token is sampled too — same categorical draw the
+            # horizon scan applies to every later token
+            tok = int(jax.random.categorical(
+                jax.random.fold_in(self._prefill_key, req.rid),
+                jnp.asarray(last) / jnp.float32(self.ecfg.temperature),
+            ))
+        else:
+            tok = int(np.argmax(last))
+        req.out.append(tok)
         req.pos = p_len
 
     # --------------------------------------------------- expert residency
-    def _run_offloaded(self, program, args, *, is_decode: bool = False):
-        """Run one jitted program (prefill chunk or decode step) under the
-        expert-residency contract: re-run after a synchronous upload until
-        every expert the program actually dispatched to was resident
-        *during* the run — only then are its outputs (and KV writes,
-        which land at position-determined destinations and are simply
-        overwritten by a replay) identical to the all-resident engine.
-        Returns the program's logits; extra outputs are consumed here
-        (``is_decode`` marks the decode program, whose 4th output is the
-        expert-activation scalar).
+    def _run_offloaded(self, program, args):
+        """Run one jitted program (prefill chunk or decode megastep)
+        under the expert-residency contract: re-run after a synchronous
+        upload until every expert the program actually dispatched to was
+        resident *during* the run — only then are its outputs (and KV
+        writes, which land at position-determined destinations and carry
+        a deterministic token sequence, so a replay simply overwrites
+        them with identical values) identical to the all-resident
+        engine. Returns ``(*payload, counts)`` — everything the program
+        emitted after the donated pools, with the trailing dispatch
+        counts already fetched to host numpy (this fetch is the
+        megastep's one host sync). ``self._last_run_stats`` records the
+        run count and the compute/offload wall-time split: the first run
+        is pure decode/prefill math, everything after it (uploads +
+        replays) is offload overhead that used to conflate into the
+        latency metric.
         """
         if self.offload is not None:
             self.offload.begin_step()
         missed = False
+        runs = 0
+        compute_s = 0.0
+        offload_s = 0.0
         while True:
+            t0 = time.time()
             out = program(self.params, self.cache.k, self.cache.v, *args)
             self.cache.k, self.cache.v = out[0], out[1]
-            logits = out[2]
-            self._last_activation = out[3] if is_decode else None
-            # [L, num_slots] dispatch counts ([L, 0] outside PMQ): kept
-            # for the capacity-utilization gauge even without offload
-            self._last_slot_counts = np.asarray(out[-1])
+            payload = out[2:-1]
+            # the one host sync: dispatch counts ([L, num_slots] for a
+            # prefill chunk, [H, L, num_slots] for a decode megastep;
+            # trailing dim 0 outside PMQ) — fetched for the offload miss
+            # check and the capacity-utilization gauge
+            counts = np.asarray(out[-1])
+            runs += 1
+            dt = time.time() - t0
+            if runs == 1:
+                compute_s = dt
+            else:
+                offload_s += dt
             if self.offload is None:
-                return logits
-            counts = self._last_slot_counts
+                self._last_run_stats = {
+                    "runs": runs, "compute_s": compute_s,
+                    "offload_s": offload_s,
+                }
+                return payload + (counts,)
+            t1 = time.time()
+            # ensure_resident normalizes [L,S] and [H,L,S] itself
             uploads, nbytes = self.offload.ensure_resident(counts)
             if uploads == 0:
                 if missed:
@@ -376,17 +481,22 @@ class PagedServingEngine:
                 else:
                     self.metrics.record_expert_hit()
                 self.offload.update_stats(counts)
-                return logits
+                self._last_run_stats = {
+                    "runs": runs, "compute_s": compute_s,
+                    "offload_s": offload_s + (time.time() - t1),
+                }
+                return payload + (counts,)
             missed = True
+            offload_s += time.time() - t1
             self.metrics.record_expert_miss(uploads, nbytes)
 
-    def _record_capacity_util(self, t: int) -> None:
-        """Feed the MoE capacity-padding gauge from the step's reported
-        ``slot_counts``: routed (token, choice) pairs over the dispatch
-        buffer's total capacity rows (``L · num_slots · cap`` for the
-        ``t`` tokens the program ran). The complement is the dead-padding
-        compute the grouped FFN path skips (see serving.metrics)."""
-        counts = self._last_slot_counts
+    def _record_capacity_util(self, counts: np.ndarray, t: int) -> None:
+        """Feed the MoE capacity-padding gauge from one logical step's
+        reported ``slot_counts`` ([L, num_slots]): routed (token, choice)
+        pairs over the dispatch buffer's total capacity rows
+        (``L · num_slots · cap`` for the ``t`` tokens the program ran).
+        The complement is the dead-padding compute the grouped FFN path
+        skips (see serving.metrics)."""
         if self._num_slots is None or counts is None or counts.size == 0:
             return
         from ..models.moe import dispatch_capacity
@@ -413,7 +523,11 @@ class PagedServingEngine:
 
     # ---------------------------------------------------- growth/preempt
     def _ensure_pages(self) -> None:
-        """Grow every active slot to cover its next decode write.
+        """Grow every active slot **horizon-ahead**: enough pages to
+        cover all ``min(H, budget)`` KV writes of the coming megastep,
+        so no write inside the fused scan can land on an unallocated
+        page — growth, like every pool-pressure decision, happens only
+        at megastep boundaries.
 
         Oldest admission first, so the eldest request always wins the
         page contest; on exhaustion the scheduler preempts the youngest
@@ -422,14 +536,14 @@ class PagedServingEngine:
         growth: admission already covered ``prompt + max_new``.
         """
         swap = self.ecfg.preempt_mode == "swap"
+        h = self.ecfg.decode_horizon
         for slot, req in sorted(
             self.scheduler.active.items(), key=lambda kv: kv[1].admit_seq
         ):
             if slot not in self.scheduler.active:
                 continue  # preempted earlier in this pass
-            need = (
-                self.cache.blocks_needed(req.pos + 1)
-                - len(self.cache.slot_blocks[slot])
+            need = self.cache.slot_deficit(
+                slot, req.pos + req.next_decode_writes(h)
             )
             if need <= 0:
                 continue
@@ -447,37 +561,74 @@ class PagedServingEngine:
                 self.cache.grow(slot, need)
 
     # ------------------------------------------------------------ decode
-    def _decode_once(self) -> None:
+    def _decode_megastep(self) -> None:
+        """Advance every active slot up to ``decode_horizon`` tokens in
+        one fused jitted program, then apply the fetched ``[H, slots]``
+        token matrix host-side: one dispatch, one host sync, one Python
+        pass per megastep. Per-logical-step metrics are reconstructed
+        from the emit mask (exact) and the megastep wall time (spread
+        evenly — see serving.metrics)."""
         b = self.ecfg.max_slots
+        h = self.ecfg.decode_horizon
         tokens = np.zeros((b, 1), np.int32)
         positions = np.zeros((b,), np.int32)
         active = np.zeros((b,), bool)
+        budgets = np.zeros((b,), np.int32)
+        eos_ids = np.full((b,), -1, np.int32)
         for slot, req in self.scheduler.active.items():
             tokens[slot, 0] = req.out[-1]
             positions[slot] = req.pos
             active[slot] = True
+            budgets[slot] = req.max_new - len(req.out)
+            eos_ids[slot] = req.eos_id
+        # one key per megastep (unused under greedy): offload replays of
+        # the same megastep reuse it, so sampled runs replay bit-identically
+        key = None
+        if self.ecfg.temperature > 0.0:
+            key = jax.random.fold_in(self._sample_key, self._megastep_idx)
         t0 = time.time()
-        logits = self._run_offloaded(
+        toks, emits, acts, counts = self._run_offloaded(
             self._decode,
             (jnp.asarray(tokens), jnp.asarray(positions),
-             self.cache.tables_device(), jnp.asarray(active)),
-            is_decode=True,
+             self.cache.tables_device(), jnp.asarray(active),
+             jnp.asarray(budgets), jnp.asarray(eos_ids), key),
         )
-        jax.block_until_ready(logits)
+        toks = np.asarray(toks)          # [H, B] (-1 where not emitted)
+        emits = np.asarray(emits)        # [H, B] bool
+        acts = np.asarray(acts)          # [H]
         dt = time.time() - t0
-        self._record_capacity_util(b)
-        self.metrics.record_decode_step(
-            dt, int(active.sum()), float(self._last_activation),
-            self.scheduler.queue_depth,
-            page_utilization=self.cache.utilization,
+        stats = self._last_run_stats
+        # logical steps that emitted ≥ 1 token; trailing all-stopped scan
+        # steps computed garbage and recorded nothing
+        emitting = np.flatnonzero(emits.any(axis=1))
+        steps_run = len(emitting)
+        self.metrics.record_megastep(
+            steps_run, stats["compute_s"], stats["offload_s"],
+            stats["runs"], stats["runs"],
         )
+        per_step_s = dt / max(steps_run, 1)
+        for s in emitting:
+            # queue depth / page utilization are genuinely constant
+            # within a megastep (all scheduling happens at the boundary)
+            self.metrics.record_decode_step(
+                per_step_s, int(emits[s].sum()), float(acts[s]),
+                self.scheduler.queue_depth,
+                page_utilization=self.cache.utilization,
+            )
+            self._record_capacity_util(counts[s], b)
         if self.offload is not None:
             self.metrics.record_expert_residency(self.offload.resident_bytes)
-        logits_np = np.asarray(logits)
         for slot, req in list(self.scheduler.active.items()):
-            req.out.append(int(np.argmax(logits_np[slot, -1])))
-            req.pos += 1
+            last_s = 0
+            for s in range(h):
+                if emits[s, slot]:
+                    req.out.append(int(toks[s, slot]))
+                    req.pos += 1
+                    last_s = s
             if req.done:
                 self.scheduler.finish(slot)
-                self.metrics.record_release(req.rid, slot, self._step_idx)
-        self._step_idx += 1
+                self.metrics.record_release(
+                    req.rid, slot, self._step_idx + last_s
+                )
+        self._step_idx += steps_run
+        self._megastep_idx += 1

@@ -9,8 +9,13 @@ next queued request reuses them, so pool sizing follows the *sum* of
 live context lengths instead of ``max_slots × max_len``.
 
 Slots grow **on demand**: admission reserves pages for the prompt only
-and :meth:`PagedKVCache.grow` appends pages one decode write at a time,
-so the pool can be sized well below the worst-case ``prompt + max_new``
+and :meth:`PagedKVCache.grow` appends decode pages between jitted
+programs. With a fused decode horizon the engine reserves **horizon
+ahead** — before each megastep every active slot is grown to cover all
+``min(H, budget)`` KV writes the fused program will perform
+(:meth:`slot_deficit` computes the gap), so growth, preemption and every
+other pool-pressure decision happen at megastep boundaries only; the
+pool can still be sized well below the worst-case ``prompt + max_new``
 sum. Under pressure a victim slot's pages move to a host-memory backing
 store (:meth:`swap_out` → :class:`SwappedKV` → :meth:`swap_in`) — the
 device pages are freed immediately and the bit-exact KV is restored when
@@ -177,6 +182,15 @@ class PagedKVCache:
 
     def max_slot_tokens(self) -> int:
         return self.max_blocks_per_slot * self.block_size
+
+    def slot_deficit(self, slot: int, total_tokens: int) -> int:
+        """Pages a live slot still needs to cover ``total_tokens`` kv
+        entries — the engine grows by this before each megastep so every
+        write of the fused decode program lands on an allocated page."""
+        return max(
+            0,
+            self.blocks_needed(total_tokens) - len(self.slot_blocks[slot]),
+        )
 
     def can_admit(self, total_tokens: int, headroom: int = 0) -> bool:
         """``headroom`` pages are spoken for (pending growth of already

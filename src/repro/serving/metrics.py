@@ -20,12 +20,30 @@ grouped expert-GEMM path skips via its ragged ``num_active`` frontier
 serving-side witness of that win.
 ``expert_prefetch_*`` / ``expert_*_bytes`` / ``expert_resident_bytes``
 cover host-offloaded PMQ buckets (:mod:`repro.serving.offload`): a
-*hit* is a logical step (decode step or prefill chunk) whose whole
-expert working set was resident on the first run, a *miss* is a step
+*hit* is a logical program (decode megastep or prefill chunk) whose
+whole expert working set was resident on the first run, a *miss* is one
 that needed ≥ 1 replay after synchronous uploads; upload bytes split
 into ahead-of-need prefetch traffic and miss traffic, and the
 resident-bytes gauge tracks the device footprint the budget actually
 bought.
+
+**Megastep reconstruction.** With a fused decode horizon the engine
+syncs once per megastep, so per-*token* timing is no longer directly
+observable: :meth:`record_megastep` logs each megastep's wall time
+split into **compute** (the first program run — what decode math
+actually costs) and **offload overhead** (synchronous miss uploads +
+replays, previously indistinguishable inside the decode timer; the
+split makes their share — ``decode_offload_frac`` — attributable, while
+``decode_step_s``/``tokens_per_s`` deliberately remain end-to-end
+wall-clock so throughput never overstates what the engine actually
+served), and the engine reconstructs per-logical-step entries by
+spreading the megastep wall time evenly over the steps that emitted
+tokens (``active_per_step`` / ``expert_activation`` / page+capacity
+gauges stay exact per logical step — they come from the device). Wall-clock seconds can never live in
+:meth:`counters` (identical replays differ in time); the deterministic
+witnesses of the horizon win are the **count** fields —
+``decode_dispatches`` / ``decode_replays`` / ``decode_host_syncs`` per
+generated token drop by ~H×.
 """
 from __future__ import annotations
 
@@ -69,6 +87,17 @@ class ServingMetrics:
     expert_miss_bytes: int = 0
     expert_prefetch_bytes: int = 0
     expert_resident_bytes: List[int] = dataclasses.field(default_factory=list)
+    # fused decode-horizon megasteps (one jitted dispatch + one host sync
+    # covers up to H logical decode steps; replays are offload misses)
+    megasteps: int = 0
+    megastep_logical_steps: List[int] = dataclasses.field(default_factory=list)
+    decode_compute_s: List[float] = dataclasses.field(default_factory=list)
+    decode_offload_s: List[float] = dataclasses.field(default_factory=list)
+    decode_dispatches: int = 0
+    decode_replays: int = 0
+    decode_host_syncs: int = 0
+    prefill_dispatches: int = 0
+    prefill_replays: int = 0
 
     # ------------------------------------------------------------ record
     def record_admission(
@@ -97,6 +126,32 @@ class ServingMetrics:
         self.expert_activation.append(expert_activation)
         self.queue_depth.append(queue_depth)
         self.page_utilization.append(page_utilization)
+
+    def record_megastep(
+        self, logical_steps: int, compute_s: float, offload_s: float,
+        dispatches: int, syncs: int,
+    ) -> None:
+        """One fused decode megastep: ``logical_steps`` token-emitting
+        horizon steps, timed as ``compute_s`` (first program run — pure
+        decode math) + ``offload_s`` (miss uploads and replays, which
+        previously conflated into the decode timer); ``dispatches``
+        counts jitted program invocations including replays and
+        ``syncs`` the device→host fetches. The count fields are
+        deterministic per trace and land in :meth:`counters`; the
+        seconds land in :meth:`summary` only."""
+        self.megasteps += 1
+        self.megastep_logical_steps.append(int(logical_steps))
+        self.decode_compute_s.append(float(compute_s))
+        self.decode_offload_s.append(float(offload_s))
+        self.decode_dispatches += int(dispatches)
+        self.decode_replays += int(dispatches) - 1
+        self.decode_host_syncs += int(syncs)
+
+    def record_prefill_runs(self, dispatches: int) -> None:
+        """One prefill chunk's program invocations (> 1 ⇒ offload
+        replays)."""
+        self.prefill_dispatches += int(dispatches)
+        self.prefill_replays += int(dispatches) - 1
 
     def record_capacity_utilization(self, frac: float) -> None:
         """Routed (token, choice) pairs ÷ total expert capacity rows for
@@ -192,6 +247,13 @@ class ServingMetrics:
             "expert_miss_bytes": self.expert_miss_bytes,
             "expert_prefetch_bytes": self.expert_prefetch_bytes,
             "expert_resident_bytes": list(self.expert_resident_bytes),
+            "megasteps": self.megasteps,
+            "megastep_logical_steps": list(self.megastep_logical_steps),
+            "decode_dispatches": self.decode_dispatches,
+            "decode_replays": self.decode_replays,
+            "decode_host_syncs": self.decode_host_syncs,
+            "prefill_dispatches": self.prefill_dispatches,
+            "prefill_replays": self.prefill_replays,
         }
 
     def summary(self) -> Dict[str, float]:
@@ -231,6 +293,36 @@ class ServingMetrics:
             "expert_resident_bytes_last": (
                 int(self.expert_resident_bytes[-1])
                 if self.expert_resident_bytes else 0
+            ),
+            "megasteps": int(self.megasteps),
+            "decode_compute_mean_s": _mean(self.decode_compute_s),
+            "decode_offload_mean_s": _mean(self.decode_offload_s),
+            "decode_offload_frac": (
+                float(np.sum(self.decode_offload_s))
+                / max(float(np.sum(self.decode_compute_s))
+                      + float(np.sum(self.decode_offload_s)), 1e-12)
+                if self.decode_compute_s else 0.0
+            ),
+            "decode_dispatches": int(self.decode_dispatches),
+            "decode_replays": int(self.decode_replays),
+            "decode_host_syncs": int(self.decode_host_syncs),
+            "prefill_dispatches": int(self.prefill_dispatches),
+            "prefill_replays": int(self.prefill_replays),
+            # the horizon's deterministic win: jitted dispatches and host
+            # syncs per generated token drop from ~1 toward ~1/H
+            "dispatches_per_token": (
+                self.decode_dispatches / gen_tokens if gen_tokens else 0.0
+            ),
+            "syncs_per_token": (
+                self.decode_host_syncs / gen_tokens if gen_tokens else 0.0
+            ),
+            # ... and per *logical decode step* from exactly 1 toward 1/H
+            # (per-token folds in batch width; per-step isolates the
+            # horizon amortization itself)
+            "dispatches_per_step": (
+                self.decode_dispatches
+                / max(int(np.sum(self.megastep_logical_steps)), 1)
+                if self.megastep_logical_steps else 0.0
             ),
         }
 

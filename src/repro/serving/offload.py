@@ -21,17 +21,20 @@ Residency is managed per ``(layer, bucket, expert slot)``:
   every decode/prefill program reports (EAC-MoE-style expert-selection
   awareness, PAPERS.md) picks the top-``R_i`` slots per bucket; uploads
   happen between engine steps, alongside KV page growth.
-* **Miss**: routing happens *inside* the jitted step, so the true
+* **Miss**: routing happens *inside* the jitted program, so the true
   working set is only known after the program ran. The engine replays
   the program after a synchronous upload of the missing experts
   (:meth:`ensure_resident`); KV writes land at position-determined
-  destinations, so a replay simply overwrites them with the correct
-  values — residency is invisible to correctness for any budget that
-  holds the per-step working set. Only usage up to the first missed
-  layer is trusted (deeper layers routed on garbage activations);
-  authentic slots are **pinned** until the step is accepted, each
-  replay extends the correct layer prefix, and the loop accepts within
-  ``num_layers`` replays.
+  destinations and the fused decode horizon's token sequence is
+  deterministic per megastep, so a replay simply overwrites them with
+  the correct values — residency is invisible to correctness for any
+  budget that holds the per-program working set. Only usage up to the
+  first missed row of the reported counts — layer-major within a step,
+  step-major across a fused horizon — is trusted (later rows routed on
+  garbage activations); authentic slots are **pinned** until the
+  program is accepted, each replay extends the correct prefix, and the
+  loop accepts within ``rows`` (``num_layers``, or ``H·num_layers``
+  for a decode megastep) replays.
 * **Overflow**: if a single step's working set exceeds a bucket's
   budget, the manager grows that bucket's resident buffer to fit (a
   one-time retrace) rather than serving wrong tokens — ``grows`` counts
@@ -268,24 +271,32 @@ class ExpertOffloadManager:
     def ensure_resident(self, counts: np.ndarray) -> Tuple[int, int]:
         """Make the last program run's *authentic* working set resident.
 
-        ``counts [L, num_slots]`` is the run's ``slot_counts`` output.
+        ``counts`` is the run's ``slot_counts`` output with rows in
+        **computation order**: ``[L, num_slots]`` for a single-step
+        program, or ``[H·L, num_slots]`` (step-major: row ``k`` is layer
+        ``k % L`` of horizon step ``k // L``) for a fused decode
+        megastep — whose union over steps is the horizon working set.
         Returns ``(uploads, bytes)`` — ``uploads == 0`` means the run's
         whole working set was already resident (the run is *accepted*:
         its outputs are bit-identical to the all-resident engine).
-        Otherwise the caller must replay the program after this
-        synchronous upload.
+        Otherwise the caller must replay the whole program after this
+        synchronous upload (KV writes are position-addressed and the
+        token sequence is deterministic per megastep key, so a megastep
+        replay is idempotent).
 
-        Usage is only trusted up to the **first layer with a miss**:
-        layers below it computed with correct expert rows, so their
-        routing — and the missed layer's own routing — is authentic;
-        deeper layers routed on garbage activations and are ignored
-        until a replay reaches them with correct inputs. Every pinned
-        slot is therefore part of the true working set — phantom usage
-        can never inflate uploads or trigger a budget grow — and each
-        replay extends the correct prefix by ≥ 1 layer, so the loop
-        accepts within ``num_layers`` replays. Evicts only unpinned
-        rows, coldest EMA first.
+        Usage is only trusted up to the **first row with a miss**: rows
+        before it computed with correct expert rows, so their routing —
+        and the missed row's own routing — is authentic; later rows
+        (deeper layers, and with a horizon every subsequent fused step,
+        whose input token depends on the full previous step) routed on
+        garbage activations and are ignored until a replay reaches them
+        with correct inputs. Every pinned slot is therefore part of the
+        true working set — phantom usage can never inflate uploads or
+        trigger a budget grow — and each replay extends the correct
+        prefix by ≥ 1 row, so the loop accepts within ``rows`` (≤ H·L)
+        replays. Evicts only unpinned rows, coldest EMA first.
         """
+        rows = counts.reshape(-1, self.num_slots)
         # fast path (the common all-hit case): nothing dispatched-to is
         # non-resident, so the run is accepted without touching the pin
         # sets — pins only matter across replays, and slots pinned by an
@@ -293,22 +304,24 @@ class ExpertOffloadManager:
         resident = np.concatenate(
             [self.slot_row[bk] >= 0 for bk in self._bkeys], axis=1
         )
-        if not np.any((counts > 0) & ~resident):
+        layer_of = np.arange(rows.shape[0]) % self.num_layers
+        if not np.any((rows > 0) & ~resident[layer_of]):
             return 0, 0
         ups = 0
         nbytes = 0
         pending = {bk: [] for bk in self._bkeys}
-        for l in range(self.num_layers):
-            layer_missed = False
+        for k in range(rows.shape[0]):
+            l = int(layer_of[k])
+            row_missed = False
             for i, bk in enumerate(self._bkeys):
                 m = self.meta[i]
-                used = np.nonzero(counts[l, m.start:m.start + m.count] > 0)[0]
+                used = np.nonzero(rows[k, m.start:m.start + m.count] > 0)[0]
                 pin = self._pinned[l][bk]
                 pin.update(int(u) for u in used)
                 missing = [s for s in sorted(pin) if self.slot_row[bk][l, s] < 0]
                 if not missing:
                     continue
-                layer_missed = True
+                row_missed = True
                 if len(pin) > self._budgets[i]:
                     self._grow(i, len(pin))
                 # pin ≤ budget now, so every missing slot finds a row
@@ -319,8 +332,8 @@ class ExpertOffloadManager:
                 assert len(placed) == len(missing), "pin set exceeds budget"
                 pending[bk].extend(placed)
                 ups += len(placed)
-            if layer_missed:
-                break  # deeper layers routed on garbage — replay first
+            if row_missed:
+                break  # later rows routed on garbage — replay first
         for bk in self._bkeys:  # one batched upload + map per bucket
             if pending[bk]:
                 nbytes += self._upload_batch(bk, pending[bk])
@@ -328,7 +341,13 @@ class ExpertOffloadManager:
         return ups, nbytes
 
     def update_stats(self, counts: np.ndarray) -> None:
-        """Fold an accepted step's dispatch counts into the routing EMA."""
+        """Fold an accepted program's dispatch counts into the routing
+        EMA. Accepts ``[L, num_slots]`` or a fused megastep's
+        ``[H·L, num_slots]`` / ``[H, L, num_slots]`` — horizon steps are
+        summed, so one EMA update per accepted megastep sees the whole
+        horizon's traffic (a smoother, more predictive prefetch signal
+        than per-token updates)."""
+        counts = counts.reshape(-1, self.num_layers, self.num_slots).sum(0)
         d = self.ema_decay
         self.ema = d * self.ema + (1.0 - d) * counts.astype(np.float64)
 

@@ -36,6 +36,10 @@ class Request:
     rid: int
     prompt: np.ndarray  # [P] int32
     max_new: int = 16
+    # stop token: generation ends the step this id is emitted (the EOS
+    # token itself is kept in ``out``); -1 disables. The fused decode
+    # horizon folds this into its on-device per-slot stop mask.
+    eos_id: int = -1
     # ---- filled in by scheduler/engine ----
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
@@ -60,15 +64,36 @@ class Request:
 
     @property
     def done(self) -> bool:
+        if self.eos_id >= 0 and self.out and self.out[-1] == self.eos_id:
+            return True
         return len(self.out) >= self.max_new
+
+    def next_decode_writes(self, horizon: int) -> int:
+        """KV writes the next megastep performs for this request: one per
+        emitted token, capped by the horizon and the remaining emission
+        budget. Fresh requests count from after their prefill token
+        (``max(len(out), 1)``); the floor of 1 keeps the historical
+        one-write reservation for ``max_new == 1`` requests that finish
+        at prefill. An EOS may end generation earlier — the extra pages
+        are simply released at finish.
+        """
+        budget = self.max_new - max(len(self.out), 1)
+        return max(1, min(horizon, budget))
 
 
 class Scheduler:
-    """Pure host-side bookkeeping; the engine drives it between steps."""
+    """Pure host-side bookkeeping; the engine drives it between steps
+    (megastep boundaries — with a decode horizon ``H > 1`` admission,
+    growth and preemption all happen between fused H-step programs, and
+    page reservations cover every KV write of the coming megastep)."""
 
-    def __init__(self, cache: PagedKVCache, *, reserve_full: bool = False):
+    def __init__(self, cache: PagedKVCache, *, reserve_full: bool = False,
+                 horizon: int = 1):
+        if horizon < 1:
+            raise ValueError(f"horizon must be ≥ 1, got {horizon}")
         self.cache = cache
         self.reserve_full = reserve_full
+        self.horizon = horizon
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self._admit_seq = 0
@@ -98,38 +123,40 @@ class Scheduler:
         self.waiting.append(req)
 
     def growth_reserve(self) -> int:
-        """Pages the current actives need for their next decode write.
+        """Pages the current actives need for their next megastep's KV
+        writes (up to ``horizon`` per slot, capped by each request's
+        remaining budget).
 
         Admission leaves this many pages untouched so a new request never
         starves a running one into preempting it right back out — an
-        admitted request is guaranteed to survive ≥ 1 decode step.
+        admitted request is guaranteed to survive ≥ 1 megastep.
         """
         if self.reserve_full:
             return 0  # full reservation: actives never grow
         need = 0
         for slot, req in self.active.items():
-            need += max(
-                0,
-                self.cache.blocks_needed(req.pos + 1)
-                - len(self.cache.slot_blocks[slot]),
+            need += self.cache.slot_deficit(
+                slot, req.pos + req.next_decode_writes(self.horizon)
             )
         return need
 
     def try_admit(self, step_idx: int) -> Optional[Request]:
         """FCFS admission: head of queue starts iff slot + pages free.
 
-        Fresh requests need pages for the prompt **plus its first decode
-        write** (``context + 1`` tokens — one extra page only when the
-        context ends exactly on a block boundary); preempted requests the
-        same over their accumulated context; ``reserve_full`` needs
-        ``prompt + max_new`` either way. Pages already promised to active
-        slots' growth (:meth:`growth_reserve`) are off limits.
+        Fresh requests need pages for the prompt **plus the writes of
+        their first decode megastep** (``context +
+        min(horizon, budget)`` tokens — ``context + 1`` at ``H = 1``,
+        today's policy); preempted requests the same over their
+        accumulated context; ``reserve_full`` needs ``prompt + max_new``
+        either way. Pages already promised to active slots' growth
+        (:meth:`growth_reserve`) are off limits.
         """
         if not self.waiting:
             return None
         req = self.waiting[0]
         tokens = (
-            req.total_tokens if self.reserve_full else req.context_tokens + 1
+            req.total_tokens if self.reserve_full
+            else req.context_tokens + req.next_decode_writes(self.horizon)
         )
         if not self.cache.can_admit(tokens, headroom=self.growth_reserve()):
             return None

@@ -54,9 +54,12 @@ TINY_MOE = ModelConfig(
 
 BITS = [1, 2, 2, 3]  # buckets (count 1, 2, 1) -> num_slots = 4
 
+# decode_horizon=1 pins the per-token baseline these budget/preemption
+# traces were shaped around; the fused-megastep miss path (horizon-union
+# working set, whole-megastep replay) has its own tests below
 ECFG = EngineConfig(
     max_slots=2, block_size=4, num_blocks=16, max_blocks_per_slot=6,
-    prefill_chunk=4,
+    prefill_chunk=4, decode_horizon=1,
 )
 
 
@@ -275,6 +278,94 @@ def test_budget_below_working_set_grows_not_corrupts(compressed_model):
     assert all(
         r <= m.count for r, m in zip(eng.offload.budgets, ce.meta)
     )
+
+
+# -------------------------------------------- fused decode-horizon megasteps
+@pytest.mark.parametrize("horizon", [2, 4, 8])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_offload_equivalence_across_horizons(compressed_model, horizon, seed):
+    """Acceptance (horizon × offload): for H ∈ {2, 4, 8} and every
+    budget down to near the floor, the fused megastep's miss path —
+    horizon-union working set, whole-megastep replay — emits tokens
+    bit-identical to the all-resident H=1 engine."""
+    cfg, params = compressed_model
+    baseline = PagedServingEngine(cfg, params, ECFG)
+    out0 = baseline.serve(make_requests(cfg, 3, seed, max_new=7))
+    num_slots = params["blocks"]["moe_ce"].num_slots
+    for budget in range(num_slots, 2, -1):
+        eng = PagedServingEngine(
+            cfg, params,
+            dataclasses.replace(ECFG, resident_experts=budget,
+                                decode_horizon=horizon),
+        )
+        out = eng.serve(make_requests(cfg, 3, seed, max_new=7))
+        assert out == out0, (
+            f"H={horizon} budget={budget} diverged from all-resident H=1"
+        )
+
+
+def test_offload_megastep_replay_counts(compressed_model):
+    """A decode megastep whose working set was force-evicted after
+    prefill must miss, replay the whole megastep (decode_replays ≥ 1),
+    accept within the H·L induction bound — with bit-identical outputs
+    and the replay time split out of the decode-compute timer."""
+    cfg, params = compressed_model
+    baseline = PagedServingEngine(
+        cfg, params, dataclasses.replace(ECFG, decode_horizon=4)
+    )
+    reqs0 = make_requests(cfg, 2, 0, max_new=6)
+    out0 = baseline.serve(reqs0)
+    eng = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, resident_experts=3, decode_horizon=4),
+    )
+    reqs = make_requests(cfg, 2, 0, max_new=6)
+    for r in reqs:
+        eng.submit(r)
+    eng._admit_all()  # prefill uploads the prompt working set
+    # force-evict bucket b1 entirely (its budget row goes free): any b1
+    # traffic in the coming megasteps must miss inside the fused program;
+    # prefetch is disabled so it cannot quietly undo the eviction
+    mgr = eng.offload
+    mgr.slot_row["b1"][:, :] = -1
+    mgr.row_slot["b1"][:, :] = -1
+    eng._prefetch_experts = lambda: None
+    eng.run()
+    assert {r.rid: eng.results[r.rid] for r in reqs} == out0
+    c = eng.metrics.counters()
+    assert c["expert_prefetch_misses"] >= 1
+    assert c["decode_replays"] >= 1  # ≥ 1 whole-megastep replay happened
+    # dispatch accounting: every decode dispatch is a megastep or replay
+    assert c["decode_dispatches"] == c["megasteps"] + c["decode_replays"]
+    # induction bound: every megastep accepted within H·L extra runs
+    assert c["decode_dispatches"] <= c["megasteps"] * (1 + 4 * cfg.num_layers)
+    s = eng.metrics.summary()
+    # satellite: replay/upload time is split out of the decode timer
+    assert s["decode_offload_mean_s"] > 0.0
+    assert s["decode_compute_mean_s"] > 0.0
+
+
+def test_offload_horizon_composes_with_preemption(compressed_model):
+    """Horizon × offload × preemption: all three memory squeezes at once
+    still reproduce the roomy all-resident run (tight pool sized so the
+    horizon-ahead reservations genuinely collide)."""
+    cfg, params = compressed_model
+    roomy = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=3, num_blocks=24,
+                            max_blocks_per_slot=6),
+    )
+    out0 = roomy.serve(make_requests(cfg, 3, 2, max_new=16, plen=3))
+    tight = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=3, num_blocks=7,
+                            max_blocks_per_slot=6, preempt_mode="swap",
+                            resident_experts=3, decode_horizon=4),
+    )
+    out = tight.serve(make_requests(cfg, 3, 2, max_new=16, plen=3))
+    m = tight.metrics.summary()
+    assert m["preemptions"] >= 1, "tight pool must preempt"
+    assert out == out0
 
 
 # ------------------------------------------------------- manager units

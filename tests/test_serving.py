@@ -43,9 +43,13 @@ TINY_MOE = ModelConfig(
     attn_kv_chunk=16,
 )
 
+# decode_horizon=1 pins the historical per-token program — the baseline
+# whose pressure dynamics (growth/preemption counts, admission steps)
+# these tests assert exactly; fused-horizon behavior is covered by the
+# dedicated horizon tests below and the randomized harness
 ECFG = EngineConfig(
     max_slots=2, block_size=4, num_blocks=16, max_blocks_per_slot=6,
-    prefill_chunk=4,
+    prefill_chunk=4, decode_horizon=1,
 )
 
 
@@ -182,6 +186,14 @@ def test_paged_matches_dense_logits(model):
     toks = [int(np.argmax(np.asarray(logits)[0, -1]))]
     pos = len(prompt)
     b = ECFG.max_slots
+
+    @jax.jit
+    def decode_fn(k, v, token, positions, active):
+        pc = {"k": k, "v": v, "block_tables": cache.tables_device(),
+              "active": active}
+        nc, logits, _ = tf.paged_decode_step(params, pc, token, positions, mcfg)
+        return nc["k"], nc["v"], logits
+
     for step in range(max_new - 1):
         token = np.zeros((b, 1), np.int32)
         token[slot] = toks[-1]
@@ -189,9 +201,9 @@ def test_paged_matches_dense_logits(model):
         positions[slot] = pos
         active = np.zeros((b,), bool)
         active[slot] = True
-        cache.k, cache.v, logits, _, _ = eng._decode(
-            params, cache.k, cache.v, jnp.asarray(token),
-            jnp.asarray(positions), cache.tables_device(), jnp.asarray(active),
+        cache.k, cache.v, logits = decode_fn(
+            cache.k, cache.v, jnp.asarray(token),
+            jnp.asarray(positions), jnp.asarray(active),
         )
         np.testing.assert_allclose(
             np.asarray(logits)[slot, -1], ref_logits[step + 1],
@@ -484,7 +496,242 @@ def test_reserve_full_never_preempts(model):
     assert all(len(out[r.rid]) == r.max_new for r in reqs)
 
 
+# ------------------------------------------------- fused decode horizon
+def _prefilled_slot(mcfg, params, prompt, max_new):
+    """Fresh paged cache with one prefilled slot; returns
+    (cache, slot, first_token)."""
+    cache = PagedKVCache.create(
+        mcfg, num_blocks=16, block_size=4, max_slots=2, max_blocks_per_slot=6
+    )
+    slot = cache.acquire_slot(len(prompt) + max_new)
+    row = jnp.asarray(cache.block_tables[slot : slot + 1])
+    pc = {"k": cache.k, "v": cache.v, "block_tables": row}
+    pc, logits, _ = tf.paged_prefill_chunk(
+        params, pc, jnp.asarray(prompt[None]), jnp.int32(0),
+        jnp.int32(len(prompt)), mcfg,
+    )
+    cache.k, cache.v = pc["k"], pc["v"]
+    return cache, slot, int(np.argmax(np.asarray(logits)[0, -1]))
+
+
+@pytest.mark.parametrize("horizon", [2, 4, 6])
+def test_horizon_program_matches_manual_steps(model, horizon):
+    """paged_decode_horizon emits exactly the tokens of ``budget`` manual
+    paged_decode_step calls with host-side argmax — including a horizon
+    larger than the remaining budget (trailing scan steps emit nothing)
+    — and leaves a bit-identical KV pool behind."""
+    cfg, params = model
+    mcfg = dataclasses.replace(
+        cfg, moe_capacity_factor=float(cfg.num_experts)
+    )
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    budget = 4
+    cache, slot, tok0 = _prefilled_slot(mcfg, params, prompt, budget + 1)
+    tables = cache.tables_device()
+    b = 2
+    # ---- manual single-step loop (the H = 1 reference semantics)
+    k, v = cache.k, cache.v
+    toks_ref, cur, pos = [], tok0, len(prompt)
+    for _ in range(budget):
+        token = np.zeros((b, 1), np.int32)
+        token[slot] = cur
+        positions = np.zeros((b,), np.int32)
+        positions[slot] = pos
+        active = np.zeros((b,), bool)
+        active[slot] = True
+        pc = {"k": k, "v": v, "block_tables": tables,
+              "active": jnp.asarray(active)}
+        pc, logits, _ = tf.paged_decode_step(
+            params, pc, jnp.asarray(token), jnp.asarray(positions), mcfg
+        )
+        k, v = pc["k"], pc["v"]
+        cur = int(np.argmax(np.asarray(logits)[slot, -1]))
+        toks_ref.append(cur)
+        pos += 1
+    # ---- one fused horizon program from the same starting state
+    token = np.zeros((b, 1), np.int32)
+    token[slot] = tok0
+    positions = np.zeros((b,), np.int32)
+    positions[slot] = len(prompt)
+    active = np.zeros((b,), bool)
+    active[slot] = True
+    budgets = np.zeros((b,), np.int32)
+    budgets[slot] = budget
+    hc = {"k": cache.k, "v": cache.v, "block_tables": tables,
+          "active": jnp.asarray(active)}
+    hc, toks, emits, info = tf.paged_decode_horizon(
+        params, hc, jnp.asarray(token), jnp.asarray(positions), mcfg,
+        horizon=horizon, budgets=jnp.asarray(budgets),
+        eos_ids=jnp.full((b,), -1, np.int32),
+    )
+    toks, emits = np.asarray(toks), np.asarray(emits)
+    n_emit = min(horizon, budget)
+    assert list(emits[:, slot]) == [True] * n_emit + [False] * (horizon - n_emit)
+    assert not emits[:, 1 - slot].any()  # inactive slot never emits
+    assert list(toks[:n_emit, slot]) == toks_ref[:n_emit]
+    assert (toks[n_emit:, slot] == -1).all()
+    assert np.asarray(info["slot_counts"]).shape[0] == horizon
+    if horizon >= budget:  # same writes happened ⇒ same pool bits
+        np.testing.assert_array_equal(np.asarray(hc["k"]), np.asarray(k))
+        np.testing.assert_array_equal(np.asarray(hc["v"]), np.asarray(v))
+
+
+def test_horizon_eos_stops_mid_horizon(model):
+    """A slot that emits its per-request EOS mid-horizon keeps the EOS
+    token and emits nothing after it."""
+    cfg, params = model
+    mcfg = dataclasses.replace(
+        cfg, moe_capacity_factor=float(cfg.num_experts)
+    )
+    rng = np.random.default_rng(6)
+    prompt = rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+    ref_toks, _ = dense_greedy_reference(mcfg, params, prompt, 6)
+    eos = ref_toks[2]  # greedy emits this at decode step 2 of the horizon
+    cache, slot, tok0 = _prefilled_slot(mcfg, params, prompt, 7)
+    assert tok0 == ref_toks[0]
+    b = 2
+    token = np.zeros((b, 1), np.int32)
+    token[slot] = tok0
+    positions = np.zeros((b,), np.int32)
+    positions[slot] = len(prompt)
+    active = np.zeros((b,), bool)
+    active[slot] = True
+    budgets = np.zeros((b,), np.int32)
+    budgets[slot] = 5
+    eos_ids = np.full((b,), -1, np.int32)
+    eos_ids[slot] = eos
+    hc = {"k": cache.k, "v": cache.v, "block_tables": cache.tables_device(),
+          "active": jnp.asarray(active)}
+    _, toks, emits, _ = tf.paged_decode_horizon(
+        params, hc, jnp.asarray(token), jnp.asarray(positions), mcfg,
+        horizon=5, budgets=jnp.asarray(budgets),
+        eos_ids=jnp.asarray(eos_ids),
+    )
+    toks, emits = np.asarray(toks), np.asarray(emits)
+    emitted = [int(t) for t in toks[emits[:, slot], slot]]
+    assert emitted == ref_toks[1:3]  # ... up to and including the EOS
+    assert emitted[-1] == eos
+    assert not emits[2:, slot].any()  # nothing after the stop
+
+
+def test_engine_eos_request_matches_truncated_reference(model):
+    """Engine-level EOS: the request finishes the step it emits its stop
+    token, its output is the dense reference truncated at the EOS, and
+    its slot frees at the right logical step."""
+    cfg, params = model
+    eng = PagedServingEngine(
+        cfg, params, dataclasses.replace(ECFG, decode_horizon=4)
+    )
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab_size, size=6).astype(np.int32)
+    ref_toks, _ = dense_greedy_reference(eng.model_cfg, params, prompt, 8)
+    eos = ref_toks[3]
+    assert eos not in ref_toks[:3]  # the cut lands where we think it does
+    out = eng.serve([Request(rid=0, prompt=prompt, max_new=8, eos_id=eos)])
+    assert out[0] == ref_toks[:4]  # truncated at (and including) the EOS
+    # released at logical step 2: tokens 1..3 decode at steps 0..2
+    assert eng.metrics.slot_releases[0]["step"] == 2
+    assert eng.cache.allocator.num_free == ECFG.num_blocks
+
+
+def test_engine_temperature_sampling_deterministic(model):
+    """Sampled runs replay bit-identically under the same seed, and the
+    knob leaves greedy untouched at temperature 0."""
+    cfg, params = model
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+               for _ in range(3)]
+
+    def serve(temp, seed, horizon=4):
+        eng = PagedServingEngine(
+            cfg, params,
+            dataclasses.replace(ECFG, decode_horizon=horizon,
+                                temperature=temp, sample_seed=seed),
+        )
+        return eng.serve(
+            [Request(rid=i, prompt=prompts[i], max_new=6) for i in range(3)]
+        )
+
+    a = serve(2.0, seed=0)
+    b = serve(2.0, seed=0)
+    assert a == b  # explicit per-megastep keys ⇒ deterministic replay
+    assert all(
+        0 <= t < cfg.vocab_size for toks in a.values() for t in toks
+    )
+    # the TTFT token is sampled too (per-rid keys): identical prompts
+    # under high temperature must not all open with the greedy argmax
+    eng = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ECFG, max_slots=2, decode_horizon=2,
+                            temperature=5.0, sample_seed=3),
+    )
+    same = eng.serve([
+        Request(rid=i, prompt=prompts[0], max_new=2) for i in range(6)
+    ])
+    assert len({toks[0] for toks in same.values()}) > 1
+    greedy = serve(0.0, seed=0)
+    ref = {
+        i: dense_greedy_reference(
+            PagedServingEngine(cfg, params, ECFG).model_cfg,
+            params, prompts[i], 6,
+        )[0]
+        for i in range(3)
+    }
+    assert greedy == ref  # temperature 0 is exactly the greedy path
+
+
+def test_decode_horizon_env_default(monkeypatch):
+    """REPRO_DECODE_HORIZON sets the config default; explicit values and
+    validation still win."""
+    monkeypatch.setenv("REPRO_DECODE_HORIZON", "3")
+    assert EngineConfig().decode_horizon == 3
+    assert EngineConfig(decode_horizon=2).decode_horizon == 2
+    monkeypatch.delenv("REPRO_DECODE_HORIZON")
+    assert EngineConfig().decode_horizon == 8
+    with pytest.raises(ValueError):
+        PagedServingEngine(
+            TINY_MOE, {}, dataclasses.replace(ECFG, decode_horizon=0)
+        )
+    with pytest.raises(ValueError):
+        PagedServingEngine(
+            TINY_MOE, {}, dataclasses.replace(ECFG, temperature=-1.0)
+        )
+
+
 # ---------------------------------------------------------- metrics unit
+def test_metrics_megastep_split_and_dispatch_rates():
+    from repro.serving import ServingMetrics
+
+    m = ServingMetrics()
+    # two megasteps of 4 logical steps each, 2 active slots throughout;
+    # the second needed one offload replay
+    for steps, runs, offload_s in ((4, 1, 0.0), (4, 2, 0.03)):
+        m.record_megastep(steps, 0.01, offload_s, runs, runs)
+        for _ in range(steps):
+            m.record_decode_step(0.0025, 2, 1.0, 0, page_utilization=0.5)
+    m.record_prefill_runs(1)
+    s = m.summary()
+    assert s["megasteps"] == 2
+    assert s["decode_dispatches"] == 3 and s["decode_replays"] == 1
+    assert s["decode_host_syncs"] == 3
+    assert s["prefill_dispatches"] == 1 and s["prefill_replays"] == 0
+    # compute vs offload split: replays no longer inflate compute time
+    assert s["decode_compute_mean_s"] == pytest.approx(0.01)
+    assert s["decode_offload_mean_s"] == pytest.approx(0.015)
+    assert s["decode_offload_frac"] == pytest.approx(0.03 / 0.05)
+    # 3 dispatches over 8 logical steps / 16 batch tokens
+    assert s["dispatches_per_step"] == pytest.approx(3 / 8)
+    assert s["dispatches_per_token"] == pytest.approx(3 / 16)
+    assert s["syncs_per_token"] == pytest.approx(3 / 16)
+    c = m.counters()
+    assert c["megasteps"] == 2
+    assert c["megastep_logical_steps"] == [4, 4]
+    assert c["decode_dispatches"] == 3 and c["decode_replays"] == 1
+    # the deterministic counters slice holds counts only — never seconds
+    assert not any("_s" == k[-2:] for k in c)
+
+
 def test_metrics_new_counters_and_json_roundtrip():
     import json
 
