@@ -125,7 +125,8 @@ def _horizon_leg_summary(h: int, m: Dict) -> Dict:
 
 def horizon_sweep(cfg, params, horizons: Sequence[int], *,
                   n_requests: int = 4, slots: int = 4, max_new: int = 49,
-                  label: str = "fp", check_equal: bool = True):
+                  label: str = "fp", check_equal: bool = True,
+                  trace_dir: Optional[str] = None):
     """Serve one decode-heavy trace per horizon; assert bit-identical
     greedy outputs across legs (the fusion invariant) and return
     ``(csv_rows, json_legs)``.
@@ -135,8 +136,12 @@ def horizon_sweep(cfg, params, horizons: Sequence[int], *,
     slot from step 0 with equal ``max_new`` (no ragged tail, no
     mid-flight churn), and ``max_new`` leans long so decode — the regime
     the megastep amortizes — dominates the timing.
+
+    ``trace_dir`` enables full-level span tracing and writes one
+    Perfetto-viewable artifact pair per leg
+    (``BENCH_serving_{label}_h{H}.trace.json`` + ``.trace.jsonl``).
     """
-    from repro.serving import ServingMetrics
+    from repro.serving import ExpertRoutingTelemetry, ServingMetrics
 
     rng = np.random.default_rng(17)
     prompts = [
@@ -151,11 +156,15 @@ def horizon_sweep(cfg, params, horizons: Sequence[int], *,
             cfg, params,
             EngineConfig(max_slots=slots, block_size=BLOCK_SIZE,
                          num_blocks=slots * mb, max_blocks_per_slot=mb,
-                         prefill_chunk=BLOCK_SIZE, decode_horizon=int(h)),
+                         prefill_chunk=BLOCK_SIZE, decode_horizon=int(h),
+                         trace_level="full" if trace_dir else "off"),
         )
         # compile prefill + the H-step megastep outside the timed window
         engine.serve([Request(rid=-1, prompt=warm, max_new=max(h + 1, 2))])
         engine.metrics = ServingMetrics()
+        engine.tracer.reset()
+        if engine.routing is not None:
+            engine.routing = ExpertRoutingTelemetry()
         outs[h] = engine.serve([
             Request(rid=i, prompt=prompts[i], max_new=max_new)
             for i in range(n_requests)
@@ -163,6 +172,17 @@ def horizon_sweep(cfg, params, horizons: Sequence[int], *,
         m = engine.metrics.summary()
         leg = dict(_horizon_leg_summary(int(h), m), label=label)
         legs.append(leg)
+        if trace_dir:
+            os.makedirs(trace_dir, exist_ok=True)
+            base = os.path.join(trace_dir, f"BENCH_serving_{label}_h{h}")
+            report = engine.routing_report()
+            engine.tracer.write_chrome(
+                base + ".trace.json",
+                extra={"routing_report": report} if report else None,
+            )
+            engine.tracer.write_jsonl(base + ".trace.jsonl")
+            print(f"  trace: {len(engine.tracer.events)} events → "
+                  f"{base}.trace.json (+ .trace.jsonl)")
         rows.append(csv_row(
             f"serving/{label}_h{h}",
             m["decode_step_mean_s"] * 1e6,
@@ -215,9 +235,14 @@ def smoke() -> List[str]:
     for attempt in (1, 2):
         rows, legs = horizon_sweep(
             cfg, params, (1, 8), n_requests=2, slots=2, max_new=33,
-            label="smoke", check_equal=True,
+            label="smoke", check_equal=True, trace_dir="results",
         )
         by_h = {l["horizon"]: l for l in legs}
+        # ratio fields are None only for empty runs — these legs must
+        # have generated tokens (the satellite's distinguishability fix)
+        for h in (1, 8):
+            assert by_h[h]["tokens_per_s"] is not None, f"H={h} leg empty"
+            assert by_h[h]["dispatches_per_step"] is not None
         # deterministic amortization proof — never retried
         assert by_h[1]["dispatches_per_step"] == 1.0
         assert by_h[8]["dispatches_per_step"] <= 1 / 8 + 0.1, (
@@ -409,6 +434,7 @@ def run(quick: bool = False, ffn_backend: Optional[str] = None):
     hrows, legs = horizon_sweep(
         cfg, params, hs, n_requests=2 if quick else 4,
         slots=2 if quick else 4, max_new=17 if quick else 49, label="fp",
+        trace_dir="results",
     )
     rows += hrows
     _write_bench_json(
@@ -463,7 +489,8 @@ def main() -> None:
         return
     if args.horizons is not None:
         cfg, params = trained_model()
-        _, legs = horizon_sweep(cfg, params, args.horizons)
+        _, legs = horizon_sweep(cfg, params, args.horizons,
+                                trace_dir="results")
         _write_bench_json(
             legs,
             "fp legs over the trained bench MoE (decode-heavy trace); "

@@ -20,7 +20,12 @@ The default path is :class:`repro.serving.engine.PagedServingEngine`:
   prefetches the hot set, misses upload synchronously and replay
   (:mod:`repro.serving.offload`),
 * TTFT / per-token latency / queue depth / expert-activation metrics
-  (:mod:`repro.serving.metrics`).
+  (:mod:`repro.serving.metrics`),
+* request-lifecycle tracing (``--trace-out trace.json`` writes a
+  Perfetto-viewable Chrome trace + JSONL event log; ``--trace-level``
+  picks the detail) and expert-routing telemetry incl. the
+  bit-misallocation report (:mod:`repro.serving.trace`,
+  docs/observability.md).
 
 :class:`BatchedServer` is the legacy static *wave* batcher kept for
 comparison (``--legacy``): it pads every wave with dummy requests and
@@ -201,7 +206,22 @@ def main() -> None:
                         "megastep, so runs replay deterministically")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
+    p.add_argument("--trace-out", type=str, default=None, metavar="PATH",
+                   help="write a Chrome trace-event JSON (open in "
+                        "ui.perfetto.dev) to PATH and the raw event log "
+                        "to PATH + '.jsonl' after serving")
+    p.add_argument("--trace-level", choices=["off", "spans", "full"],
+                   default=None,
+                   help="span tracing detail (default: 'full' when "
+                        "--trace-out is given, else 'off'); lifecycle "
+                        "metrics are identical at every level")
     args = p.parse_args()
+    if args.legacy and (args.trace_out or args.trace_level not in (None, "off")):
+        # the wave batcher predates the tracer — refuse rather than
+        # silently emit an empty trace
+        raise SystemExit("--trace-out/--trace-level require the paged "
+                         "engine (drop --legacy)")
+    trace_level = args.trace_level or ("full" if args.trace_out else "off")
     if args.ffn_backend:
         # process default too, so the --legacy wave batcher (no engine
         # config, plain decode_step) honors the same A/B knob
@@ -250,6 +270,7 @@ def main() -> None:
             ffn_backend=args.ffn_backend,
             temperature=args.temperature,
             sample_seed=args.sample_seed,
+            trace_level=trace_level,
             **({"decode_horizon": args.decode_horizon}
                if args.decode_horizon is not None else {}),
         ),
@@ -281,6 +302,24 @@ def main() -> None:
             f"({m['expert_upload_bytes']} B), "
             f"{engine.offload.grows} budget grows"
         )
+    report = engine.routing_report()
+    if report is not None:
+        corr = report["mean_freq_bits_corr"]
+        hot = sum(len(l["hot_low_bit"]) for l in report["layers"])
+        cold = sum(len(l["cold_high_bit"]) for l in report["layers"])
+        print(
+            f"routing telemetry: {report['steps']} steps over "
+            f"{report['num_layers']}×{report['num_slots']} (layer, slot) "
+            f"cells; freq↔bits corr "
+            f"{'n/a' if corr is None else f'{corr:+.2f}'}, "
+            f"{hot} hot-low-bit + {cold} cold-high-bit candidates"
+        )
+    if args.trace_out:
+        extra = {"routing_report": report} if report is not None else None
+        engine.tracer.write_chrome(args.trace_out, extra=extra)
+        engine.tracer.write_jsonl(args.trace_out + ".jsonl")
+        print(f"trace: {len(engine.tracer.events)} events → "
+              f"{args.trace_out} (+ .jsonl); open in https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

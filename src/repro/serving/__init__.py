@@ -25,23 +25,41 @@ The production serving substrate around the MC# compressed model path
 * :mod:`repro.serving.offload` — host-offloaded PMQ expert buckets:
   cold quantized-expert rows live in host memory and a router-stats EMA
   prefetches the hot set onto the device (budget-shaped resident
-  partitions; misses upload synchronously and replay the step).
+  partitions; misses upload synchronously and replay the step),
+* :mod:`repro.serving.trace` — request-lifecycle span tracer (Chrome
+  trace-event / Perfetto export + deterministic JSONL whose wall-clock-
+  free projection is bit-identical across replays) and expert-routing
+  telemetry: per-(layer, slot) dispatch histograms, EMA-drift and Gini
+  load gauges, and the bit-misallocation report joining observed routing
+  frequency against the PMQ bit assignment (see docs/observability.md).
 """
 from .engine import EngineConfig, PagedServingEngine
 from .kvcache import BlockAllocator, PagedKVCache, PoolExhausted, SwappedKV
 from .metrics import ServingMetrics
 from .offload import ExpertOffloadManager
 from .scheduler import Request, Scheduler
+from .trace import (
+    ExpertRoutingTelemetry,
+    MetricsConsumer,
+    SpanTracer,
+    validate_chrome_trace,
+    validate_events,
+)
 
 __all__ = [
     "BlockAllocator",
     "EngineConfig",
     "ExpertOffloadManager",
+    "ExpertRoutingTelemetry",
+    "MetricsConsumer",
     "PagedKVCache",
     "PagedServingEngine",
     "PoolExhausted",
     "Request",
     "Scheduler",
     "ServingMetrics",
+    "SpanTracer",
     "SwappedKV",
+    "validate_chrome_trace",
+    "validate_events",
 ]

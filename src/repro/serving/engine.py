@@ -96,6 +96,7 @@ from ..models import transformer as tf
 from .kvcache import PagedKVCache, PoolExhausted
 from .metrics import ServingMetrics
 from .scheduler import Request, Scheduler
+from .trace import ExpertRoutingTelemetry, MetricsConsumer, SpanTracer
 
 __all__ = ["EngineConfig", "PagedServingEngine", "dense_greedy_reference"]
 
@@ -181,6 +182,14 @@ class EngineConfig:
     # from sample_seed so runs (and offload replays) are deterministic.
     temperature: float = 0.0
     sample_seed: int = 0
+    # Request-lifecycle tracing (repro.serving.trace): "off" records no
+    # events (lifecycle facts still reach the metrics consumer, so
+    # counters() are invariant to this knob), "spans" records
+    # span/instant/flow events, "full" adds per-step gauges + the
+    # expert-routing telemetry. Host-side only — never traced into jit.
+    trace_level: str = dataclasses.field(
+        default_factory=lambda: os.environ.get("REPRO_TRACE_LEVEL", "off")
+    )
 
 
 @functools.lru_cache(maxsize=None)
@@ -251,6 +260,16 @@ class PagedServingEngine:
                 f"temperature must be ≥ 0, got {self.ecfg.temperature}"
             )
         cfg = self.model_cfg
+        # metrics + tracer come first: every downstream component
+        # (offload, cache, scheduler) records through the tracer, and the
+        # metrics consume its lifecycle stream. The consumer holds a
+        # *getter* so callers that reset ``engine.metrics`` (benchmark
+        # warmups) keep feeding the live instance.
+        self.metrics = ServingMetrics()
+        self.tracer = SpanTracer(
+            self.ecfg.trace_level,
+            consumers=(MetricsConsumer(lambda: self.metrics),),
+        )
         self.offload = None
         if self.ecfg.resident_experts is not None:
             blocks = params.get("blocks") if isinstance(params, dict) else None
@@ -265,6 +284,7 @@ class PagedServingEngine:
                 blocks["moe_ce"],
                 resident_slots=self.ecfg.resident_experts,
                 ema_decay=self.ecfg.prefetch_ema,
+                tracer=self.tracer,
             )
             params = dict(params, blocks=dict(blocks, moe_ce=self.offload.ce))
         self.params = params
@@ -275,11 +295,11 @@ class PagedServingEngine:
             max_slots=self.ecfg.max_slots,
             max_blocks_per_slot=self.ecfg.max_blocks_per_slot,
         )
+        self.cache.tracer = self.tracer
         self.scheduler = Scheduler(
             self.cache, reserve_full=self.ecfg.reserve_full,
-            horizon=self.ecfg.decode_horizon,
+            horizon=self.ecfg.decode_horizon, tracer=self.tracer,
         )
-        self.metrics = ServingMetrics()
         self.results: Dict[int, List[int]] = {}
         self._step_idx = 0  # logical decode steps completed
         self._megastep_idx = 0  # fused megasteps run (sampling-key index)
@@ -297,10 +317,34 @@ class PagedServingEngine:
             blocks["moe_ce"].num_slots
             if isinstance(blocks, dict) and "moe_ce" in blocks else None
         )
+        # expert-routing telemetry: per-(layer, slot) dispatch histograms
+        # + drift/Gini gauges + the bit-misallocation report, fed from
+        # the slot_counts every jitted program already reports. PMQ trees
+        # only (slot_counts has trailing dim 0 otherwise), and only when
+        # tracing is on — disabled tracing must cost nothing.
+        self._ce_meta = (
+            blocks["moe_ce"].meta
+            if isinstance(blocks, dict) and "moe_ce" in blocks else None
+        )
+        self.routing = (
+            ExpertRoutingTelemetry()
+            if self.tracer.enabled and self._num_slots else None
+        )
         self._decode, self._prefill = _jitted_steps(
             self.model_cfg, self.ecfg.use_otp, self.ecfg.ffn_backend,
             self.ecfg.decode_horizon, float(self.ecfg.temperature),
         )
+
+    # ----------------------------------------------------- observability
+    def routing_report(self) -> Optional[Dict]:
+        """Bit-misallocation report: observed per-(layer, expert-slot)
+        dispatch frequency joined against the PMQ bit assignment (see
+        :meth:`repro.serving.trace.ExpertRoutingTelemetry
+        .bit_misallocation_report`). ``None`` unless the model is
+        PMQ-compressed and tracing collected routing traffic."""
+        if self.routing is None or self._ce_meta is None:
+            return None
+        return self.routing.bit_misallocation_report(self._ce_meta)
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -361,13 +405,20 @@ class PagedServingEngine:
             req = self.scheduler.try_admit(self._step_idx)
             if req is None:
                 return
-            self.metrics.record_admission(
-                req.rid, req.slot, self._step_idx, active_before,
-                depth_before, resumed=req.preempt_count > 0,
+            track = f"slot{req.slot}"
+            # lifecycle events feed the metrics consumer *and* (when
+            # tracing is on) the event log; the flow hop stitches the
+            # request's journey from the queue track onto its slot track
+            self.tracer.lifecycle(
+                "admit", track=track, rid=req.rid, slot=req.slot,
+                step=self._step_idx, active_before=active_before,
+                queue_depth=depth_before, resumed=req.preempt_count > 0,
             )
+            self.tracer.flow("t", req.rid, track=track)
             if req.swapped is not None:  # swap-restore a preempted slot
-                self.metrics.record_swap_in(
-                    self.cache.swap_in(req.slot, req.swapped)
+                self.tracer.lifecycle(
+                    "swap_in", track=track, rid=req.rid, slot=req.slot,
+                    nbytes=self.cache.swap_in(req.slot, req.swapped),
                 )
                 req.swapped = None
             elif req.pos > 0:  # recompute-restore: re-prefill the context
@@ -379,8 +430,13 @@ class PagedServingEngine:
                 self.metrics.record_ttft(now - req.arrival_s, now - t0)
                 self.results[req.rid] = req.out
             if req.done:  # max_new == 1: first token is the only token
-                self.scheduler.finish(req.slot)
-                self.metrics.record_release(req.rid, req.slot, self._step_idx)
+                slot = req.slot
+                self.scheduler.finish(slot)
+                self.tracer.lifecycle(
+                    "release", track=track, rid=req.rid, slot=slot,
+                    step=self._step_idx,
+                )
+                self.tracer.flow("f", req.rid, track=track)
 
     def _prefill_request(self, req: Request, resume: bool = False) -> None:
         """Stream a context through chunked prefill into the slot's pages.
@@ -400,6 +456,7 @@ class PagedServingEngine:
             seq = req.prompt
         p_len = len(seq)
         c = self.ecfg.prefill_chunk
+        track = f"slot{req.slot}"
         table_row = jnp.asarray(self.cache.block_tables[req.slot : req.slot + 1])
         logits = None
         for off in range(0, p_len, c):
@@ -407,8 +464,17 @@ class PagedServingEngine:
             chunk = np.zeros((1, c), np.int32)
             chunk[0, :n] = seq[off : off + n]
             args = (jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row)
-            logits, counts = self._run_offloaded(self._prefill, args)
+            t0 = self.tracer.now_us()
+            logits, counts = self._run_offloaded(
+                self._prefill, args, kind="prefill", track=track
+            )
             self.metrics.record_prefill_runs(self._last_run_stats["runs"])
+            self.tracer.complete(
+                "prefill_chunk", track=track, cat="prefill", start_us=t0,
+                args={"rid": req.rid, "offset": off, "tokens": n,
+                      "resume": resume,
+                      "runs": int(self._last_run_stats["runs"])},
+            )
             self._record_capacity_util(counts, c)
         if resume:
             return
@@ -425,9 +491,13 @@ class PagedServingEngine:
             tok = int(np.argmax(last))
         req.out.append(tok)
         req.pos = p_len
+        self.tracer.instant(
+            "first_token", track=track, cat="prefill", rid=req.rid, token=tok
+        )
 
     # --------------------------------------------------- expert residency
-    def _run_offloaded(self, program, args):
+    def _run_offloaded(self, program, args, kind: str = "decode",
+                       track: str = "engine"):
         """Run one jitted program (prefill chunk or decode megastep)
         under the expert-residency contract: re-run after a synchronous
         upload until every expert the program actually dispatched to was
@@ -452,6 +522,7 @@ class PagedServingEngine:
         offload_s = 0.0
         while True:
             t0 = time.time()
+            t0_us = self.tracer.now_us()
             out = program(self.params, self.cache.k, self.cache.v, *args)
             self.cache.k, self.cache.v = out[0], out[1]
             payload = out[2:-1]
@@ -462,6 +533,12 @@ class PagedServingEngine:
             counts = np.asarray(out[-1])
             runs += 1
             dt = time.time() - t0
+            # run 1 is the program's real math; every later run is a
+            # miss replay — the compute-vs-offload split, visible per run
+            self.tracer.complete(
+                "compute" if runs == 1 else "replay", track=track,
+                cat=kind, start_us=t0_us, args={"run": runs},
+            )
             if runs == 1:
                 compute_s = dt
             else:
@@ -510,6 +587,10 @@ class PagedServingEngine:
         self.metrics.record_capacity_utilization(
             float(occupied) / float(denom)
         )
+        if self.routing is not None:
+            gauges = self.routing.update(counts)
+            if gauges:
+                self.tracer.counter("routing", track="engine", **gauges)
 
     def _prefetch_experts(self) -> None:
         """Upload the EMA-hottest experts ahead of the next decode step —
@@ -553,10 +634,13 @@ class PagedServingEngine:
             ):
                 vslot = self.scheduler.pick_victim()
                 vreq = self.scheduler.preempt(vslot, swap=swap)
-                self.metrics.record_preemption(
-                    vreq.rid, vslot, self._step_idx, self.ecfg.preempt_mode,
+                vtrack = f"slot{vslot}"
+                self.tracer.lifecycle(
+                    "preempt", track=vtrack, rid=vreq.rid, slot=vslot,
+                    step=self._step_idx, mode=self.ecfg.preempt_mode,
                     swap_bytes=vreq.swapped.nbytes if vreq.swapped else 0,
                 )
+                self.tracer.flow("t", vreq.rid, track=vtrack)
             if slot in self.scheduler.active:
                 self.cache.grow(slot, need)
 
@@ -587,6 +671,7 @@ class PagedServingEngine:
         if self.ecfg.temperature > 0.0:
             key = jax.random.fold_in(self._sample_key, self._megastep_idx)
         t0 = time.time()
+        t0_us = self.tracer.now_us()
         toks, emits, acts, counts = self._run_offloaded(
             self._decode,
             (jnp.asarray(tokens), jnp.asarray(positions),
@@ -605,6 +690,26 @@ class PagedServingEngine:
         self.metrics.record_megastep(
             steps_run, stats["compute_s"], stats["offload_s"],
             stats["runs"], stats["runs"],
+        )
+        # the megastep span (engine track) plus one decode span per
+        # active slot, all sharing the megastep's extent — the per-slot
+        # view shows who actually emitted inside the fused program
+        self.tracer.complete(
+            "megastep", track="engine", cat="decode", start_us=t0_us,
+            args={"megastep": self._megastep_idx, "horizon": h,
+                  "active": int(active.sum()), "steps": steps_run,
+                  "runs": int(stats["runs"])},
+        )
+        for slot, req in self.scheduler.active.items():
+            self.tracer.complete(
+                "decode", track=f"slot{slot}", cat="decode", start_us=t0_us,
+                args={"rid": req.rid, "tokens": int(emits[:, slot].sum())},
+            )
+        self.tracer.counter(
+            "pool", track="engine",
+            page_util=self.cache.utilization,
+            queue_depth=self.scheduler.queue_depth,
+            active=int(active.sum()),
         )
         per_step_s = dt / max(steps_run, 1)
         for s in emitting:
@@ -627,8 +732,11 @@ class PagedServingEngine:
                     last_s = s
             if req.done:
                 self.scheduler.finish(slot)
-                self.metrics.record_release(
-                    req.rid, slot, self._step_idx + last_s
+                track = f"slot{slot}"
+                self.tracer.lifecycle(
+                    "release", track=track, rid=req.rid, slot=slot,
+                    step=self._step_idx + last_s,
                 )
+                self.tracer.flow("f", req.rid, track=track)
         self._step_idx += steps_run
         self._megastep_idx += 1

@@ -147,6 +147,15 @@ class PagedKVCache:
     # device copy of block_tables, rebuilt only after admission/release —
     # the per-token decode loop must not pay a host→device upload
     _tables_device: object = None
+    # span tracer (repro.serving.trace.SpanTracer); the engine installs
+    # its own, standalone caches keep the shared no-op singleton
+    tracer: object = None
+
+    def __post_init__(self):
+        if self.tracer is None:
+            from .trace import NULL_TRACER
+
+            self.tracer = NULL_TRACER
 
     @classmethod
     def create(
@@ -239,6 +248,11 @@ class PagedKVCache:
         self.slot_blocks[slot].extend(blocks)
         self.block_tables[slot, have : have + len(blocks)] = blocks
         self._tables_device = None
+        self.tracer.instant(
+            "page_grow", track="pool", cat="kv", slot=slot, pages=len(blocks),
+            slot_pages=len(self.slot_blocks[slot]),
+            free=self.allocator.num_free,
+        )
         return blocks
 
     # ------------------------------------------------------------- swap
@@ -251,12 +265,18 @@ class PagedKVCache:
         """
         blocks = self.slot_blocks[slot]
         idx = np.asarray(blocks, np.int32)
+        t0 = self.tracer.now_us()
         swapped = SwappedKV(
             k=np.asarray(self.k[:, idx]),
             v=np.asarray(self.v[:, idx]),
             n_tokens=n_tokens,
         )
         self.release_slot(slot)
+        self.tracer.complete(
+            "kv_swap_out", track="pool", cat="kv", start_us=t0,
+            args={"slot": slot, "pages": swapped.n_pages,
+                  "bytes": swapped.nbytes},
+        )
         return swapped
 
     def swap_in(self, slot: int, swapped: SwappedKV) -> int:
@@ -273,8 +293,14 @@ class PagedKVCache:
                 f"swap-in needs {swapped.n_pages}"
             )
         idx = jnp.asarray(np.asarray(blocks, np.int32))
+        t0 = self.tracer.now_us()
         self.k = self.k.at[:, idx].set(jnp.asarray(swapped.k, self.k.dtype))
         self.v = self.v.at[:, idx].set(jnp.asarray(swapped.v, self.v.dtype))
+        self.tracer.complete(
+            "kv_swap_in", track="pool", cat="kv", start_us=t0,
+            args={"slot": slot, "pages": swapped.n_pages,
+                  "bytes": swapped.nbytes},
+        )
         return swapped.nbytes
 
     def release_slot(self, slot: int) -> None:

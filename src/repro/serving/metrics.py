@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -119,13 +119,17 @@ class ServingMetrics:
 
     def record_decode_step(
         self, seconds: float, n_active: int, expert_activation: float,
-        queue_depth: int, page_utilization: float = 0.0,
+        queue_depth: int, page_utilization: Optional[float] = None,
     ) -> None:
+        """``page_utilization=None`` means the caller has no pool gauge —
+        the sample is skipped, not recorded as a real 0.0 (which would
+        drag ``page_util_mean`` down)."""
         self.decode_step_s.append(seconds)
         self.active_per_step.append(n_active)
         self.expert_activation.append(expert_activation)
         self.queue_depth.append(queue_depth)
-        self.page_utilization.append(page_utilization)
+        if page_utilization is not None:
+            self.page_utilization.append(page_utilization)
 
     def record_megastep(
         self, logical_steps: int, compute_s: float, offload_s: float,
@@ -267,8 +271,12 @@ class ServingMetrics:
             "decode_step_mean_s": _mean(self.decode_step_s),
             "decode_step_p95_s": _p95(self.decode_step_s),
             # only *active* slots count as generated tokens — no dummy
-            # padding inflates throughput here
-            "tokens_per_s": gen_tokens / total_decode if total_decode else 0.0,
+            # padding inflates throughput here; an empty run reports None
+            # (distinguishable from an infinitely-amortized one)
+            "tokens_per_s": (
+                gen_tokens / total_decode
+                if gen_tokens and total_decode else None
+            ),
             "generated_tokens": gen_tokens,
             "queue_depth_mean": _mean(self.queue_depth),
             "queue_depth_max": float(max(self.queue_depth)) if self.queue_depth else 0.0,
@@ -309,12 +317,13 @@ class ServingMetrics:
             "prefill_dispatches": int(self.prefill_dispatches),
             "prefill_replays": int(self.prefill_replays),
             # the horizon's deterministic win: jitted dispatches and host
-            # syncs per generated token drop from ~1 toward ~1/H
+            # syncs per generated token drop from ~1 toward ~1/H; None
+            # when nothing was generated (0.0 would read as free)
             "dispatches_per_token": (
-                self.decode_dispatches / gen_tokens if gen_tokens else 0.0
+                self.decode_dispatches / gen_tokens if gen_tokens else None
             ),
             "syncs_per_token": (
-                self.decode_host_syncs / gen_tokens if gen_tokens else 0.0
+                self.decode_host_syncs / gen_tokens if gen_tokens else None
             ),
             # ... and per *logical decode step* from exactly 1 toward 1/H
             # (per-token folds in batch width; per-step isolates the
@@ -322,9 +331,18 @@ class ServingMetrics:
             "dispatches_per_step": (
                 self.decode_dispatches
                 / max(int(np.sum(self.megastep_logical_steps)), 1)
-                if self.megastep_logical_steps else 0.0
+                if self.megastep_logical_steps else None
             ),
         }
 
-    def to_json(self) -> str:
+    def to_json(self, include_counters: bool = False) -> str:
+        """Summary as JSON; ``include_counters=True`` nests the
+        wall-clock-free :meth:`counters` slice alongside it under
+        ``{"summary": …, "counters": …}`` so the deterministic data is
+        serializable too (the default shape is unchanged)."""
+        if include_counters:
+            return json.dumps(
+                {"summary": self.summary(), "counters": self.counters()},
+                sort_keys=True,
+            )
         return json.dumps(self.summary(), sort_keys=True)

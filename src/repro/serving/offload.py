@@ -69,9 +69,14 @@ class ExpertOffloadManager:
     """
 
     def __init__(self, ce: CompressedExperts, *, resident_slots: int,
-                 ema_decay: float = 0.8):
+                 ema_decay: float = 0.8, tracer=None):
         if ce.resident_map is not None:
             raise ValueError("CompressedExperts is already host-offloaded")
+        if tracer is None:
+            from .trace import NULL_TRACER
+
+            tracer = NULL_TRACER
+        self.tracer = tracer
         self.meta = ce.meta
         self.num_slots = ce.num_slots
         self.ema_decay = float(ema_decay)
@@ -228,6 +233,10 @@ class ExpertOffloadManager:
         self._budgets[i] = new_r
         self.ce.resident_rows = tuple(self._budgets)
         self.grows += 1
+        self.tracer.instant(
+            "expert_budget_grow", track="experts", cat="offload",
+            bucket=i, rows_before=old, rows_after=new_r,
+        )
 
     def _place(self, i: int, layer: int, want, protected, score_fn):
         """Install bucket-local slots ``want`` into bucket ``i``'s rows of
@@ -307,6 +316,7 @@ class ExpertOffloadManager:
         layer_of = np.arange(rows.shape[0]) % self.num_layers
         if not np.any((rows > 0) & ~resident[layer_of]):
             return 0, 0
+        t0 = self.tracer.now_us()
         ups = 0
         nbytes = 0
         pending = {bk: [] for bk in self._bkeys}
@@ -338,6 +348,11 @@ class ExpertOffloadManager:
             if pending[bk]:
                 nbytes += self._upload_batch(bk, pending[bk])
                 self._refresh_map(bk)
+        if ups:
+            self.tracer.complete(
+                "expert_upload", track="experts", cat="offload", start_us=t0,
+                args={"kind": "miss", "uploads": ups, "bytes": nbytes},
+            )
         return ups, nbytes
 
     def update_stats(self, counts: np.ndarray) -> None:
@@ -360,6 +375,7 @@ class ExpertOffloadManager:
         asc) keeps the selection deterministic and churn-free on ties.
         Returns ``(uploads, bytes)``.
         """
+        t0 = self.tracer.now_us()
         ups = 0
         nbytes = 0
         pending = {bk: [] for bk in self._bkeys}
@@ -386,4 +402,9 @@ class ExpertOffloadManager:
             if pending[bk]:
                 nbytes += self._upload_batch(bk, pending[bk])
                 self._refresh_map(bk)
+        if ups:
+            self.tracer.complete(
+                "expert_upload", track="experts", cat="offload", start_us=t0,
+                args={"kind": "prefetch", "uploads": ups, "bytes": nbytes},
+            )
         return ups, nbytes

@@ -88,12 +88,17 @@ class Scheduler:
     page reservations cover every KV write of the coming megastep)."""
 
     def __init__(self, cache: PagedKVCache, *, reserve_full: bool = False,
-                 horizon: int = 1):
+                 horizon: int = 1, tracer=None):
         if horizon < 1:
             raise ValueError(f"horizon must be ≥ 1, got {horizon}")
+        if tracer is None:
+            from .trace import NULL_TRACER
+
+            tracer = NULL_TRACER
         self.cache = cache
         self.reserve_full = reserve_full
         self.horizon = horizon
+        self.tracer = tracer
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self._admit_seq = 0
@@ -121,6 +126,14 @@ class Scheduler:
             )
         req.submit_step = step_idx
         self.waiting.append(req)
+        # flow origin: the request's journey starts on the queue track and
+        # is stitched to its slot tracks via per-request flow ids
+        self.tracer.instant(
+            "enqueue", track="queue", cat="lifecycle", rid=req.rid,
+            step=step_idx, prompt_tokens=len(req.prompt),
+            max_new=req.max_new, queue_depth=len(self.waiting),
+        )
+        self.tracer.flow("s", req.rid, track="queue")
 
     def growth_reserve(self) -> int:
         """Pages the current actives need for their next megastep's KV

@@ -761,3 +761,48 @@ def test_metrics_new_counters_and_json_roundtrip():
     m2.record_preemption(1, 1, 0, "recompute", swap_bytes=0)
     assert m2.summary()["swap_bytes"] == 0
     assert m2.counters()["preemptions"][0]["mode"] == "recompute"
+
+
+def test_metrics_decode_step_without_page_utilization():
+    from repro.serving import ServingMetrics
+
+    m = ServingMetrics()
+    # callers with no pool attached omit the gauge entirely — no sample
+    # recorded, not a fake 0.0 dragging the mean down
+    m.record_decode_step(0.01, 2, 1.0, 0)
+    m.record_decode_step(0.01, 2, 1.0, 0, page_utilization=None)
+    assert m.page_utilization == []
+    m.record_decode_step(0.01, 2, 1.0, 0, page_utilization=0.5)
+    assert m.page_utilization == [0.5]
+    assert m.summary()["page_util_mean"] == pytest.approx(0.5)
+
+
+def test_metrics_empty_summary_ratios_are_none():
+    from repro.serving import ServingMetrics
+
+    s = ServingMetrics().summary()
+    # no generated tokens / no megasteps → undefined ratios stay None
+    # instead of dividing by zero or reporting a misleading 0.0
+    assert s["tokens_per_s"] is None
+    assert s["dispatches_per_token"] is None
+    assert s["syncs_per_token"] is None
+    assert s["dispatches_per_step"] is None
+    assert s["requests"] == 0  # plain counts still report zeros
+
+
+def test_metrics_to_json_include_counters():
+    import json
+
+    from repro.serving import ServingMetrics
+
+    m = ServingMetrics()
+    m.record_admission(0, 0, 0, 0, 1)
+    m.record_decode_step(0.01, 1, 1.0, 0, page_utilization=0.25)
+    m.record_release(0, 0, 3)
+    # default shape is unchanged: the flat summary dict
+    assert json.loads(m.to_json()) == json.loads(json.dumps(m.summary()))
+    doc = json.loads(m.to_json(include_counters=True))
+    assert set(doc) == {"summary", "counters"}
+    assert doc["summary"] == json.loads(json.dumps(m.summary()))
+    assert doc["counters"] == json.loads(json.dumps(m.counters()))
+    assert doc["counters"]["slot_releases"] == [{"rid": 0, "slot": 0, "step": 3}]

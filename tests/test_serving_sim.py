@@ -149,9 +149,11 @@ def check_invariants(engine: PagedServingEngine) -> None:
             assert req.swapped.n_tokens == req.pos
 
 
-def run_trace(cfg, params, trace: Trace):
+def run_trace(cfg, params, trace: Trace, **ecfg_kw):
     """Drive the engine step-by-step, interleaving arrivals, checking
-    invariants throughout. Returns the finished engine."""
+    invariants throughout. Returns the finished engine. ``ecfg_kw``
+    passes extra :class:`EngineConfig` fields through (e.g.
+    ``trace_level`` for the span-tracer determinism tests)."""
     mb = -(-(max(p + m for p, m in zip(trace.prompt_lens, trace.max_news)))
            // BLOCK)
     engine = PagedServingEngine(
@@ -164,6 +166,7 @@ def run_trace(cfg, params, trace: Trace):
             prefill_chunk=BLOCK,
             preempt_mode=trace.preempt_mode,
             decode_horizon=trace.horizon,
+            **ecfg_kw,
         ),
     )
     pending = sorted(
