@@ -40,9 +40,24 @@ serving perf trajectory accumulates per PR:
 
     PYTHONPATH=src python -m benchmarks.serving_latency --horizons 1 8
 
+The ``--prefix-share`` sweep serves traces whose prompts share a
+leading template (0%..100% of the prompt) with the shared-prefix KV
+cache off vs on, asserting bit-identical outputs and reporting prefix
+hits / prompt tokens served from shared pages / prefill dispatches.
+``--kv-bits`` holds the KV pool's device bytes fixed and compares fp
+pools against int8-quantized pools (uint8 codes + per-row f32 scale
+tables): the int8 leg gets ``4·dh/(dh+8)`` ≈ 2.67× the KV tokens at
+``dh=16`` over f32 pools:
+
+    PYTHONPATH=src python -m benchmarks.serving_latency --prefix-share 0 0.5 1
+    PYTHONPATH=src python -m benchmarks.serving_latency --kv-bits
+
 ``--smoke`` is the CI leg: a tiny random MoE (no training), H=1 vs H=8,
-asserts greedy-output equivalence + dispatch amortization, and still
-writes ``results/BENCH_serving.json``.
+asserts greedy-output equivalence + dispatch amortization, plus the
+shared-prefix gate (a verbatim-repeat trace dispatches ZERO prefill
+programs after its first request) and the int8-KV capacity gate (≥2×
+KV tokens in the fp pool's bytes, batch outputs equal to the isolated
+quantized oracle), and still writes ``results/BENCH_serving.json``.
 
 The compressed engine serves the *stacked* compressed tree: the PMQ plan
 is made layer-uniform (every layer gets layer 0's bit vector) so all
@@ -261,6 +276,56 @@ def smoke() -> List[str]:
                 f"H=1 {by_h[1]['tokens_per_s']:.1f} tok/s, twice) — "
                 "dispatch amortization held; timing likely noisy"
             )
+
+    print("== serving_latency --smoke (shared-prefix KV reuse) ==")
+    max_new = 9
+    mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    eng = PagedServingEngine(
+        cfg, params,
+        EngineConfig(max_slots=2, block_size=BLOCK_SIZE,
+                     num_blocks=4 * mb, max_blocks_per_slot=mb,
+                     prefill_chunk=BLOCK_SIZE, decode_horizon=1,
+                     prefix_cache=True),
+    )
+    rngp = np.random.default_rng(11)
+    prompt = rngp.integers(0, cfg.vocab_size, size=PROMPT_LEN).astype(np.int32)
+    first = eng.serve([Request(rid=0, prompt=prompt, max_new=max_new)])
+    disp0 = eng.metrics.summary()["prefill_dispatches"]
+    rest = eng.serve([
+        Request(rid=i, prompt=prompt.copy(), max_new=max_new)
+        for i in (1, 2, 3)
+    ])
+    mp = eng.metrics.summary()
+    # the gating claim of the prefix cache: a 100%-shared trace runs
+    # ZERO additional prefill programs after the first request
+    assert mp["prefill_dispatches"] == disp0, (
+        f"verbatim-repeat trace dispatched prefill: "
+        f"{mp['prefill_dispatches']} vs {disp0} after the first request"
+    )
+    assert mp["prefix_full_hits"] == 3, mp["prefix_full_hits"]
+    assert rest == {i: first[0] for i in (1, 2, 3)}, (
+        "shared-prefix outputs diverged"
+    )
+    legs.append({
+        "label": "smoke_prefix",
+        "prefix_full_hits": mp["prefix_full_hits"],
+        "prefix_tokens_saved": mp["prefix_tokens_saved"],
+        "prefill_dispatches": mp["prefill_dispatches"],
+    })
+    print("  prefix OK: 3 verbatim repeats → 0 extra prefill dispatches, "
+          f"{mp['prefix_tokens_saved']} prompt tokens served from cache")
+
+    print("== serving_latency --smoke (int8 KV at fixed pool bytes) ==")
+    krows, ratio, kleg = kv_bits_leg(cfg, params, label="smoke",
+                                     check_oracle=True)
+    rows += krows
+    legs.append(kleg)
+    # codes + scale tables must buy ≥2× KV tokens in the same bytes
+    # (exact ratio is 4·dh/(dh+8) ≈ 2.67 at dh=16 over f32 pools)
+    assert ratio >= 2.0, f"int8 capacity ratio {ratio:.2f} < 2x"
+    print(f"  kv-quant OK: int8 fits {ratio:.2f}x tokens in the fp pool's "
+          "bytes; batch outputs == isolated quantized oracle")
+
     _write_bench_json(
         legs, "smoke legs: tiny random MoE (CI); wall-clock is this host"
     )
@@ -399,6 +464,157 @@ def resident_sweep(budgets: Optional[Sequence[int]] = None, *,
     return rows
 
 
+# ------------------------------------------- shared-prefix / KV-quant legs
+def _prefix_trace(cfg, share: float, n_requests: int, seed: int = 5):
+    """Prompts sharing the leading ``share`` fraction of their tokens:
+    one common template + per-request random suffixes (``share=1`` is a
+    verbatim-repeat trace — the full-hit regime)."""
+    rng = np.random.default_rng(seed)
+    t_len = int(round(PROMPT_LEN * share))
+    template = rng.integers(0, cfg.vocab_size, size=t_len).astype(np.int32)
+    return [
+        np.concatenate([
+            template,
+            rng.integers(
+                0, cfg.vocab_size, size=PROMPT_LEN - t_len
+            ).astype(np.int32),
+        ])
+        for _ in range(n_requests)
+    ]
+
+
+def prefix_sweep(cfg, params, shares: Sequence[float], *,
+                 n_requests: int = 6, slots: int = 3, max_new: int = 9,
+                 label: str = "fp"):
+    """Serve one trace per shared-prefix fraction, cache off vs on.
+
+    The cache-off leg is the correctness anchor: outputs must be
+    bit-identical (prefix reuse is pure page plumbing). The derived
+    column reports what the cache bought — prefix hits / full hits /
+    prompt tokens served from shared pages / COW copies — next to the
+    prefill-dispatch counts of both legs.
+    """
+    mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    base = EngineConfig(
+        max_slots=slots, block_size=BLOCK_SIZE,
+        num_blocks=slots * mb + n_requests, max_blocks_per_slot=mb,
+        prefill_chunk=BLOCK_SIZE, decode_horizon=1,
+    )
+    rows = []
+    for share in shares:
+        prompts = _prefix_trace(cfg, float(share), n_requests)
+        outs, mets = {}, {}
+        for on in (False, True):
+            engine = PagedServingEngine(
+                cfg, params, dataclasses.replace(base, prefix_cache=on)
+            )
+            outs[on] = engine.serve([
+                Request(rid=i, prompt=p, max_new=max_new)
+                for i, p in enumerate(prompts)
+            ])
+            mets[on] = engine.metrics.summary()
+        assert outs[True] == outs[False], (
+            f"prefix cache changed greedy outputs at share={share}"
+        )
+        m = mets[True]
+        rows.append(csv_row(
+            f"serving/{label}_prefixshare{int(round(float(share) * 100))}",
+            m["decode_step_mean_s"] * 1e6,
+            f"hits={m['prefix_hits']};full={m['prefix_full_hits']};"
+            f"saved_tok={m['prefix_tokens_saved']};cow={m['cow_copies']};"
+            f"prefill_disp={m['prefill_dispatches']}"
+            f"(off={mets[False]['prefill_dispatches']});"
+            f"tps={m['tokens_per_s']:.1f};"
+            f"ttft_ms={m['ttft_mean_s']*1e3:.1f}",
+        ))
+    return rows
+
+
+def _pool_nbytes(engine) -> int:
+    """Device bytes of the engine's KV pool: codes + (quant) scale
+    tables — the honest denominator for the capacity comparison."""
+    cache = engine.cache
+    n = cache.k.nbytes + cache.v.nbytes
+    if cache.quant is not None:
+        n += sum(a.nbytes for a in cache.quant.values())
+    return int(n)
+
+
+def kv_bits_leg(cfg, params, *, n_requests: int = 4, slots: int = 2,
+                max_new: int = 9, blocks_fp: Optional[int] = None,
+                label: str = "fp", check_oracle: bool = False):
+    """Fixed pool-byte budget: fp KV vs int8-quantized KV.
+
+    The budget is the measured device bytes of the fp pool; the int8 leg
+    gets as many pages as fit in the same budget counting codes *and*
+    the four per-row f32 scale tables — ``4·dh / (dh + 8)`` tokens per
+    fp token (≈2.67× at ``dh=16``, f32 pools), not a hand-wavy 4×. Both
+    legs serve the same trace; the quantized leg's outputs optionally
+    check against the isolated single-request quantized oracle.
+    Returns ``(csv_rows, capacity_ratio, json_leg)``.
+    """
+    mb = -(-(PROMPT_LEN + max_new) // BLOCK_SIZE) + 1
+    blocks_fp = int(blocks_fp or slots * mb)
+    ecfg = EngineConfig(
+        max_slots=slots, block_size=BLOCK_SIZE, num_blocks=blocks_fp,
+        max_blocks_per_slot=mb, prefill_chunk=BLOCK_SIZE, decode_horizon=1,
+    )
+    eng_fp = PagedServingEngine(cfg, params, ecfg)
+    budget = _pool_nbytes(eng_fp)
+    # int8 page cost: 1-byte codes for K and V plus 4 f32 scale tables
+    # (k/v × scale/zero), one entry per (token, kv-head)
+    per_page_q = cfg.num_layers * BLOCK_SIZE * (
+        2 * cfg.num_kv_heads * cfg.head_dim + 4 * cfg.num_kv_heads * 4
+    )
+    blocks_q = budget // per_page_q
+    eng_q = PagedServingEngine(
+        cfg, params,
+        dataclasses.replace(ecfg, num_blocks=int(blocks_q), kv_bits=8),
+    )
+    assert _pool_nbytes(eng_q) <= budget, "int8 leg exceeded the byte budget"
+    ratio = blocks_q / blocks_fp
+    rng = np.random.default_rng(13)
+    prompts = [
+        rng.integers(0, cfg.vocab_size, size=PROMPT_LEN).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    rows, tps = [], {}
+    for leg_label, engine, nb in ((f"{label}_kvfp", eng_fp, blocks_fp),
+                                  (f"{label}_kvint8", eng_q, blocks_q)):
+        outs = engine.serve([
+            Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)
+        ])
+        m = engine.metrics.summary()
+        tps[leg_label] = m["tokens_per_s"]
+        rows.append(csv_row(
+            f"serving/{leg_label}",
+            m["decode_step_mean_s"] * 1e6,
+            f"pool_mb={_pool_nbytes(engine)/2**20:.2f};"
+            f"pages={nb};cap_tok={nb * BLOCK_SIZE};"
+            f"tps={m['tokens_per_s']:.1f};preempts={m['preemptions']}",
+        ))
+        if check_oracle and engine is eng_q:
+            from repro.serving import quantized_greedy_reference
+
+            for i, p in enumerate(prompts):
+                want = quantized_greedy_reference(cfg, params, p, max_new)
+                assert outs[i] == want, (
+                    f"int8 batch output diverged from isolated oracle "
+                    f"(request {i})"
+                )
+    leg = {
+        "label": f"{label}_kv_budget",
+        "pool_budget_bytes": budget,
+        "fp_pages": blocks_fp,
+        "int8_pages": int(blocks_q),
+        "capacity_ratio": round(float(ratio), 3),
+        "fp_tokens_per_s": tps[f"{label}_kvfp"],
+        "int8_tokens_per_s": tps[f"{label}_kvint8"],
+    }
+    return rows, float(ratio), leg
+
+
 def run(quick: bool = False, ffn_backend: Optional[str] = None):
     print("== serving_latency (paged engine, fp vs PMQ) ==")
     cfg, params = trained_model()
@@ -445,6 +661,13 @@ def run(quick: bool = False, ffn_backend: Optional[str] = None):
     print("== serving_latency (pool pressure: growth+preempt vs reserve) ==")
     rows += pool_sweep(quick=quick, n_requests=4 if quick else 8,
                        slots=3 if quick else 6)
+    print("== serving_latency (shared-prefix reuse: cache off vs on) ==")
+    rows += prefix_sweep(cfg, params, (0.0, 0.5, 1.0),
+                         n_requests=4 if quick else 6,
+                         slots=2 if quick else 3)
+    print("== serving_latency (int8 KV at fixed pool bytes) ==")
+    krows, _, _ = kv_bits_leg(cfg, params, n_requests=2 if quick else 4)
+    rows += krows
     print("== serving_latency (expert residency: offload vs all-resident) ==")
     rows += resident_sweep(quick=quick, n_requests=4 if quick else 6,
                            slots=3, compressed=(params_c, avg_bits))
@@ -473,6 +696,16 @@ def main() -> None:
                    help="explicit per-layer expert-slot budgets for the "
                         "residency sweep (fp + PMQ legs); default derives "
                         "~3 budgets from the compressed model's slot count")
+    p.add_argument("--prefix-share", type=float, nargs="+", default=None,
+                   metavar="F",
+                   help="shared-prefix fractions (0..1) for the prefix-"
+                        "cache sweep over the trained bench model; each "
+                        "leg serves cache-off vs cache-on and asserts "
+                        "bit-identical outputs")
+    p.add_argument("--kv-bits", action="store_true",
+                   help="fixed pool-byte-budget leg: fp KV vs int8-"
+                        "quantized KV (codes + per-row scale tables) over "
+                        "the trained bench model")
     p.add_argument("--ffn-backend", choices=["grouped", "scan", "ref"],
                    default=None,
                    help="compressed expert-FFN implementation for every "
@@ -503,8 +736,15 @@ def main() -> None:
     if args.resident_experts is not None:
         resident_sweep(args.resident_experts, quick=args.quick,
                        n_requests=4 if args.quick else 6, slots=3)
+    if args.prefix_share is not None:
+        cfg, params = trained_model()
+        prefix_sweep(cfg, params, args.prefix_share)
+    if args.kv_bits:
+        cfg, params = trained_model()
+        kv_bits_leg(cfg, params)
     if (args.pool_blocks is None and args.resident_experts is None
-            and args.horizons is None):
+            and args.horizons is None and args.prefix_share is None
+            and not args.kv_bits):
         run(quick=args.quick, ffn_backend=args.ffn_backend)
 
 

@@ -32,6 +32,10 @@ __all__ = [
     "hqq_refine",
     "quantize_to_packed",
     "rtn_codes",
+    "kv_quant_params",
+    "kv_quant_codes",
+    "quantize_kv_rows",
+    "dequantize_kv_rows",
 ]
 
 
@@ -100,6 +104,63 @@ def dequantize_affine(
     qg = _group_reshape(codes.astype(jnp.float32), group)
     w = (qg - zero[:, None, :]) * scale[:, None, :]
     return w.reshape(-1, n)[:k].astype(dtype)
+
+
+# ----------------------------------------------------- KV-row quantization
+# Serving-side KV-page compression (ROADMAP item 2): the paged pools store
+# uint8 codes with one affine (scale, zero) pair per KV *row* — per (layer,
+# page, page-offset, kv-head), i.e. per token per head — so a row written
+# once at prefill or decode never needs requantizing, whole pages stay
+# bit-exactly swappable/copyable, and shared prefix pages dequantize
+# identically for every reader. The math is exactly Eq. 3 with the
+# quantization group spanning the head_dim axis: the helpers reshape
+# ``x[..., dh]`` to the ``[K, N]`` layout :func:`affine_params` /
+# :func:`rtn_codes` consume (``K = dh`` rows, one column per KV row,
+# ``group = dh``), so KV pages ride the same quantizer as the weights.
+
+def kv_quant_params(x: jnp.ndarray, bits: int = 8):
+    """Per-row scale & zero over the trailing ``head_dim`` axis.
+
+    ``x [..., dh]`` → ``(scale, zero)`` of shape ``x.shape[:-1]`` (f32).
+    """
+    dh = x.shape[-1]
+    w = x.reshape(-1, dh).T  # [dh, M]: one group per KV row
+    scale, zero = affine_params(w, bits, group=dh)  # [1, M]
+    lead = x.shape[:-1]
+    return scale.reshape(lead), zero.reshape(lead)
+
+
+def kv_quant_codes(
+    x: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray, bits: int = 8
+) -> jnp.ndarray:
+    """RTN codes for KV rows: uint8, same shape as ``x``."""
+    dh = x.shape[-1]
+    w = x.reshape(-1, dh).T
+    codes = rtn_codes(
+        w, scale.reshape(1, -1), zero.reshape(1, -1), bits, group=dh
+    )
+    return codes.T.reshape(x.shape)
+
+
+def quantize_kv_rows(x: jnp.ndarray, bits: int = 8):
+    """Quantize KV rows in one shot. Returns ``(codes, scale, zero)``:
+    ``codes`` uint8 shaped like ``x``, ``scale``/``zero`` f32 shaped
+    ``x.shape[:-1]``. All-zero rows (unwritten pool pages) round-trip to
+    exactly zero (``scale`` floors at 1e-8, ``zero = 0``, codes 0)."""
+    scale, zero = kv_quant_params(x, bits)
+    return kv_quant_codes(x, scale, zero, bits), scale, zero
+
+
+def dequantize_kv_rows(
+    codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+    dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv_rows`: ``(q - z) * s`` in f32 —
+    the exact expression the paged-attention dequant epilogues apply
+    (ref oracle and Pallas kernel), so every reader of a quantized page
+    sees bit-identical floats."""
+    x = (codes.astype(jnp.float32) - zero[..., None].astype(jnp.float32))
+    return (x * scale[..., None].astype(jnp.float32)).astype(dtype)
 
 
 @partial(jax.jit, static_argnames=("bits", "group", "iters"))

@@ -21,7 +21,10 @@ from .moe_gmm import (
     pad_groups,
     sort_by_expert,
 )
-from .paged_attention import paged_attention_pallas
+from .paged_attention import (
+    paged_attention_pallas,
+    paged_attention_quant_pallas,
+)
 from .quant_matmul import quant_matmul_pallas
 
 __all__ = [
@@ -245,6 +248,7 @@ def paged_attention(
     *,
     window=None,
     backend: str | None = None,
+    quant=None,
 ) -> jnp.ndarray:
     """Decode attention through a paged KV pool (serving hot path).
 
@@ -252,16 +256,30 @@ def paged_attention(
     layer's pool; ``block_tables [B, MB]``; ``lengths [B]`` logical kv
     lengths. ``window`` may be a python int or traced scalar (per-layer
     sliding windows ride the decode scan). Returns ``[B, Hkv, G, dh]``.
+
+    ``quant = (k_scale, k_zero, v_scale, v_zero)`` (each ``[NB, BS,
+    Hkv]`` f32) reads the pools as int8 codes with a per-row affine
+    dequant epilogue on the gathered pages (ref oracle:
+    :func:`repro.kernels.ref.paged_attention_ref` quant mode; TPU:
+    :func:`repro.kernels.paged_attention.paged_attention_quant_pallas`).
+    ``quant=None`` is the unchanged fp path.
     """
     backend = backend or default_backend()
     if backend == "ref":
         return ref.paged_attention_ref(
-            q, k_pool, v_pool, block_tables, lengths, window=window
+            q, k_pool, v_pool, block_tables, lengths, window=window,
+            quant=quant,
         )
     mb, bs = block_tables.shape[1], k_pool.shape[1]
     win = jnp.full((1,), mb * bs + 1, jnp.int32) if window is None else (
         jnp.asarray(window, jnp.int32).reshape(1)
     )
+    if quant is not None:
+        ks, kz, vs, vz = quant
+        return paged_attention_quant_pallas(
+            q, k_pool, v_pool, ks, kz, vs, vz, block_tables, lengths, win,
+            interpret=(backend == "interpret"),
+        )
     return paged_attention_pallas(
         q, k_pool, v_pool, block_tables, lengths, win,
         interpret=(backend == "interpret"),

@@ -155,6 +155,7 @@ def paged_attention_ref(
     *,
     window=None,
     out_dtype=None,
+    quant=None,
 ) -> jnp.ndarray:
     """Oracle for :mod:`repro.kernels.paged_attention`: gather each
     sequence's pages through its block table, then masked softmax decode
@@ -164,6 +165,14 @@ def paged_attention_ref(
     ``block_tables [B, MB]``; ``lengths [B]`` logical kv lengths (the
     newest token sits at ``lengths - 1``). ``window`` keeps
     ``kv_pos > (lengths−1) − window`` (None = full attention).
+
+    ``quant = (k_scale, k_zero, v_scale, v_zero)`` (each ``[NB, BS,
+    Hkv]`` f32) switches the pools to int8-quantized-KV mode: the pools
+    carry uint8 codes and the gathered rows pass through the per-row
+    affine dequant ``(q - z) * s`` in f32 before the attention math —
+    the expression of :func:`repro.core.quantizers.dequantize_kv_rows`,
+    which the Pallas dequant epilogue mirrors. ``quant=None`` leaves the
+    fp path byte-for-byte the historical computation.
     """
     b, hkv, g, dh = q.shape
     nb, bs = k_pool.shape[0], k_pool.shape[1]
@@ -175,6 +184,10 @@ def paged_attention_ref(
     ).reshape(b, mb * bs)
     k = flat_k[phys]  # [B, S_log, Hkv, dh]
     v = flat_v[phys]
+    if quant is not None:
+        ks, kz, vs, vz = (a.reshape(nb * bs, hkv) for a in quant)
+        k = (k.astype(jnp.float32) - kz[phys][..., None]) * ks[phys][..., None]
+        v = (v.astype(jnp.float32) - vz[phys][..., None]) * vs[phys][..., None]
     kv_pos = jnp.arange(mb * bs)
     valid = kv_pos[None, :] < lengths[:, None]
     if window is not None:

@@ -204,6 +204,18 @@ def main() -> None:
     p.add_argument("--sample-seed", type=int, default=0,
                    help="seed for temperature sampling; one subkey per "
                         "megastep, so runs replay deterministically")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="enable shared-prefix KV reuse: prompts sharing a "
+                        "cached prefix admit onto its pages copy-on-write "
+                        "and skip the prefill of the shared tokens "
+                        "(outputs stay bit-identical; see "
+                        "docs/serving_kv.md)")
+    p.add_argument("--kv-bits", type=int, choices=[8], default=None,
+                   metavar="B",
+                   help="quantize the KV pool to B-bit codes with per-row "
+                        "f32 scales (~2.7x KV tokens per device byte at "
+                        "head_dim 16; greedy outputs stay batch-"
+                        "composition independent — see docs/serving_kv.md)")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
     p.add_argument("--trace-out", type=str, default=None, metavar="PATH",
@@ -216,6 +228,11 @@ def main() -> None:
                         "--trace-out is given, else 'off'); lifecycle "
                         "metrics are identical at every level")
     args = p.parse_args()
+    if args.legacy and (args.prefix_cache or args.kv_bits is not None):
+        # both features live in the paged KV pool — the wave batcher has
+        # neither pages nor a prefix index
+        raise SystemExit("--prefix-cache/--kv-bits require the paged "
+                         "engine (drop --legacy)")
     if args.legacy and (args.trace_out or args.trace_level not in (None, "off")):
         # the wave batcher predates the tracer — refuse rather than
         # silently emit an empty trace
@@ -271,6 +288,8 @@ def main() -> None:
             temperature=args.temperature,
             sample_seed=args.sample_seed,
             trace_level=trace_level,
+            prefix_cache=args.prefix_cache,
+            kv_bits=args.kv_bits,
             **({"decode_horizon": args.decode_horizon}
                if args.decode_horizon is not None else {}),
         ),
@@ -291,6 +310,11 @@ def main() -> None:
     print(f"pool pressure: {m['preemptions']} preemptions, "
           f"{m['swap_bytes']} swap bytes, "
           f"page util p95 {m['page_util_p95']:.2f}")
+    if args.prefix_cache:
+        print(f"prefix cache: {m['prefix_hits']} hits "
+              f"({m['prefix_full_hits']} full), "
+              f"{m['prefix_tokens_saved']} prompt tokens reused, "
+              f"{m['cow_copies']} COW copies")
     if engine.offload is not None:
         print(
             f"expert offload: budget {engine.offload.budgets} "

@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..core.quantizers import dequantize_kv_rows, quantize_kv_rows
 from ..kernels import ops
 from ..parallel.sharding import shard
 from . import layers as L
@@ -356,8 +357,34 @@ def _paged_pool_dims(cache):
     return l, nb, bs
 
 
-def _paged_decode_core(params, kf, vf, tables, token, positions, active, cfg,
-                       nb, bs, *, moe_hooks=None):
+#: Code width of quantized KV pools (int8 per-row affine — see
+#: repro.core.quantizers.quantize_kv_rows and serving.kvcache).
+KV_QUANT_BITS = 8
+
+_KV_QUANT_KEYS = ("k_scale", "k_zero", "v_scale", "v_zero")
+
+
+def _flatten_kv_quant(cache, nl, nb, bs, hkv):
+    """``cache["kv_quant"]`` ({k,v}×{scale,zero} [L, NB, BS, Hkv]) →
+    flat tuple ``(ks, kz, vs, vz)`` [L, NB·BS, Hkv], or ``()`` on fp
+    pools — an empty tuple threads through scan carries untouched."""
+    q = cache.get("kv_quant")
+    if q is None:
+        return ()
+    return tuple(q[k].reshape(nl, nb * bs, hkv) for k in _KV_QUANT_KEYS)
+
+
+def _unflatten_kv_quant(qs, nl, nb, bs, hkv):
+    if not qs:
+        return None
+    return {
+        k: a.reshape(nl, nb, bs, hkv)
+        for k, a in zip(_KV_QUANT_KEYS, qs)
+    }
+
+
+def _paged_decode_core(params, kf, vf, qs, tables, token, positions, active,
+                       cfg, nb, bs, *, moe_hooks=None):
     """One decode step over the *flattened* paged pools — the shared body
     of :func:`paged_decode_step` (single step) and
     :func:`paged_decode_horizon` (H fused steps): both run exactly this
@@ -366,10 +393,18 @@ def _paged_decode_core(params, kf, vf, tables, token, positions, active, cfg,
 
     ``kf``/``vf`` are ``[L, NB·BS, Hkv, dh]``; ``tables [B, MB]``;
     ``token [B, 1]``; ``positions [B]``; ``active [B]`` bool or ``None``
-    (every slot then writes). Returns ``(kf, vf, logits [B,1,V],
-    per_slot_act [B], slot_counts [L, num_slots])`` — ``per_slot_act``
-    is the per-slot executed fraction of top-k expert slots (OTP decode
-    masks), unreduced so callers can mask inactive slots.
+    (every slot then writes). ``qs`` is ``()`` for fp pools — that path
+    is byte-for-byte the historical computation — or the flat per-row
+    dequant tables ``(k_scale, k_zero, v_scale, v_zero)`` ``[L, NB·BS,
+    Hkv]`` for int8 pools: the new token's K/V rows are quantized
+    (per-row affine, deterministic in the row values alone — so
+    identical tokens at identical positions produce identical codes
+    regardless of batch composition) before the scatter, and attention
+    reads through the kernel's dequant epilogue. Returns ``(kf, vf, qs,
+    logits [B,1,V], per_slot_act [B], slot_counts [L, num_slots])`` —
+    ``per_slot_act`` is the per-slot executed fraction of top-k expert
+    slots (OTP decode masks), unreduced so callers can mask inactive
+    slots.
     """
     x = L.embed_tokens(params["embed"], token)
     b = token.shape[0]
@@ -391,31 +426,49 @@ def _paged_decode_core(params, kf, vf, tables, token, positions, active, cfg,
     hooks = dict(moe_hooks or {})
     if active is not None:
         hooks["count_weight"] = active  # [B] = [T] at decode (S = 1)
+    quantized = bool(qs)
 
     def body(carry, xs):
-        xc, kf, vf = carry
+        xc, kf, vf, qs = carry
         p_l, win, l = xs
         h = L.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
         q, k_new, v_new = L._qkv(p_l["attn"], h, cfg, positions[:, None])
-        kf = kf.at[l, dest].set(k_new[:, 0].astype(kf.dtype), mode="drop")
-        vf = vf.at[l, dest].set(v_new[:, 0].astype(vf.dtype), mode="drop")
+        quant_l = None
+        if quantized:
+            ksf, kzf, vsf, vzf = qs
+            kc, ks, kz = quantize_kv_rows(k_new[:, 0], KV_QUANT_BITS)
+            vc, vs, vz = quantize_kv_rows(v_new[:, 0], KV_QUANT_BITS)
+            kf = kf.at[l, dest].set(kc, mode="drop")
+            vf = vf.at[l, dest].set(vc, mode="drop")
+            ksf = ksf.at[l, dest].set(ks, mode="drop")
+            kzf = kzf.at[l, dest].set(kz, mode="drop")
+            vsf = vsf.at[l, dest].set(vs, mode="drop")
+            vzf = vzf.at[l, dest].set(vz, mode="drop")
+            qs = (ksf, kzf, vsf, vzf)
+            quant_l = tuple(
+                jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+                .reshape(nb, bs, hkv) for a in qs
+            )
+        else:
+            kf = kf.at[l, dest].set(k_new[:, 0].astype(kf.dtype), mode="drop")
+            vf = vf.at[l, dest].set(v_new[:, 0].astype(vf.dtype), mode="drop")
         k_l = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)
         v_l = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)
         attn = ops.paged_attention(
             q.reshape(b, hkv, g, dh),
             k_l.reshape(nb, bs, hkv, dh),
             v_l.reshape(nb, bs, hkv, dh),
-            tables, lengths, window=win,
+            tables, lengths, window=win, quant=quant_l,
         )
         attn = attn.reshape(b, 1, hq * dh).astype(xc.dtype)
         xc = xc + L.linear(p_l["attn"]["wo"], attn)
         h2 = L.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
         delta, act, counts = _ffn_delta(p_l, h2, cfg, hooks)
         xc = xc + delta
-        return (xc, kf, vf), (act, counts)
+        return (xc, kf, vf, qs), (act, counts)
 
-    (x, kf, vf), (acts, slot_counts) = jax.lax.scan(
-        body, (x, kf, vf), (params["blocks"], windows, layer_ids)
+    (x, kf, vf, qs), (acts, slot_counts) = jax.lax.scan(
+        body, (x, kf, vf, qs), (params["blocks"], windows, layer_ids)
     )
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = jnp.einsum(
@@ -425,7 +478,7 @@ def _paged_decode_core(params, kf, vf, tables, token, positions, active, cfg,
     # acts [L, B, 1] per-token: keep per-slot so garbage tokens decoded
     # by empty slots cannot dilute the OTP activation metric
     per_slot = acts.mean(axis=(0, 2))  # [B]
-    return kf, vf, logits, per_slot, slot_counts
+    return kf, vf, qs, logits, per_slot, slot_counts
 
 
 def _masked_activation(per_slot, active):
@@ -468,11 +521,12 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
     nl, nb, bs = _paged_pool_dims(cache)
     hkv, dh = cfg.num_kv_heads, cfg.head_dim
     active = cache.get("active")
-    kf, vf, logits, per_slot, slot_counts = _paged_decode_core(
+    qs = _flatten_kv_quant(cache, nl, nb, bs, hkv)
+    kf, vf, qs, logits, per_slot, slot_counts = _paged_decode_core(
         params,
         cache["k"].reshape(nl, nb * bs, hkv, dh),
         cache["v"].reshape(nl, nb * bs, hkv, dh),
-        cache["block_tables"], token, positions, active, cfg, nb, bs,
+        qs, cache["block_tables"], token, positions, active, cfg, nb, bs,
         moe_hooks=moe_hooks,
     )
     new_cache = dict(
@@ -480,6 +534,8 @@ def paged_decode_step(params, cache, token: jnp.ndarray, positions: jnp.ndarray,
         k=kf.reshape(nl, nb, bs, hkv, dh),
         v=vf.reshape(nl, nb, bs, hkv, dh),
     )
+    if qs:
+        new_cache["kv_quant"] = _unflatten_kv_quant(qs, nl, nb, bs, hkv)
     info = {
         "expert_activation": _masked_activation(per_slot, active),
         "slot_counts": slot_counts,
@@ -538,9 +594,9 @@ def paged_decode_horizon(params, cache, token: jnp.ndarray,
         active0 = jnp.ones((token.shape[0],), bool)
 
     def step(carry, key):
-        kf, vf, cur, pos, act, budget = carry
-        kf, vf, logits, per_slot, counts = _paged_decode_core(
-            params, kf, vf, tables, cur, pos, act, cfg, nb, bs,
+        kf, vf, qs, cur, pos, act, budget = carry
+        kf, vf, qs, logits, per_slot, counts = _paged_decode_core(
+            params, kf, vf, qs, tables, cur, pos, act, cfg, nb, bs,
             moe_hooks=moe_hooks,
         )
         lg = logits[:, -1, :]  # [B, V] f32
@@ -559,7 +615,7 @@ def paged_decode_horizon(params, cache, token: jnp.ndarray,
             _masked_activation(per_slot, act),
             counts,
         )
-        carry = (kf, vf, nxt[:, None], pos + emit.astype(jnp.int32),
+        carry = (kf, vf, qs, nxt[:, None], pos + emit.astype(jnp.int32),
                  act & ~stop, budget)
         return carry, ys
 
@@ -570,6 +626,7 @@ def paged_decode_horizon(params, cache, token: jnp.ndarray,
     init = (
         cache["k"].reshape(nl, nb * bs, hkv, dh),
         cache["v"].reshape(nl, nb * bs, hkv, dh),
+        _flatten_kv_quant(cache, nl, nb, bs, hkv),
         token, positions, active0, budgets,
     )
     # the horizon scan is fully unrolled: H is small and static, and a
@@ -577,7 +634,7 @@ def paged_decode_horizon(params, cache, token: jnp.ndarray,
     # fusing across steps (measured ~1.8x per-step decode cost on CPU);
     # unrolling keeps per-step cost at the single-step program's while
     # still eliminating the per-token host round-trips
-    (kf, vf, *_), (toks, emits, acts, counts) = jax.lax.scan(
+    (kf, vf, qs, *_), (toks, emits, acts, counts) = jax.lax.scan(
         step, init, keys, unroll=horizon
     )
     new_cache = dict(
@@ -585,6 +642,8 @@ def paged_decode_horizon(params, cache, token: jnp.ndarray,
         k=kf.reshape(nl, nb, bs, hkv, dh),
         v=vf.reshape(nl, nb, bs, hkv, dh),
     )
+    if qs:
+        new_cache["kv_quant"] = _unflatten_kv_quant(qs, nl, nb, bs, hkv)
     info = {"expert_activation": acts, "slot_counts": counts}
     return new_cache, toks, emits, info
 
@@ -633,16 +692,42 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
     phys = tables[0, logical // bs] * bs + logical % bs  # [S_log]
     hooks = dict(moe_hooks or {})
     hooks["count_weight"] = jnp.arange(c) < valid_len  # [C] = [T] at B=1
+    qs = _flatten_kv_quant(cache, nl, nb, bs, hkv)
+    quantized = bool(qs)
 
     def body(carry, xs):
-        xc, kf, vf = carry
+        xc, kf, vf, qs = carry
         p_l, win, l = xs
         h = L.rms_norm(xc, p_l["ln1"], cfg.norm_eps)
         k_new, v_new = L._kv_only(p_l["attn"], h, cfg, pos2d)
-        kf = kf.at[l, dest].set(k_new[0].astype(kf.dtype), mode="drop")
-        vf = vf.at[l, dest].set(v_new[0].astype(vf.dtype), mode="drop")
-        k_log = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)[phys][None]
-        v_log = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)[phys][None]
+        if quantized:
+            ksf, kzf, vsf, vzf = qs
+            kc, ks, kz = quantize_kv_rows(k_new[0], KV_QUANT_BITS)
+            vc, vs, vz = quantize_kv_rows(v_new[0], KV_QUANT_BITS)
+            kf = kf.at[l, dest].set(kc, mode="drop")
+            vf = vf.at[l, dest].set(vc, mode="drop")
+            ksf = ksf.at[l, dest].set(ks, mode="drop")
+            kzf = kzf.at[l, dest].set(kz, mode="drop")
+            vsf = vsf.at[l, dest].set(vs, mode="drop")
+            vzf = vzf.at[l, dest].set(vz, mode="drop")
+            qs = (ksf, kzf, vsf, vzf)
+            # dequantize the gathered rows with the SAME f32 expression as
+            # the paged-attention kernels' epilogue — prefill attention
+            # over shared-prefix pages sees bit-identical floats to every
+            # later decode read of the same pages
+            ksl, kzl, vsl, vzl = (
+                jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)[phys]
+                for a in qs
+            )
+            kr = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)[phys]
+            vr = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)[phys]
+            k_log = dequantize_kv_rows(kr, ksl, kzl)[None]
+            v_log = dequantize_kv_rows(vr, vsl, vzl)[None]
+        else:
+            kf = kf.at[l, dest].set(k_new[0].astype(kf.dtype), mode="drop")
+            vf = vf.at[l, dest].set(v_new[0].astype(vf.dtype), mode="drop")
+            k_log = jax.lax.dynamic_index_in_dim(kf, l, 0, keepdims=False)[phys][None]
+            v_log = jax.lax.dynamic_index_in_dim(vf, l, 0, keepdims=False)[phys][None]
         attn_out, _ = L.attention(
             p_l["attn"], h, cfg, positions=pos2d, causal=True, window=win,
             kv_override=(k_log, v_log, kv_pos),
@@ -651,10 +736,10 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
         h2 = L.rms_norm(xc, p_l["ln2"], cfg.norm_eps)
         delta, _, counts = _ffn_delta(p_l, h2, cfg, hooks)
         xc = xc + delta
-        return (xc, kf, vf), counts
+        return (xc, kf, vf, qs), counts
 
-    (x, kf, vf), slot_counts = jax.lax.scan(
-        body, (x, kf, vf), (params["blocks"], windows, layer_ids)
+    (x, kf, vf, qs), slot_counts = jax.lax.scan(
+        body, (x, kf, vf, qs), (params["blocks"], windows, layer_ids)
     )
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     last = jax.lax.dynamic_slice_in_dim(x, valid_len - 1, 1, axis=1)
@@ -667,6 +752,8 @@ def paged_prefill_chunk(params, cache, tokens: jnp.ndarray, start: jnp.ndarray,
         k=kf.reshape(nl, nb, bs, hkv, dh),
         v=vf.reshape(nl, nb, bs, hkv, dh),
     )
+    if qs:
+        new_cache["kv_quant"] = _unflatten_kv_quant(qs, nl, nb, bs, hkv)
     return new_cache, logits, {"slot_counts": slot_counts}
 
 

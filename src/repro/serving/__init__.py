@@ -33,8 +33,19 @@ The production serving substrate around the MC# compressed model path
   load gauges, and the bit-misallocation report joining observed routing
   frequency against the PMQ bit assignment (see docs/observability.md).
 """
-from .engine import EngineConfig, PagedServingEngine
-from .kvcache import BlockAllocator, PagedKVCache, PoolExhausted, SwappedKV
+from .engine import (
+    EngineConfig,
+    PagedServingEngine,
+    quantized_greedy_reference,
+)
+from .kvcache import (
+    BlockAllocator,
+    PagedKVCache,
+    PoolExhausted,
+    PrefixCache,
+    PrefixEntry,
+    SwappedKV,
+)
 from .metrics import ServingMetrics
 from .offload import ExpertOffloadManager
 from .scheduler import Request, Scheduler
@@ -55,7 +66,10 @@ __all__ = [
     "PagedKVCache",
     "PagedServingEngine",
     "PoolExhausted",
+    "PrefixCache",
+    "PrefixEntry",
     "Request",
+    "quantized_greedy_reference",
     "Scheduler",
     "ServingMetrics",
     "SpanTracer",

@@ -98,7 +98,10 @@ from .metrics import ServingMetrics
 from .scheduler import Request, Scheduler
 from .trace import ExpertRoutingTelemetry, MetricsConsumer, SpanTracer
 
-__all__ = ["EngineConfig", "PagedServingEngine", "dense_greedy_reference"]
+__all__ = [
+    "EngineConfig", "PagedServingEngine", "dense_greedy_reference",
+    "quantized_greedy_reference",
+]
 
 
 def dense_greedy_reference(cfg, params, prompt: np.ndarray, max_new: int):
@@ -127,6 +130,37 @@ def dense_greedy_reference(cfg, params, prompt: np.ndarray, max_new: int):
         cur = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
         toks.append(int(cur[0, 0]))
     return toks, steps
+
+
+def quantized_greedy_reference(cfg, params, prompt: np.ndarray, max_new: int,
+                               *, kv_bits: int = 8, block_size: int = 16,
+                               use_otp: bool = True,
+                               ffn_backend: Optional[str] = None) -> List[int]:
+    """Greedy decode oracle for **int8-KV** engines: a fresh
+    single-request, single-slot, ``H = 1``, prefix-cache-off paged
+    engine with the same ``kv_bits``.
+
+    Quantized greedy outputs cannot be compared against
+    :func:`dense_greedy_reference` — the dense cache attends to
+    unquantized rows, so its logits differ by design. The invariant the
+    quantized engine *does* keep is batch-composition independence:
+    per-row quantization depends only on the row values, so a request's
+    codes (hence its tokens) are identical whether it runs alone here or
+    co-scheduled/preempted/prefix-shared in a loaded engine — that
+    equality is what the fuzz harness asserts, and page geometry does
+    not enter the math (any ``block_size`` gives the same tokens).
+    """
+    prompt = np.ascontiguousarray(prompt, np.int32)
+    pages = -(-(len(prompt) + max_new) // block_size)
+    eng = PagedServingEngine(cfg, params, EngineConfig(
+        max_slots=1, block_size=block_size, num_blocks=pages,
+        max_blocks_per_slot=pages, prefill_chunk=block_size,
+        decode_horizon=1, reserve_full=True, use_otp=use_otp,
+        ffn_backend=ffn_backend, kv_bits=kv_bits, prefix_cache=False,
+        trace_level="off",
+    ))
+    out = eng.serve([Request(rid=0, prompt=prompt, max_new=max_new)])
+    return out[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,6 +216,23 @@ class EngineConfig:
     # from sample_seed so runs (and offload replays) are deterministic.
     temperature: float = 0.0
     sample_seed: int = 0
+    # Shared-prefix KV reuse: admission probes a prefix → physical-page-
+    # run cache (exact token keys, LRU) and shares matching page-aligned
+    # pages copy-on-write instead of re-prefilling them; fresh prompts
+    # register their page-boundary prefixes after prefill. Greedy outputs
+    # are bit-identical with the cache on or off (fuzzed in
+    # tests/test_serving_sim.py) — cached pages hold exactly the KV the
+    # skipped prefill would have written.
+    prefix_cache: bool = False
+    # int8 KV quantization: 8 stores the pools as uint8 per-row affine
+    # codes with per-(layer, page, row, kv-head) scale/zero tables (see
+    # repro.core.quantizers.quantize_kv_rows), halving-plus KV bytes per
+    # token at fixed pool geometry; None keeps fp pools (today's path,
+    # byte-for-byte untouched). Quantized greedy outputs are batch-
+    # composition independent (per-row params depend only on the row) and
+    # equal quantized_greedy_reference bit-for-bit, but differ from the
+    # dense fp oracle by design.
+    kv_bits: Optional[int] = None
     # Request-lifecycle tracing (repro.serving.trace): "off" records no
     # events (lifecycle facts still reach the metrics consumer, so
     # counters() are invariant to this knob), "spans" records
@@ -197,34 +248,49 @@ def _jitted_steps(model_cfg, use_otp: bool, ffn_backend: Optional[str] = None,
                   horizon: int = 1, temperature: float = 0.0):
     """Compiled decode-megastep/prefill builders, shared across engines
     with the same (hashable, frozen) model config and the same static
-    horizon/sampling knobs — jit caching then dedupes by array shapes,
-    so two engines differing only in pool geometry cost one trace each,
-    not one per instance."""
+    horizon/sampling knobs — jit caching then dedupes by array shapes
+    *and pytree structure* (fp and int8 engines trace different
+    programs off the same builder), so two engines differing only in
+    pool geometry cost one trace each, not one per instance.
+
+    Both programs take and return the ``quant`` scale/zero tables right
+    after the pools (``None`` on fp engines — an empty pytree that
+    donates and returns as nothing): the tables are pool metadata and
+    must travel through every donated round-trip with the codes they
+    dequantize.
+    """
     hooks = {"use_otp": use_otp, "ffn_backend": ffn_backend}
 
-    def decode_fn(params, k, v, token, positions, tables, active, budgets,
-                  eos_ids, key):
+    def decode_fn(params, k, v, quant, token, positions, tables, active,
+                  budgets, eos_ids, key):
         cache = {"k": k, "v": v, "block_tables": tables, "active": active}
+        if quant is not None:
+            cache["kv_quant"] = quant
         new_cache, toks, emits, info = tf.paged_decode_horizon(
             params, cache, token, positions, model_cfg, horizon=horizon,
             budgets=budgets, eos_ids=eos_ids, moe_hooks=hooks,
             temperature=temperature, rng_key=key,
         )
         return (
-            new_cache["k"], new_cache["v"], toks, emits,
-            info["expert_activation"], info["slot_counts"],
+            new_cache["k"], new_cache["v"], new_cache.get("kv_quant"),
+            toks, emits, info["expert_activation"], info["slot_counts"],
         )
 
-    def prefill_fn(params, k, v, tokens, start, valid_len, table_row):
+    def prefill_fn(params, k, v, quant, tokens, start, valid_len, table_row):
         cache = {"k": k, "v": v, "block_tables": table_row}
+        if quant is not None:
+            cache["kv_quant"] = quant
         new_cache, logits, info = tf.paged_prefill_chunk(
             params, cache, tokens, start, valid_len, model_cfg, moe_hooks=hooks
         )
-        return new_cache["k"], new_cache["v"], logits, info["slot_counts"]
+        return (
+            new_cache["k"], new_cache["v"], new_cache.get("kv_quant"),
+            logits, info["slot_counts"],
+        )
 
     return (
-        jax.jit(decode_fn, donate_argnums=(1, 2)),
-        jax.jit(prefill_fn, donate_argnums=(1, 2)),
+        jax.jit(decode_fn, donate_argnums=(1, 2, 3)),
+        jax.jit(prefill_fn, donate_argnums=(1, 2, 3)),
     )
 
 
@@ -294,8 +360,10 @@ class PagedServingEngine:
             block_size=self.ecfg.block_size,
             max_slots=self.ecfg.max_slots,
             max_blocks_per_slot=self.ecfg.max_blocks_per_slot,
+            kv_bits=self.ecfg.kv_bits,
+            prefix_cache=self.ecfg.prefix_cache,
         )
-        self.cache.tracer = self.tracer
+        self.cache.set_tracer(self.tracer)
         self.scheduler = Scheduler(
             self.cache, reserve_full=self.ecfg.reserve_full,
             horizon=self.ecfg.decode_horizon, tracer=self.tracer,
@@ -415,6 +483,20 @@ class PagedServingEngine:
                 queue_depth=depth_before, resumed=req.preempt_count > 0,
             )
             self.tracer.flow("t", req.rid, track=track)
+            if self.cache.prefix is not None and req.preempt_count == 0:
+                # every fresh admission is a cache probe: hit/miss + the
+                # prefill tokens the shared pages saved (full hits also
+                # skip the first-token logits dispatch entirely)
+                if req.cached_tokens > 0:
+                    self.tracer.lifecycle(
+                        "prefix_hit", track=track, rid=req.rid,
+                        tokens_saved=req.cached_tokens,
+                        full=req.cached_logits is not None,
+                    )
+                else:
+                    self.tracer.lifecycle(
+                        "prefix_miss", track=track, rid=req.rid,
+                    )
             if req.swapped is not None:  # swap-restore a preempted slot
                 self.tracer.lifecycle(
                     "swap_in", track=track, rid=req.rid, slot=req.slot,
@@ -446,6 +528,15 @@ class PagedServingEngine:
         the context is ``prompt + out[:-1]`` (everything already written
         to KV before eviction) and the final chunk's logits are discarded
         — they re-predict the already-known ``out[-1]``.
+
+        **Shared-prefix fast path.** A fresh request admitted through a
+        prefix-cache hit starts prefill at ``req.cached_tokens`` — the
+        shared/COW pages already hold that prefix's KV, bit-identical to
+        what the skipped chunks would have written. A *full*-prompt hit
+        carries the registration-time final-token logits
+        (``req.cached_logits``) and dispatches **zero** prefill programs.
+        Afterwards the freshly prefilled prompt registers its own
+        page-boundary prefixes (+ final logits) back into the cache.
         """
         if resume:
             seq = np.concatenate(
@@ -457,29 +548,40 @@ class PagedServingEngine:
         p_len = len(seq)
         c = self.ecfg.prefill_chunk
         track = f"slot{req.slot}"
-        table_row = jnp.asarray(self.cache.block_tables[req.slot : req.slot + 1])
-        logits = None
-        for off in range(0, p_len, c):
-            n = min(c, p_len - off)
-            chunk = np.zeros((1, c), np.int32)
-            chunk[0, :n] = seq[off : off + n]
-            args = (jnp.asarray(chunk), jnp.int32(off), jnp.int32(n), table_row)
-            t0 = self.tracer.now_us()
-            logits, counts = self._run_offloaded(
-                self._prefill, args, kind="prefill", track=track
+        off0 = 0 if resume else min(req.cached_tokens, p_len)
+        if not resume and req.cached_logits is not None and off0 >= p_len:
+            last = np.asarray(req.cached_logits)
+        else:
+            assert off0 < p_len, (off0, p_len)  # scheduler demotes no-logits full hits
+            table_row = jnp.asarray(
+                self.cache.block_tables[req.slot : req.slot + 1]
             )
-            self.metrics.record_prefill_runs(self._last_run_stats["runs"])
-            self.tracer.complete(
-                "prefill_chunk", track=track, cat="prefill", start_us=t0,
-                args={"rid": req.rid, "offset": off, "tokens": n,
-                      "resume": resume,
-                      "runs": int(self._last_run_stats["runs"])},
-            )
-            self._record_capacity_util(counts, c)
-        if resume:
-            return
-        jax.block_until_ready(logits)
-        last = np.asarray(logits)[0, -1]
+            logits = None
+            for off in range(off0, p_len, c):
+                n = min(c, p_len - off)
+                chunk = np.zeros((1, c), np.int32)
+                chunk[0, :n] = seq[off : off + n]
+                args = (
+                    jnp.asarray(chunk), jnp.int32(off), jnp.int32(n),
+                    table_row,
+                )
+                t0 = self.tracer.now_us()
+                logits, counts = self._run_offloaded(
+                    self._prefill, args, kind="prefill", track=track
+                )
+                self.metrics.record_prefill_runs(self._last_run_stats["runs"])
+                self.tracer.complete(
+                    "prefill_chunk", track=track, cat="prefill", start_us=t0,
+                    args={"rid": req.rid, "offset": off, "tokens": n,
+                          "resume": resume,
+                          "runs": int(self._last_run_stats["runs"])},
+                )
+                self._record_capacity_util(counts, c)
+            if resume:
+                return
+            jax.block_until_ready(logits)
+            last = np.asarray(logits)[0, -1]
+        self.cache.register_prefix(req.prompt, req.slot, last_logits=last)
         if self.ecfg.temperature > 0.0:
             # the TTFT token is sampled too — same categorical draw the
             # horizon scan applies to every later token
@@ -523,9 +625,14 @@ class PagedServingEngine:
         while True:
             t0 = time.time()
             t0_us = self.tracer.now_us()
-            out = program(self.params, self.cache.k, self.cache.v, *args)
+            out = program(
+                self.params, self.cache.k, self.cache.v, self.cache.quant,
+                *args,
+            )
             self.cache.k, self.cache.v = out[0], out[1]
-            payload = out[2:-1]
+            if out[2] is not None:  # quantized pools: scale/zero tables
+                self.cache.quant = out[2]
+            payload = out[3:-1]
             # the one host sync: dispatch counts ([L, num_slots] for a
             # prefill chunk, [H, L, num_slots] for a decode megastep;
             # trailing dim 0 outside PMQ) — fetched for the offload miss
@@ -628,8 +735,10 @@ class PagedServingEngine:
             )
             if need <= 0:
                 continue
+            # LRU-evictable prefix-cache pages count as available —
+            # cache.grow evicts entries before preemption ever triggers
             while (
-                self.cache.allocator.num_free < need
+                self.cache.available_pages() < need
                 and slot in self.scheduler.active
             ):
                 vslot = self.scheduler.pick_victim()

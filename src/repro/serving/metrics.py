@@ -89,6 +89,19 @@ class ServingMetrics:
     expert_resident_bytes: List[int] = dataclasses.field(default_factory=list)
     # fused decode-horizon megasteps (one jitted dispatch + one host sync
     # covers up to H logical decode steps; replays are offload misses)
+    # shared-prefix KV reuse (repro.serving.kvcache.PrefixCache): a *hit*
+    # is a fresh admission whose prompt matched a cached prefix —
+    # ``prefix_tokens_saved`` counts the prompt tokens it did not
+    # re-prefill, ``prefix_full_hits`` the admissions that skipped
+    # prefill entirely (full-prompt match, cached first-token logits) —
+    # and ``cow_copies`` the partial tail pages duplicated
+    # copy-on-write. Misses are fresh admissions checked against an
+    # enabled cache that matched nothing.
+    prefix_hits: int = 0
+    prefix_misses: int = 0
+    prefix_full_hits: int = 0
+    prefix_tokens_saved: int = 0
+    cow_copies: int = 0
     megasteps: int = 0
     megastep_logical_steps: List[int] = dataclasses.field(default_factory=list)
     decode_compute_s: List[float] = dataclasses.field(default_factory=list)
@@ -203,6 +216,25 @@ class ServingMetrics:
     def record_expert_residency(self, nbytes: int) -> None:
         self.expert_resident_bytes.append(int(nbytes))
 
+    def record_prefix_hit(self, tokens_saved: int, full: bool = False) -> None:
+        """One fresh admission reused a cached prefix: ``tokens_saved``
+        prompt tokens skipped prefill; ``full`` means the whole prompt
+        (and its first-token logits) was cached — zero prefill
+        dispatches for the request."""
+        self.prefix_hits += 1
+        self.prefix_tokens_saved += int(tokens_saved)
+        if full:
+            self.prefix_full_hits += 1
+
+    def record_prefix_miss(self) -> None:
+        """One fresh admission probed an enabled prefix cache and
+        matched nothing (it prefills fully, then registers)."""
+        self.prefix_misses += 1
+
+    def record_cow_copy(self) -> None:
+        """One copy-on-write duplication of a shared partial tail page."""
+        self.cow_copies += 1
+
     # ----------------------------------------------------------- derived
     @property
     def mid_flight_admissions(self) -> int:
@@ -251,6 +283,11 @@ class ServingMetrics:
             "expert_miss_bytes": self.expert_miss_bytes,
             "expert_prefetch_bytes": self.expert_prefetch_bytes,
             "expert_resident_bytes": list(self.expert_resident_bytes),
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_full_hits": self.prefix_full_hits,
+            "prefix_tokens_saved": self.prefix_tokens_saved,
+            "cow_copies": self.cow_copies,
             "megasteps": self.megasteps,
             "megastep_logical_steps": list(self.megastep_logical_steps),
             "decode_dispatches": self.decode_dispatches,
@@ -302,6 +339,15 @@ class ServingMetrics:
                 int(self.expert_resident_bytes[-1])
                 if self.expert_resident_bytes else 0
             ),
+            "prefix_hits": int(self.prefix_hits),
+            "prefix_misses": int(self.prefix_misses),
+            "prefix_full_hits": int(self.prefix_full_hits),
+            "prefix_tokens_saved": int(self.prefix_tokens_saved),
+            "prefix_hit_rate": (
+                self.prefix_hits / (self.prefix_hits + self.prefix_misses)
+                if (self.prefix_hits + self.prefix_misses) else None
+            ),
+            "cow_copies": int(self.cow_copies),
             "megasteps": int(self.megasteps),
             "decode_compute_mean_s": _mean(self.decode_compute_s),
             "decode_offload_mean_s": _mean(self.decode_offload_s),

@@ -50,6 +50,14 @@ class Request:
     preempt_count: int = 0
     swapped: Optional[SwappedKV] = None  # host KV while preempted (swap mode)
     arrival_s: float = 0.0  # wall-clock submit time (TTFT anchor)
+    # ---- shared-prefix admission (set by try_admit on a cache hit) ----
+    # prompt tokens whose KV the slot received from the prefix cache
+    # (shared or COW-copied pages) — prefill starts at this offset
+    cached_tokens: int = 0
+    # final-prompt-token logits from a *full*-prompt cache hit: the
+    # engine skips prefill entirely and derives the first token from
+    # this array (bit-identical to what prefill would have computed)
+    cached_logits: Optional[np.ndarray] = None
 
     @property
     def total_tokens(self) -> int:
@@ -163,18 +171,47 @@ class Scheduler:
         accumulated context; ``reserve_full`` needs ``prompt + max_new``
         either way. Pages already promised to active slots' growth
         (:meth:`growth_reserve`) are off limits.
+
+        **Shared-prefix reuse.** A fresh request (never preempted —
+        resumed requests rebuild private pages, so swap-in never writes
+        a shared one) probes the prefix cache first: a hit shares the
+        match's page-aligned pages copy-on-write, shrinking both the
+        page bill and the prefill work to the non-cached suffix. A
+        full-prompt match without cached logits is *demoted* to
+        ``prompt[:-1]`` — at least one token must stream through prefill
+        to produce first-token logits, and its KV rewrite must land on a
+        private page, never a shared one.
         """
         if not self.waiting:
             return None
         req = self.waiting[0]
+        entry = None
+        if req.pos == 0 and req.swapped is None:
+            entry = self.cache.prefix_lookup(req.prompt)
+            if (
+                entry is not None
+                and entry.n_tokens == len(req.prompt)
+                and entry.last_logits is None
+            ):
+                entry = self.cache.prefix_lookup(req.prompt[:-1])
         tokens = (
             req.total_tokens if self.reserve_full
             else req.context_tokens + req.next_decode_writes(self.horizon)
         )
-        if not self.cache.can_admit(tokens, headroom=self.growth_reserve()):
+        if not self.cache.can_admit(
+            tokens, headroom=self.growth_reserve(), prefix_entry=entry
+        ):
             return None
         self.waiting.popleft()
-        req.slot = self.cache.acquire_slot(tokens)
+        req.slot = self.cache.acquire_slot(
+            tokens, prefix_entry=entry, rid=req.rid
+        )
+        if entry is not None:
+            req.cached_tokens = entry.n_tokens
+            req.cached_logits = (
+                entry.last_logits
+                if entry.n_tokens == len(req.prompt) else None
+            )
         req.admit_step = step_idx
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
@@ -209,6 +246,10 @@ class Scheduler:
             self.cache.release_slot(slot)
         req.slot = -1
         req.preempt_count += 1
+        # a resumed request rebuilds fully private pages — drop any
+        # prefix-admission state so re-prefill streams the whole context
+        req.cached_tokens = 0
+        req.cached_logits = None
         self.waiting.appendleft(req)
         return req
 

@@ -336,6 +336,14 @@ class MetricsConsumer:
             )
         elif kind == "swap_in":
             m.record_swap_in(f["nbytes"])
+        elif kind == "prefix_hit":
+            m.record_prefix_hit(
+                f["tokens_saved"], full=f.get("full", False)
+            )
+        elif kind == "prefix_miss":
+            m.record_prefix_miss()
+        elif kind == "cow_copy":
+            m.record_cow_copy()
         # other kinds (enqueue, first_token, …) carry no metric state
 
 

@@ -17,6 +17,25 @@ _HERE = str(pathlib.Path(__file__).resolve().parent)
 if _HERE not in sys.path:
     sys.path.insert(0, _HERE)
 
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Drop jit/pjit executable caches after each test module.
+
+    The suite compiles hundreds of distinct XLA:CPU programs (per-shape
+    engines, Pallas interpret traces, dense references); keeping every
+    executable alive for the whole session eventually segfaults the
+    XLA CPU compiler on small runners. Per-module clearing bounds the
+    live-executable set without recompiling within a module.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 try:
     from hypothesis import HealthCheck, settings
 

@@ -11,10 +11,18 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.packing import PackedTensor
-from repro.core.quantizers import quantize_to_packed
+from repro.core.quantizers import (
+    dequantize_kv_rows,
+    quantize_kv_rows,
+    quantize_to_packed,
+)
 from repro.kernels import ops, ref
 from repro.kernels.binary_matmul import binary_matmul_pallas
 from repro.kernels.moe_gmm import pad_groups, sort_by_expert
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_attention_quant_pallas,
+)
 from repro.kernels.quant_matmul import quant_matmul_pallas
 
 
@@ -182,3 +190,112 @@ def test_pad_groups_capacity_drop():
     assert list(np.asarray(be)) == [0, 1]
     rm = np.asarray(row_map)
     assert (rm[:5] == np.arange(5)).all() and rm[5] == 8
+
+
+# ------------------------------------------- paged attention, int8 KV pools
+def _mk_paged(seed, b=3, hkv=2, g=2, dh=16, nb=16, bs=4, mb=4,
+              ragged=True):
+    """Random decode-attention problem over disjoint physical pages (the
+    allocator never double-books a page across live sequences)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, dh)), jnp.float32)
+    kf = jnp.asarray(rng.normal(size=(nb, bs, hkv, dh)), jnp.float32)
+    vf = jnp.asarray(rng.normal(size=(nb, bs, hkv, dh)), jnp.float32)
+    tables = jnp.asarray(
+        rng.permutation(nb)[: b * mb].reshape(b, mb), jnp.int32
+    )
+    if ragged:  # each sequence a different logical length (partial pages)
+        lengths = jnp.asarray(rng.integers(1, mb * bs + 1, size=b), jnp.int32)
+    else:
+        lengths = jnp.full((b,), mb * bs, jnp.int32)
+    return q, kf, vf, tables, lengths
+
+
+def _quantize_pools(kf, vf):
+    kc, ks, kz = quantize_kv_rows(kf, 8)
+    vc, vs, vz = quantize_kv_rows(vf, 8)
+    return kc, vc, (ks, kz, vs, vz)
+
+
+@pytest.mark.parametrize("ragged", [False, True])
+def test_paged_attention_quant_kernel_matches_ref(ragged):
+    q, kf, vf, tables, lengths = _mk_paged(3, ragged=ragged)
+    kc, vc, quant = _quantize_pools(kf, vf)
+    y_ref = ref.paged_attention_ref(q, kc, vc, tables, lengths, quant=quant)
+    win = jnp.full((1,), 10**6, jnp.int32)
+    y = paged_attention_quant_pallas(
+        q, kc, vc, *quant, tables, lengths, win, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_quant_ref_bitwise_vs_dequantized_fp_ref():
+    """The quant oracle must equal "dequantize the pools, then run the fp
+    oracle" **bitwise**: both apply the same ``(codes − zero) × scale``
+    f32 expression per row, and gathering commutes with a per-row map —
+    this is the invariant that lets every reader (ref, kernel epilogue,
+    prefill dequant-gather) see identical floats."""
+    q, kf, vf, tables, lengths = _mk_paged(11)
+    kc, vc, quant = _quantize_pools(kf, vf)
+    ks, kz, vs, vz = quant
+    y_q = ref.paged_attention_ref(q, kc, vc, tables, lengths, quant=quant)
+    y_fp = ref.paged_attention_ref(
+        q, dequantize_kv_rows(kc, ks, kz), dequantize_kv_rows(vc, vs, vz),
+        tables, lengths,
+    )
+    assert np.array_equal(np.asarray(y_q), np.asarray(y_fp))
+
+
+def test_paged_attention_quant_window_matches_ref():
+    q, kf, vf, tables, lengths = _mk_paged(17)
+    kc, vc, quant = _quantize_pools(kf, vf)
+    y_ref = ref.paged_attention_ref(
+        q, kc, vc, tables, lengths, window=5, quant=quant
+    )
+    y = paged_attention_quant_pallas(
+        q, kc, vc, *quant, tables, lengths,
+        jnp.full((1,), 5, jnp.int32), interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_quant_roundtrip_accuracy():
+    # int8 per-row codes should track the fp attention output closely —
+    # a sanity bound on quantization noise, not a bit-identity claim
+    q, kf, vf, tables, lengths = _mk_paged(23)
+    kc, vc, quant = _quantize_pools(kf, vf)
+    y_q = ref.paged_attention_ref(q, kc, vc, tables, lengths, quant=quant)
+    y_fp = ref.paged_attention_ref(q, kf, vf, tables, lengths)
+    np.testing.assert_allclose(np.asarray(y_q), np.asarray(y_fp),
+                               rtol=0.15, atol=0.05)
+
+
+def test_paged_attention_ops_dispatch_quant():
+    """ops.paged_attention routes quant pools to the quant kernel and the
+    quant oracle; the fp path stays byte-for-byte the historical one."""
+    q, kf, vf, tables, lengths = _mk_paged(29)
+    kc, vc, quant = _quantize_pools(kf, vf)
+    y_ref = ops.paged_attention(q, kc, vc, tables, lengths,
+                                backend="ref", quant=quant)
+    y_int = ops.paged_attention(q, kc, vc, tables, lengths,
+                                backend="interpret", quant=quant)
+    np.testing.assert_allclose(np.asarray(y_int), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+    # fp dispatch is unchanged by the quant plumbing
+    y_fp_ref = ops.paged_attention(q, kf, vf, tables, lengths, backend="ref")
+    y_fp_int = ops.paged_attention(q, kf, vf, tables, lengths,
+                                   backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_fp_int), np.asarray(y_fp_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_quantize_kv_rows_zero_rows_roundtrip_exact():
+    # unwritten pool pages are all-zero; they must dequantize to exact
+    # zeros or page-granular admission would perturb masked-out lanes
+    z = jnp.zeros((4, 4, 2, 16), jnp.float32)
+    codes, scale, zero = quantize_kv_rows(z, 8)
+    assert np.array_equal(np.asarray(codes), np.zeros_like(codes))
+    out = dequantize_kv_rows(codes, scale, zero)
+    assert np.array_equal(np.asarray(out), np.zeros_like(z))

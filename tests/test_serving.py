@@ -18,9 +18,12 @@ from repro.serving import (
     PagedKVCache,
     PagedServingEngine,
     PoolExhausted,
+    PrefixCache,
     Request,
 )
 from repro.serving.engine import dense_greedy_reference
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
 
 TINY_MOE = ModelConfig(
     name="tiny-serving-moe",
@@ -136,6 +139,201 @@ def test_kvcache_slot_lifecycle():
     assert slot in cache.free_slots
 
 
+# ----------------------------------------------- COW refcount invariants
+def test_allocator_incref_shares_and_defers_free():
+    a = BlockAllocator(4)
+    blocks = a.alloc(2)
+    a.incref(blocks)  # a second holder (e.g. a prefix-cache entry)
+    assert all(a.refcount(b) == 2 for b in blocks)
+    a.free(blocks)  # first holder releases: pages stay allocated
+    assert a.num_free == 2 and a.allocated == frozenset(blocks)
+    a.free(blocks)  # last holder releases: pages recycle
+    assert a.num_free == 4 and a.allocated == frozenset()
+    with pytest.raises(ValueError):
+        a.free([blocks[0]])  # refcount-0 page: double free
+    with pytest.raises(ValueError):
+        a.incref([blocks[0]])  # cannot share a free page
+
+
+def test_allocator_incref_is_atomic():
+    a = BlockAllocator(4)
+    good = a.alloc(2)
+    with pytest.raises(ValueError):
+        a.incref([good[0], 99])  # one bad page: nothing increments
+    assert all(a.refcount(b) == 1 for b in good)
+
+
+if HAS_HYPOTHESIS:
+    def _op_seqs():
+        return st.lists(
+            st.tuples(
+                st.sampled_from(["alloc", "incref", "free"]),
+                st.integers(0, 2**16),
+            ),
+            max_size=40,
+        )
+else:  # decoration-time stand-in; the test collects as skipped
+    def _op_seqs():
+        return None
+
+
+@given(ops=_op_seqs())
+@settings()
+def test_property_cow_refcounts_never_corrupt(ops):
+    """Hypothesis: under ANY interleaving of alloc / incref / free the
+    allocator never double-frees, never frees a page whose refcount is
+    still positive, mirrors an exact shadow refcount map, and conserves
+    ``free + allocated == num_blocks`` — then drains back to fully
+    free."""
+    a = BlockAllocator(12)
+    shadow: dict = {}
+    for kind, seed in ops:
+        rng = np.random.default_rng(seed)
+        live = sorted(shadow)
+        if kind == "alloc":
+            n = int(rng.integers(0, 5))
+            if n > a.num_free:
+                with pytest.raises(PoolExhausted):
+                    a.alloc(n)
+            else:
+                got = a.alloc(n)
+                assert len(set(got)) == n
+                assert not set(got) & set(shadow), "handed out a live page"
+                for b in got:
+                    shadow[b] = 1
+        elif kind == "incref" and live:
+            picks = [b for b in live if rng.integers(0, 2)]
+            a.incref(picks)
+            for b in picks:
+                shadow[b] += 1
+        elif kind == "free" and live:
+            picks = [b for b in live if rng.integers(0, 2)]
+            a.free(picks)
+            for b in picks:
+                shadow[b] -= 1
+                if shadow[b] == 0:
+                    del shadow[b]
+        assert a.num_free + len(a.allocated) == a.num_blocks
+        assert a.allocated == frozenset(shadow)
+        assert len(set(a.free_pages)) == len(a.free_pages)
+        assert not set(a.free_pages) & set(shadow), "page free AND held"
+        for b, rc in shadow.items():
+            assert a.refcount(b) == rc
+    while shadow:  # drain every remaining hold, one per page per call
+        live = sorted(shadow)
+        a.free(live)
+        for b in live:
+            shadow[b] -= 1
+            if shadow[b] == 0:
+                del shadow[b]
+    assert a.num_free == a.num_blocks
+
+
+# ----------------------------------------------------- prefix page cache
+def test_prefix_cache_register_lookup_roundtrip():
+    a = BlockAllocator(16)
+    pc = PrefixCache(a, 4)
+    prompt = np.arange(10, dtype=np.int32)  # 2 full pages + 2-token tail
+    blocks = a.alloc(3)
+    assert pc.register(prompt, blocks, last_logits=np.ones(7)) == 3
+    ent = pc.lookup(prompt)  # full-prompt entry carries the logits
+    assert ent.n_tokens == 10 and ent.last_logits is not None
+    longer = np.concatenate([prompt[:8], np.asarray([99, 98], np.int32)])
+    ent2 = pc.lookup(longer)  # diverging suffix → longest boundary entry
+    assert ent2.n_tokens == 8 and ent2.last_logits is None
+    assert pc.lookup(np.asarray([50] * 6, np.int32)) is None
+    # page 0 is held by the slot + all three entries; re-registration
+    # must not leak holds
+    assert a.refcount(blocks[0]) == 4
+    assert pc.register(prompt, blocks) == 0
+    assert a.refcount(blocks[0]) == 4
+    pc.check_consistency()
+
+
+def test_prefix_cache_lru_eviction_and_protect():
+    a = BlockAllocator(6)
+    pc = PrefixCache(a, 4)
+    b1 = a.alloc(1)
+    pc.register(np.arange(4, dtype=np.int32), b1, last_logits=np.zeros(2))
+    b2 = a.alloc(1)
+    pc.register(np.arange(10, 14, dtype=np.int32), b2,
+                last_logits=np.zeros(2))
+    a.free(b1)
+    a.free(b2)  # slots done: pages are cache-held only
+    assert a.num_free == 4
+    pc.lookup(np.arange(4, dtype=np.int32))  # refresh entry 1 → 2 is LRU
+    pc.evict_for(5)
+    assert a.num_free == 5
+    assert pc.lookup(np.arange(10, 14, dtype=np.int32)) is None
+    assert pc.lookup(np.arange(4, dtype=np.int32)) is not None
+    # the survivor's pages are protected: eviction must leave it alone
+    pc.evict_for(6, protect=frozenset(b1))
+    assert a.num_free == 5 and pc.n_entries == 1  # boundary == full entry
+    pc.check_consistency()
+
+
+def test_prefix_cache_reclaimable_is_exact():
+    a = BlockAllocator(8)
+    pc = PrefixCache(a, 4)
+    b = a.alloc(2)
+    pc.register(np.arange(8, dtype=np.int32), b, last_logits=np.zeros(2))
+    # the owning slot is still live: eviction would drop holds but free
+    # no page — reclaimable must say 0, not 2
+    assert pc.reclaimable() == 0
+    a.free(b)
+    assert pc.reclaimable() == 2
+    # protecting the entry's pages removes them from the count entirely
+    assert pc.reclaimable(frozenset({b[0]})) == 0
+
+
+def test_acquire_slot_shared_prefix_cow():
+    cache = PagedKVCache.create(
+        TINY_MOE, num_blocks=8, block_size=4, max_slots=2,
+        max_blocks_per_slot=8, prefix_cache=True,
+    )
+    prompt = np.arange(6, dtype=np.int32)  # 1 full page + 2-token tail
+    slot = cache.acquire_slot(6)
+    blocks0 = list(cache.slot_blocks[slot])
+    cache.register_prefix(prompt, slot, last_logits=np.zeros(3))
+    ent = cache.prefix_lookup(prompt)
+    assert ent is not None and ent.n_tokens == 6
+    slot2 = cache.acquire_slot(8, prefix_entry=ent, rid=7)
+    blocks2 = cache.slot_blocks[slot2]
+    assert blocks2[0] == blocks0[0], "aligned page must be shared"
+    assert blocks2[1] != blocks0[1], "tail page must be a private copy"
+    # page 0: slot1 + slot2 + two cache entries (boundary at 4, full at 6)
+    assert cache.allocator.refcount(blocks0[0]) == 4
+    cache.check_consistency()
+    cache.release_slot(slot)
+    cache.release_slot(slot2)
+    cache.check_consistency()  # cache holds keep the pages alive
+    assert cache.allocator.num_free < 8
+    cache.clear_prefix_cache()
+    assert cache.allocator.num_free == 8
+
+
+def test_kvcache_kv_bits_validation_and_quant_swap_guard():
+    with pytest.raises(ValueError):
+        PagedKVCache.create(
+            TINY_MOE, num_blocks=4, block_size=4, max_slots=1,
+            max_blocks_per_slot=4, kv_bits=4,
+        )
+    cache = PagedKVCache.create(
+        TINY_MOE, num_blocks=4, block_size=4, max_slots=2,
+        max_blocks_per_slot=2, kv_bits=8,
+    )
+    assert cache.k.dtype == jnp.uint8
+    assert set(cache.quant) == {"k_scale", "k_zero", "v_scale", "v_zero"}
+    slot = cache.acquire_slot(4)
+    sw = cache.swap_out(slot, 4)
+    assert sw.quant is not None  # scales travel with the codes
+    slot2 = cache.acquire_slot(4)
+    with pytest.raises(ValueError):
+        cache.swap_in(slot2, dataclasses.replace(sw, quant=None))
+    cache.swap_in(slot2, sw)  # the genuine payload restores fine
+    cache.release_slot(slot2)
+
+
 # ------------------------------------------------- paged attention kernel
 @pytest.mark.parametrize("window", [None, 7])
 def test_paged_attention_pallas_matches_ref(window):
@@ -176,8 +374,8 @@ def test_paged_matches_dense_logits(model):
         n = min(c, len(prompt) - off)
         chunk = np.zeros((1, c), np.int32)
         chunk[0, :n] = prompt[off : off + n]
-        cache.k, cache.v, logits, _ = eng._prefill(
-            params, cache.k, cache.v, jnp.asarray(chunk),
+        cache.k, cache.v, _, logits, _ = eng._prefill(
+            params, cache.k, cache.v, cache.quant, jnp.asarray(chunk),
             jnp.int32(off), jnp.int32(n), table_row,
         )
     np.testing.assert_allclose(

@@ -95,7 +95,15 @@ def moe_model():
 # ------------------------------------------------------------ trace spec
 @dataclasses.dataclass(frozen=True)
 class Trace:
-    """One simulated workload: request shapes + arrival steps + pool."""
+    """One simulated workload: request shapes + arrival steps + pool.
+
+    ``template_len > 0`` switches prompts to the **shared-template**
+    shape (system-prompt workloads): request ``i`` is one of
+    ``n_templates`` fixed ``template_len``-token prefixes followed by
+    ``prompt_lens[i]`` random suffix tokens — the workload the
+    shared-prefix KV cache (``prefix_cache=True``) is built for, and
+    the adversarial one for it when the cache is off. Suffixes of
+    length 0 repeat a template verbatim (full-prompt hits)."""
 
     prompt_lens: tuple
     max_news: tuple
@@ -104,31 +112,43 @@ class Trace:
     preempt_mode: str
     max_slots: int = 3
     horizon: int = 1  # fused decode megastep length (H)
+    template_len: int = 0  # shared-prefix template tokens (0 = disjoint)
+    n_templates: int = 1
+    prefix_cache: bool = False
+
+    @property
+    def full_lens(self) -> tuple:
+        return tuple(self.template_len + p for p in self.prompt_lens)
 
     def requests(self, vocab: int):
         rng = np.random.default_rng(1234)  # prompts derive from the shape
-        return [
-            Request(
-                rid=i,
-                prompt=rng.integers(0, vocab, size=p).astype(np.int32),
-                max_new=m,
-            )
-            for i, (p, m) in enumerate(zip(self.prompt_lens, self.max_news))
+        templates = [
+            rng.integers(0, vocab, size=self.template_len).astype(np.int32)
+            for _ in range(self.n_templates)
         ]
+        reqs = []
+        for i, (p, m) in enumerate(zip(self.prompt_lens, self.max_news)):
+            suffix = rng.integers(0, vocab, size=p).astype(np.int32)
+            prompt = (
+                np.concatenate([templates[i % self.n_templates], suffix])
+                if self.template_len else suffix
+            )
+            reqs.append(Request(rid=i, prompt=prompt, max_new=m))
+        return reqs
 
     @property
     def min_pool(self) -> int:
         """Smallest pool that admits the largest single request."""
         return max(
             -(-(p + m) // BLOCK)
-            for p, m in zip(self.prompt_lens, self.max_news)
+            for p, m in zip(self.full_lens, self.max_news)
         )
 
     @property
     def demand(self) -> int:
         return sum(
             -(-(p + m) // BLOCK)
-            for p, m in zip(self.prompt_lens, self.max_news)
+            for p, m in zip(self.full_lens, self.max_news)
         )
 
 
@@ -154,7 +174,7 @@ def run_trace(cfg, params, trace: Trace, **ecfg_kw):
     invariants throughout. Returns the finished engine. ``ecfg_kw``
     passes extra :class:`EngineConfig` fields through (e.g.
     ``trace_level`` for the span-tracer determinism tests)."""
-    mb = -(-(max(p + m for p, m in zip(trace.prompt_lens, trace.max_news)))
+    mb = -(-(max(p + m for p, m in zip(trace.full_lens, trace.max_news)))
            // BLOCK)
     engine = PagedServingEngine(
         cfg, params,
@@ -166,6 +186,7 @@ def run_trace(cfg, params, trace: Trace, **ecfg_kw):
             prefill_chunk=BLOCK,
             preempt_mode=trace.preempt_mode,
             decode_horizon=trace.horizon,
+            prefix_cache=trace.prefix_cache,
             **ecfg_kw,
         ),
     )
@@ -182,11 +203,21 @@ def run_trace(cfg, params, trace: Trace, **ecfg_kw):
             engine.step()
             check_invariants(engine)
         tick += 1
-    # drained: everything finished, every page and slot returned
+    # drained: everything finished; every page is either free or held
+    # *only* by the prefix cache (ready for the next batch), and a cache
+    # teardown returns the pool to fully free
     assert not engine.scheduler.active and not engine.scheduler.waiting
-    assert engine.cache.allocator.num_free == trace.pool_blocks
-    assert sorted(engine.cache.free_slots) == list(range(trace.max_slots))
-    assert engine.cache.slot_blocks == {}
+    cache = engine.cache
+    held = cache.prefix.pages_held if cache.prefix is not None else frozenset()
+    assert cache.allocator.allocated == held, (
+        "drained pool holds pages unreachable from the prefix cache"
+    )
+    assert cache.allocator.num_free + len(held) == trace.pool_blocks
+    assert sorted(cache.free_slots) == list(range(trace.max_slots))
+    assert cache.slot_blocks == {}
+    cache.check_consistency()
+    cache.clear_prefix_cache()
+    assert cache.allocator.num_free == trace.pool_blocks
     return engine
 
 
@@ -223,7 +254,10 @@ def _random_trace(rng: np.random.Generator) -> Trace:
     submit_steps = tuple(sorted(int(x) for x in rng.integers(0, 6, n)))
     t = Trace(prompt_lens, max_news, submit_steps, 0,
               str(rng.choice(["swap", "recompute"])),
-              horizon=int(rng.choice([1, 2, 4, 8])))
+              horizon=int(rng.choice([1, 2, 4, 8])),
+              template_len=int(rng.choice([0, 0, 4, 8])),
+              n_templates=int(rng.integers(1, 3)),
+              prefix_cache=bool(rng.integers(0, 2)))
     lo, hi = t.min_pool, max(t.min_pool + 1, t.demand)
     pool = int(rng.integers(lo, hi + 1))
     return dataclasses.replace(t, pool_blocks=pool)
@@ -323,8 +357,12 @@ if HAS_HYPOTHESIS:
     @st.composite
     def traces(draw):
         n = draw(st.integers(min_value=2, max_value=5))
+        template_len = draw(st.sampled_from([0, 4, 8]))
+        # suffixes may be empty under a template (verbatim repeats →
+        # full-prompt cache hits); standalone prompts must be non-empty
+        min_suffix = 0 if template_len else 1
         prompt_lens = tuple(
-            draw(st.lists(st.integers(1, 8), min_size=n, max_size=n))
+            draw(st.lists(st.integers(min_suffix, 8), min_size=n, max_size=n))
         )
         max_news = tuple(
             draw(st.lists(st.integers(1, 8), min_size=n, max_size=n))
@@ -334,7 +372,10 @@ if HAS_HYPOTHESIS:
         )
         t = Trace(prompt_lens, max_news, submit_steps, 0,
                   draw(st.sampled_from(["swap", "recompute"])),
-                  horizon=draw(st.sampled_from([1, 2, 4, 8])))
+                  horizon=draw(st.sampled_from([1, 2, 4, 8])),
+                  template_len=template_len,
+                  n_templates=draw(st.integers(1, 2)) if template_len else 1,
+                  prefix_cache=draw(st.booleans()))
         pool = draw(
             st.integers(t.min_pool, max(t.min_pool, t.demand))
         )
@@ -347,12 +388,120 @@ else:  # decoration-time stand-in; the test below collects as skipped
 @given(trace=traces())
 @settings()  # example counts/deadline come from the conftest profiles
 def test_property_any_pool_any_schedule(dense_model, trace):
-    """Hypothesis: for ANY arrival trace, ANY pool size that admits the
-    largest single request and ANY decode horizon, the engine drains
-    with all invariants intact and emits bit-identical greedy outputs."""
+    """Hypothesis: for ANY arrival trace (shared-template prompts
+    included), ANY pool size that admits the largest single request,
+    ANY decode horizon, and the prefix cache on or off, the engine
+    drains with all invariants intact and emits bit-identical greedy
+    outputs."""
     cfg, params = dense_model
     engine = run_trace(cfg, params, trace)
     assert_outputs_match_reference(cfg, params, engine, trace)
+
+
+# ----------------------------------------------- shared-prefix KV reuse
+@pytest.mark.parametrize("horizon", [1, 4, 8])
+@pytest.mark.parametrize("preempt_mode", ["swap", "recompute"])
+def test_shared_prefix_cache_invisible_under_pressure(
+    dense_model, horizon, preempt_mode
+):
+    """Acceptance (tentpole a): a shared-template trace through a
+    pressured pool decodes **bit-identically with the prefix cache on
+    and off** across horizons and preemption modes — KV reuse, COW page
+    sharing and cache eviction must be invisible to what any request
+    decodes — while the cache-on run actually reuses pages (hits >
+    0, prefill tokens saved) and keeps every refcount invariant
+    (checked after each step by ``run_trace``)."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(21)
+    n = 8
+    base = Trace(
+        prompt_lens=tuple(int(x) for x in rng.integers(0, 5, n)),
+        max_news=tuple(int(x) for x in rng.integers(3, 9, n)),
+        submit_steps=tuple(sorted(int(x) for x in rng.integers(0, 4, n))),
+        pool_blocks=0,
+        preempt_mode=preempt_mode,
+        max_slots=4,
+        horizon=horizon,
+        template_len=8,
+        n_templates=2,
+    )
+    pool = max(base.min_pool, (2 * base.demand) // 3)
+    base = dataclasses.replace(base, pool_blocks=pool)
+    eng_off = run_trace(cfg, params, base)
+    eng_on = run_trace(
+        cfg, params, dataclasses.replace(base, prefix_cache=True)
+    )
+    assert eng_on.results == eng_off.results
+    m = eng_on.metrics.summary()
+    assert m["prefix_hits"] >= 1 and m["prefix_tokens_saved"] > 0
+    assert m["prefix_hits"] + m["prefix_misses"] >= n
+    assert_outputs_match_reference(cfg, params, eng_on, base)
+
+
+def test_shared_prefix_full_hits_skip_prefill(dense_model):
+    """Verbatim template repeats (suffix length 0) admit through
+    *full-prompt* hits: the repeats dispatch zero prefill programs —
+    their first token comes from the cached registration-time logits —
+    and still decode bit-identically to the dense reference."""
+    cfg, params = dense_model
+    trace = Trace(
+        prompt_lens=(0,) * 4, max_news=(4,) * 4,
+        submit_steps=(0, 1, 2, 3), pool_blocks=12,
+        preempt_mode="swap", horizon=4, template_len=6, n_templates=1,
+        prefix_cache=True,
+    )
+    engine = run_trace(cfg, params, trace)
+    assert_outputs_match_reference(cfg, params, engine, trace)
+    m = engine.metrics.summary()
+    assert m["prefix_full_hits"] == 3  # every admission after the first
+    # prefill ran only for the first request: ceil(6 / BLOCK) chunks
+    assert m["prefill_dispatches"] == -(-6 // BLOCK)
+
+
+@pytest.mark.parametrize("kv_bits", [None, 8])
+def test_quantized_template_trace_matches_isolated_oracle(
+    moe_model, kv_bits
+):
+    """Acceptance (tentpole b): an int8-KV engine under template
+    sharing + pool pressure emits exactly the tokens each request gets
+    when served **alone** in a fresh single-slot engine of the same
+    ``kv_bits`` (different page geometry) — batch-composition
+    independence, the repo's core invariant, carried over to quantized
+    pools. ``kv_bits=None`` pins the fp leg of the same trace to the
+    dense oracle."""
+    from repro.serving import quantized_greedy_reference
+
+    cfg, params = moe_model
+    rng = np.random.default_rng(5)
+    n = 6
+    base = Trace(
+        prompt_lens=tuple(int(x) for x in rng.integers(1, 5, n)),
+        max_news=tuple(int(x) for x in rng.integers(3, 8, n)),
+        submit_steps=(0,) * n,
+        pool_blocks=0,
+        preempt_mode="swap",
+        max_slots=4,
+        horizon=4,
+        template_len=4,
+        n_templates=2,
+        prefix_cache=True,
+    )
+    base = dataclasses.replace(
+        base, pool_blocks=max(base.min_pool, (2 * base.demand) // 3)
+    )
+    engine = run_trace(cfg, params, base, kv_bits=kv_bits)
+    if kv_bits is None:
+        assert_outputs_match_reference(cfg, params, engine, base)
+        return
+    for req in base.requests(cfg.vocab_size):
+        ref = quantized_greedy_reference(
+            cfg, params, req.prompt, req.max_new, kv_bits=kv_bits,
+            block_size=8,  # page geometry must not enter the math
+        )
+        assert engine.results[req.rid] == ref, (
+            f"rid={req.rid}: quantized engine diverged from its "
+            f"isolated-oracle tokens"
+        )
 
 
 # ------------------------------------------------- flagship: 50% pool
