@@ -25,7 +25,13 @@ The default path is :class:`repro.serving.engine.PagedServingEngine`:
   Perfetto-viewable Chrome trace + JSONL event log; ``--trace-level``
   picks the detail) and expert-routing telemetry incl. the
   bit-misallocation report (:mod:`repro.serving.trace`,
-  docs/observability.md).
+  docs/observability.md),
+* multi-tenant scheduling policy (``--policy fcfs|priority|fair``,
+  ``--tenant-weights a=2,b=1`` for weighted-deficit token fairness,
+  ``--ttft-budget-ms`` for SLO load shedding) executed through the
+  declarative resource controller — every admit/preempt/grow/shed/
+  expert-upload is a reconciliation plan step
+  (:mod:`repro.serving.controller`, docs/serving_scheduling.md).
 
 :class:`BatchedServer` is the legacy static *wave* batcher kept for
 comparison (``--legacy``): it pads every wave with dummy requests and
@@ -159,6 +165,27 @@ def _compress_for_serving(cfg, params):
     return params_c
 
 
+def _parse_tenant_weights(spec: str):
+    """Parse ``"name=w,name=w"`` into the hashable pair tuple
+    EngineConfig carries; refuses empty names, repeats, and w <= 0."""
+    pairs = []
+    seen = set()
+    for item in spec.split(","):
+        name, eq, w = item.partition("=")
+        try:
+            weight = float(w)
+        except ValueError:
+            weight = -1.0
+        if not name or not eq or weight <= 0 or name in seen:
+            raise SystemExit(
+                "--tenant-weights expects 'name=w,name=w' with unique "
+                f"names and w > 0 (got {spec!r})"
+            )
+        seen.add(name)
+        pairs.append((name, weight))
+    return tuple(pairs)
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", choices=ARCH_IDS, default="moonshot-v1-16b-a3b")
@@ -216,6 +243,23 @@ def main() -> None:
                         "f32 scales (~2.7x KV tokens per device byte at "
                         "head_dim 16; greedy outputs stay batch-"
                         "composition independent — see docs/serving_kv.md)")
+    p.add_argument("--policy", choices=["fcfs", "priority", "fair"],
+                   default=None,
+                   help="admission-order policy: arrival order, strict "
+                        "priority classes, or weighted-deficit token "
+                        "fairness across tenants (WDRR; see "
+                        "docs/serving_scheduling.md); outputs are bit-"
+                        "identical across policies")
+    p.add_argument("--tenant-weights", type=str, default=None,
+                   metavar="T=W,...",
+                   help="per-tenant fairness weights for --policy fair, "
+                        "e.g. 'batch=1,interactive=4'; demo requests are "
+                        "assigned round-robin over the named tenants")
+    p.add_argument("--ttft-budget-ms", type=float, default=None,
+                   metavar="MS",
+                   help="SLO admission budget: shed (reject with empty "
+                        "output) any never-admitted request that has "
+                        "waited longer than MS for its first token")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
     p.add_argument("--trace-out", type=str, default=None, metavar="PATH",
@@ -238,6 +282,20 @@ def main() -> None:
         # silently emit an empty trace
         raise SystemExit("--trace-out/--trace-level require the paged "
                          "engine (drop --legacy)")
+    if args.legacy and (args.policy or args.tenant_weights
+                        or args.ttft_budget_ms is not None):
+        # scheduling policy lives in the controller loop the wave
+        # batcher doesn't run
+        raise SystemExit("--policy/--tenant-weights/--ttft-budget-ms "
+                         "require the paged engine (drop --legacy)")
+    if args.tenant_weights and (args.policy or "fcfs") != "fair":
+        raise SystemExit("--tenant-weights only applies to --policy fair")
+    if args.ttft_budget_ms is not None and args.ttft_budget_ms < 0:
+        raise SystemExit("--ttft-budget-ms must be >= 0")
+    tenant_weights = (
+        _parse_tenant_weights(args.tenant_weights)
+        if args.tenant_weights else None
+    )
     trace_level = args.trace_level or ("full" if args.trace_out else "off")
     if args.ffn_backend:
         # process default too, so the --legacy wave batcher (no engine
@@ -290,6 +348,12 @@ def main() -> None:
             trace_level=trace_level,
             prefix_cache=args.prefix_cache,
             kv_bits=args.kv_bits,
+            policy=args.policy or "fcfs",
+            tenant_weights=tenant_weights,
+            ttft_budget_s=(
+                args.ttft_budget_ms / 1000.0
+                if args.ttft_budget_ms is not None else None
+            ),
             **({"decode_horizon": args.decode_horizon}
                if args.decode_horizon is not None else {}),
         ),
@@ -299,9 +363,13 @@ def main() -> None:
         # dropping the caller's reference releases the full-resident
         # device buckets — the memory the budget exists to reclaim
         del params
+    tenant_names = (
+        [t for t, _ in tenant_weights] if tenant_weights else ["default"]
+    )
     out = engine.serve(
         [
-            PagedRequest(rid=i, prompt=prompts[i], max_new=args.max_new)
+            PagedRequest(rid=i, prompt=prompts[i], max_new=args.max_new,
+                         tenant=tenant_names[i % len(tenant_names)])
             for i in range(args.requests)
         ]
     )
@@ -310,6 +378,10 @@ def main() -> None:
     print(f"pool pressure: {m['preemptions']} preemptions, "
           f"{m['swap_bytes']} swap bytes, "
           f"page util p95 {m['page_util_p95']:.2f}")
+    print(f"scheduling: policy {engine.ecfg.policy}; {m['sheds']} sheds, "
+          f"{m['preemptions']} preemptions, {m['readmissions']} "
+          f"readmissions, {m['plans']} plans {m['plan_actions']}; "
+          f"tenant tokens {m['tenant_tokens']}")
     if args.prefix_cache:
         print(f"prefix cache: {m['prefix_hits']} hits "
               f"({m['prefix_full_hits']} full), "

@@ -9,8 +9,16 @@ The production serving substrate around the MC# compressed model path
   slots,
 * :mod:`repro.serving.scheduler` — admission queue + continuous batching
   (finished requests free their blocks, queued ones join mid-flight;
-  admission needs prompt-sized pages only, and under pool pressure the
-  youngest/least-progress request is preempted and re-queued at the head),
+  admission needs prompt-sized pages only, and under pool pressure a
+  policy-ordered victim is preempted and re-queued at the head), with
+  multi-tenant policy: priority classes, per-tenant weighted-deficit
+  token fairness, and SLO-budgeted admission (load shedding),
+* :mod:`repro.serving.controller` — the declarative resource
+  controller: one reconciliation loop (observe → target → plan →
+  converge) owning request slots, KV + prefix-cache pages, and
+  resident expert partitions; the engine executes its bounded
+  convergence plans instead of mutating the pools imperatively
+  (docs/serving_scheduling.md),
 * :mod:`repro.serving.engine` — fused decode-horizon megasteps (one
   jitted program advances every slot up to H tokens with on-device
   greedy/temperature sampling and per-slot stop logic — one dispatch +
@@ -33,6 +41,12 @@ The production serving substrate around the MC# compressed model path
   load gauges, and the bit-misallocation report joining observed routing
   frequency against the PMQ bit assignment (see docs/observability.md).
 """
+from .controller import (
+    Observation,
+    PlanAction,
+    ResourceController,
+    TargetState,
+)
 from .engine import (
     EngineConfig,
     PagedServingEngine,
@@ -48,7 +62,7 @@ from .kvcache import (
 )
 from .metrics import ServingMetrics
 from .offload import ExpertOffloadManager
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler, VALID_POLICIES
 from .trace import (
     ExpertRoutingTelemetry,
     MetricsConsumer,
@@ -63,17 +77,22 @@ __all__ = [
     "ExpertOffloadManager",
     "ExpertRoutingTelemetry",
     "MetricsConsumer",
+    "Observation",
     "PagedKVCache",
     "PagedServingEngine",
+    "PlanAction",
     "PoolExhausted",
     "PrefixCache",
     "PrefixEntry",
     "Request",
+    "ResourceController",
     "quantized_greedy_reference",
     "Scheduler",
     "ServingMetrics",
     "SpanTracer",
     "SwappedKV",
+    "TargetState",
+    "VALID_POLICIES",
     "validate_chrome_trace",
     "validate_events",
 ]

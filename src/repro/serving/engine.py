@@ -61,8 +61,9 @@ nothing recompiles.
 ``resident_experts`` set (PMQ params only), cold expert rows live in
 host memory (:class:`repro.serving.offload.ExpertOffloadManager`) and
 the jitted programs read a budget-shaped resident partition. Between
-megasteps the engine prefetches the router-stats-EMA-hottest experts
-alongside ``_ensure_pages``; because routing happens inside the jitted
+megasteps the controller plan uploads the router-stats-EMA-hottest
+experts (an ``upload_experts`` convergence action computed from
+``offload.residency_targets()``); because routing happens inside the jitted
 program, a **miss** is only observable afterwards — from the reported
 ``[H, L, slots]`` dispatch counts, whose step-major flattening is the
 horizon-union working set in computation order. The engine then uploads
@@ -86,16 +87,17 @@ import dataclasses
 import functools
 import os
 import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models import transformer as tf
+from .controller import PlanAction, ResourceController
 from .kvcache import PagedKVCache, PoolExhausted
 from .metrics import ServingMetrics
-from .scheduler import Request, Scheduler
+from .scheduler import Request, Scheduler, VALID_POLICIES
 from .trace import ExpertRoutingTelemetry, MetricsConsumer, SpanTracer
 
 __all__ = [
@@ -241,6 +243,25 @@ class EngineConfig:
     trace_level: str = dataclasses.field(
         default_factory=lambda: os.environ.get("REPRO_TRACE_LEVEL", "off")
     )
+    # Multi-tenant scheduling policy (docs/serving_scheduling.md):
+    # "fcfs" (historical single-tenant behavior), "priority" (classes
+    # first, FCFS within), "fair" (priority + weighted deficit round-
+    # robin over per-tenant decode-token grants). Policies reorder
+    # *when* requests run, never *what* they emit — outputs stay
+    # batch-composition independent under every policy.
+    policy: str = "fcfs"
+    # Per-tenant WDRR weights for policy="fair", as a hashable tuple of
+    # (tenant, weight) pairs (EngineConfig is frozen/hashable); unlisted
+    # tenants weigh 1.0. None ⇒ all tenants weigh 1.0.
+    tenant_weights: Optional[Tuple[Tuple[str, float], ...]] = None
+    # SLO-aware admission: a fresh request that cannot admit at a
+    # boundary after waiting more than this many logical decode steps
+    # (deterministic — the sim/bench budget) or this many wall-clock
+    # seconds (launch/serve's --ttft-budget-ms) is *shed*: removed from
+    # the queue with an empty output and a "shed" lifecycle event,
+    # instead of queueing unboundedly. None disables shedding.
+    ttft_budget_steps: Optional[int] = None
+    ttft_budget_s: Optional[float] = None
 
 
 @functools.lru_cache(maxsize=None)
@@ -325,6 +346,23 @@ class PagedServingEngine:
             raise ValueError(
                 f"temperature must be ≥ 0, got {self.ecfg.temperature}"
             )
+        if self.ecfg.policy not in VALID_POLICIES:
+            raise ValueError(
+                f"policy must be one of {VALID_POLICIES}, "
+                f"got {self.ecfg.policy!r}"
+            )
+        if (
+            self.ecfg.ttft_budget_steps is not None
+            and self.ecfg.ttft_budget_steps < 0
+        ):
+            raise ValueError(
+                f"ttft_budget_steps must be ≥ 0, "
+                f"got {self.ecfg.ttft_budget_steps}"
+            )
+        if self.ecfg.ttft_budget_s is not None and self.ecfg.ttft_budget_s < 0:
+            raise ValueError(
+                f"ttft_budget_s must be ≥ 0, got {self.ecfg.ttft_budget_s}"
+            )
         cfg = self.model_cfg
         # metrics + tracer come first: every downstream component
         # (offload, cache, scheduler) records through the tracer, and the
@@ -367,6 +405,19 @@ class PagedServingEngine:
         self.scheduler = Scheduler(
             self.cache, reserve_full=self.ecfg.reserve_full,
             horizon=self.ecfg.decode_horizon, tracer=self.tracer,
+            policy=self.ecfg.policy,
+            tenant_weights=(
+                dict(self.ecfg.tenant_weights)
+                if self.ecfg.tenant_weights is not None else None
+            ),
+        )
+        # one declarative controller owns slots, pages, and resident
+        # experts: each boundary it observes, reconciles against the
+        # policy's target state, and emits the plan _execute_plan runs
+        self.controller = ResourceController(
+            self.scheduler, offload=self.offload, tracer=self.tracer,
+            ttft_budget_steps=self.ecfg.ttft_budget_steps,
+            ttft_budget_s=self.ecfg.ttft_budget_s,
         )
         self.results: Dict[int, List[int]] = {}
         self._step_idx = 0  # logical decode steps completed
@@ -436,17 +487,18 @@ class PagedServingEngine:
         return dict(self.results)
 
     def step(self) -> bool:
-        """One engine round (megastep boundary): admit what fits,
-        grow/preempt page tables horizon-ahead, then advance every
-        active slot up to ``decode_horizon`` tokens in one fused jitted
-        program. Returns whether work remains — the simulation harness
-        drives this directly to interleave arrivals with decode.
+        """One engine round (megastep boundary): reconcile resources —
+        the controller observes the pools, computes the target state,
+        and emits the convergence plan this engine executes (grow /
+        preempt page tables horizon-ahead, admit or shed waiters,
+        upload experts) — then advance every active slot up to
+        ``decode_horizon`` tokens in one fused jitted program. Returns
+        whether work remains — the simulation harness drives this
+        directly to interleave arrivals with decode.
         """
         if not self.scheduler.has_work():
             return False
-        self._admit_all()
-        self._ensure_pages()
-        self._prefetch_experts()
+        self._converge()
         if not self.scheduler.active:
             if self.scheduler.waiting:
                 # unreachable for pools that admit the largest request
@@ -462,63 +514,125 @@ class PagedServingEngine:
         self._decode_megastep()
         return self.scheduler.has_work()
 
-    # --------------------------------------------------------- admission
-    def _admit_all(self) -> None:
-        while True:
-            active_before = len(self.scheduler.active)
-            # sample the depth before try_admit pops the queue head, so the
-            # recorded value counts the request being admitted (the depth
-            # the admission decision actually saw)
-            depth_before = self.scheduler.queue_depth
-            req = self.scheduler.try_admit(self._step_idx)
-            if req is None:
-                return
-            track = f"slot{req.slot}"
-            # lifecycle events feed the metrics consumer *and* (when
-            # tracing is on) the event log; the flow hop stitches the
-            # request's journey from the queue track onto its slot track
-            self.tracer.lifecycle(
-                "admit", track=track, rid=req.rid, slot=req.slot,
-                step=self._step_idx, active_before=active_before,
-                queue_depth=depth_before, resumed=req.preempt_count > 0,
-            )
-            self.tracer.flow("t", req.rid, track=track)
-            if self.cache.prefix is not None and req.preempt_count == 0:
-                # every fresh admission is a cache probe: hit/miss + the
-                # prefill tokens the shared pages saved (full hits also
-                # skip the first-token logits dispatch entirely)
-                if req.cached_tokens > 0:
-                    self.tracer.lifecycle(
-                        "prefix_hit", track=track, rid=req.rid,
-                        tokens_saved=req.cached_tokens,
-                        full=req.cached_logits is not None,
+    # ----------------------------------------------------- reconciliation
+    def _converge(self) -> None:
+        """One reconciliation pass at a megastep boundary: the controller
+        observes the pools, diffs against the policy's target state, and
+        this engine executes the convergence plan in order. All
+        admit/preempt/grow/evict/upload decisions live in the plan; the
+        executors below only carry them out (and emit the lifecycle
+        events every action must flow through)."""
+        plan = self.controller.plan_boundary(self._step_idx, time.time())
+        self._execute_plan(plan)
+
+    def _execute_plan(self, plan: List[PlanAction]) -> None:
+        for action in plan:
+            kind = action.kind
+            if kind == "admit":
+                self._execute_admit(action)
+            elif kind == "preempt":
+                self._execute_preempt(action)
+            elif kind == "grow":
+                self._execute_grow(action)
+            elif kind == "evict_prefix":
+                if self.cache.prefix is not None:
+                    self.cache.prefix.evict_for(
+                        action.pages, frozenset(action.protect)
                     )
-                else:
-                    self.tracer.lifecycle(
-                        "prefix_miss", track=track, rid=req.rid,
-                    )
-            if req.swapped is not None:  # swap-restore a preempted slot
-                self.tracer.lifecycle(
-                    "swap_in", track=track, rid=req.rid, slot=req.slot,
-                    nbytes=self.cache.swap_in(req.slot, req.swapped),
-                )
-                req.swapped = None
-            elif req.pos > 0:  # recompute-restore: re-prefill the context
-                self._prefill_request(req, resume=True)
+            elif kind == "shed":
+                self._execute_shed(action)
+            elif kind == "upload_experts":
+                uploads, nbytes = self.offload.apply_residency(action.targets)
+                if uploads:
+                    self.metrics.record_expert_prefetch(uploads, nbytes)
             else:
-                t0 = time.time()
-                self._prefill_request(req)
-                now = time.time()
-                self.metrics.record_ttft(now - req.arrival_s, now - t0)
-                self.results[req.rid] = req.out
-            if req.done:  # max_new == 1: first token is the only token
-                slot = req.slot
-                self.scheduler.finish(slot)
+                raise ValueError(f"unknown plan action kind {kind!r}")
+
+    def _find_waiting(self, rid: int) -> Optional[Request]:
+        for r in self.scheduler.waiting:
+            if r.rid == rid:
+                return r
+        return None
+
+    # --------------------------------------------------------- admission
+    def _execute_admit(self, action: PlanAction) -> None:
+        req = self._find_waiting(action.rid)
+        if req is None:
+            return  # defensive: the planner plans each waiter once
+        active_before = len(self.scheduler.active)
+        # sample the depth before admit_planned removes the request, so
+        # the recorded value counts the request being admitted (the
+        # depth the admission decision actually saw)
+        depth_before = self.scheduler.queue_depth
+        wait_steps = self._step_idx - req.submit_step
+        req = self.scheduler.admit_planned(req, self._step_idx)
+        if req is None:
+            return  # plan/pool divergence: drop the step, stay queued
+        track = f"slot{req.slot}"
+        # lifecycle events feed the metrics consumer *and* (when
+        # tracing is on) the event log; the flow hop stitches the
+        # request's journey from the queue track onto its slot track
+        self.tracer.lifecycle(
+            "admit", track=track, rid=req.rid, slot=req.slot,
+            step=self._step_idx, active_before=active_before,
+            queue_depth=depth_before, resumed=req.preempt_count > 0,
+            tenant=req.tenant, priority=req.priority,
+            wait_steps=wait_steps,
+        )
+        self.tracer.flow("t", req.rid, track=track)
+        if self.cache.prefix is not None and req.preempt_count == 0:
+            # every fresh admission is a cache probe: hit/miss + the
+            # prefill tokens the shared pages saved (full hits also
+            # skip the first-token logits dispatch entirely)
+            if req.cached_tokens > 0:
                 self.tracer.lifecycle(
-                    "release", track=track, rid=req.rid, slot=slot,
-                    step=self._step_idx,
+                    "prefix_hit", track=track, rid=req.rid,
+                    tokens_saved=req.cached_tokens,
+                    full=req.cached_logits is not None,
                 )
-                self.tracer.flow("f", req.rid, track=track)
+            else:
+                self.tracer.lifecycle(
+                    "prefix_miss", track=track, rid=req.rid,
+                )
+        if req.swapped is not None:  # swap-restore a preempted slot
+            self.tracer.lifecycle(
+                "swap_in", track=track, rid=req.rid, slot=req.slot,
+                nbytes=self.cache.swap_in(req.slot, req.swapped),
+            )
+            req.swapped = None
+        elif req.pos > 0:  # recompute-restore: re-prefill the context
+            self._prefill_request(req, resume=True)
+        else:
+            t0 = time.time()
+            self._prefill_request(req)
+            now = time.time()
+            self.metrics.record_ttft(
+                now - req.arrival_s, now - t0, tenant=req.tenant
+            )
+            self.results[req.rid] = req.out
+        if req.done:  # max_new == 1: first token is the only token
+            slot = req.slot
+            self.scheduler.finish(slot)
+            self.tracer.lifecycle(
+                "release", track=track, rid=req.rid, slot=slot,
+                step=self._step_idx,
+            )
+            self.tracer.flow("f", req.rid, track=track)
+
+    def _execute_shed(self, action: PlanAction) -> None:
+        req = self._find_waiting(action.rid)
+        if req is None:
+            return
+        self.scheduler.shed(req, self._step_idx)
+        self.results[req.rid] = []  # served nothing, honestly
+        self.tracer.lifecycle(
+            "shed", track="queue", rid=req.rid, step=self._step_idx,
+            tenant=req.tenant, priority=req.priority,
+            wait_steps=action.waited_steps,
+        )
+        # the request's journey ends on the queue track — it never
+        # reached a slot
+        self.tracer.flow("f", req.rid, track="queue")
 
     def _prefill_request(self, req: Request, resume: bool = False) -> None:
         """Stream a context through chunked prefill into the slot's pages.
@@ -699,59 +813,67 @@ class PagedServingEngine:
             if gauges:
                 self.tracer.counter("routing", track="engine", **gauges)
 
-    def _prefetch_experts(self) -> None:
-        """Upload the EMA-hottest experts ahead of the next decode step —
-        the residency twin of ``_ensure_pages`` (issue: router-stats
-        prefetch between steps; misses inside the step replay)."""
-        if self.offload is None:
-            return
-        uploads, nbytes = self.offload.prefetch()
-        if uploads:
-            self.metrics.record_expert_prefetch(uploads, nbytes)
-
     # ---------------------------------------------------- growth/preempt
-    def _ensure_pages(self) -> None:
-        """Grow every active slot **horizon-ahead**: enough pages to
+    def _note_preempt(self, vreq: Request, vslot: int, *, for_rid: int,
+                      for_tenant: str) -> None:
+        """Lifecycle bookkeeping for one executed preemption."""
+        vtrack = f"slot{vslot}"
+        self.tracer.lifecycle(
+            "preempt", track=vtrack, rid=vreq.rid, slot=vslot,
+            step=self._step_idx, mode=self.ecfg.preempt_mode,
+            swap_bytes=vreq.swapped.nbytes if vreq.swapped else 0,
+            tenant=vreq.tenant, for_rid=for_rid, for_tenant=for_tenant,
+        )
+        self.tracer.flow("t", vreq.rid, track=vtrack)
+
+    def _execute_preempt(self, action: PlanAction) -> None:
+        vreq = self.scheduler.active.get(action.slot)
+        if vreq is None or vreq.rid != action.rid:
+            return  # defensive: plan victims are live actives
+        swap = self.ecfg.preempt_mode == "swap"
+        vreq = self.scheduler.preempt(action.slot, swap=swap)
+        self._note_preempt(
+            vreq, action.slot, for_rid=action.for_rid,
+            for_tenant=action.for_tenant,
+        )
+
+    def _execute_grow(self, action: PlanAction) -> None:
+        """Grow one active slot **horizon-ahead**: enough pages to
         cover all ``min(H, budget)`` KV writes of the coming megastep,
         so no write inside the fused scan can land on an unallocated
         page — growth, like every pool-pressure decision, happens only
         at megastep boundaries.
 
-        Oldest admission first, so the eldest request always wins the
-        page contest; on exhaustion the scheduler preempts the youngest
-        (possibly the grower itself — then it simply stops running and
-        rejoins at the queue head). ``reserve_full`` engines never need
-        growth: admission already covered ``prompt + max_new``.
+        The controller's page ledger simulates allocator + prefix-cache
+        state exactly, so by the time a grow executes its pages are
+        available (planned preemptions and prefix evictions ran
+        earlier in the plan). The reactive loop below is a safety net
+        for ledger/pool divergence only — it falls back to the
+        historical policy-ordered preemption rather than crashing.
         """
+        slot = action.slot
+        req = self.scheduler.active.get(slot)
+        if req is None or req.rid != action.rid:
+            return  # the grower itself was victimized earlier in the plan
+        need = self.cache.slot_deficit(
+            slot, req.pos + req.next_decode_writes(self.ecfg.decode_horizon)
+        )
+        if need <= 0:
+            return
         swap = self.ecfg.preempt_mode == "swap"
-        h = self.ecfg.decode_horizon
-        for slot, req in sorted(
-            self.scheduler.active.items(), key=lambda kv: kv[1].admit_seq
+        # LRU-evictable prefix-cache pages count as available —
+        # cache.grow evicts entries before preemption ever triggers
+        while (
+            self.cache.available_pages() < need
+            and slot in self.scheduler.active
         ):
-            if slot not in self.scheduler.active:
-                continue  # preempted earlier in this pass
-            need = self.cache.slot_deficit(
-                slot, req.pos + req.next_decode_writes(h)
+            vslot = self.scheduler.pick_victim()
+            vreq = self.scheduler.preempt(vslot, swap=swap)
+            self._note_preempt(
+                vreq, vslot, for_rid=req.rid, for_tenant=req.tenant
             )
-            if need <= 0:
-                continue
-            # LRU-evictable prefix-cache pages count as available —
-            # cache.grow evicts entries before preemption ever triggers
-            while (
-                self.cache.available_pages() < need
-                and slot in self.scheduler.active
-            ):
-                vslot = self.scheduler.pick_victim()
-                vreq = self.scheduler.preempt(vslot, swap=swap)
-                vtrack = f"slot{vslot}"
-                self.tracer.lifecycle(
-                    "preempt", track=vtrack, rid=vreq.rid, slot=vslot,
-                    step=self._step_idx, mode=self.ecfg.preempt_mode,
-                    swap_bytes=vreq.swapped.nbytes if vreq.swapped else 0,
-                )
-                self.tracer.flow("t", vreq.rid, track=vtrack)
-            if slot in self.scheduler.active:
-                self.cache.grow(slot, need)
+        if slot in self.scheduler.active:
+            self.cache.grow(slot, need)
 
     # ------------------------------------------------------------ decode
     def _decode_megastep(self) -> None:
@@ -834,11 +956,17 @@ class PagedServingEngine:
             self.metrics.record_expert_residency(self.offload.resident_bytes)
         for slot, req in list(self.scheduler.active.items()):
             last_s = 0
+            emitted = 0
             for s in range(h):
                 if emits[s, slot]:
                     req.out.append(int(toks[s, slot]))
                     req.pos += 1
                     last_s = s
+                    emitted += 1
+            # fairness accounting: debit the tenant's WDRR grant and
+            # record the per-tenant token counters (policy witnesses)
+            self.scheduler.note_tokens(req.tenant, emitted)
+            self.metrics.record_tenant_tokens(req.tenant, emitted)
             if req.done:
                 self.scheduler.finish(slot)
                 track = f"slot{slot}"

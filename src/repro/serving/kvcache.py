@@ -237,6 +237,14 @@ class PrefixCache:
     def pages_held(self) -> frozenset:
         return frozenset(self.holds)
 
+    def snapshot(self) -> List[PrefixEntry]:
+        """Entries in LRU order (oldest first), **without** touching
+        recency or hit counts — the controller's planning-time view.
+        Callers must treat the entries as read-only; actual lookups
+        (which refresh LRU state) happen at plan execution via
+        :meth:`lookup`."""
+        return list(self._entries.values())
+
     def reclaimable(self, protect: frozenset = frozenset()) -> int:
         """Pages :meth:`evict_for` could actually free right now: count
         the holds dropped if every entry *not touching* ``protect``

@@ -75,8 +75,22 @@ class ServingMetrics:
     page_utilization: List[float] = dataclasses.field(default_factory=list)
     capacity_utilization: List[float] = dataclasses.field(default_factory=list)
     admissions: List[Dict] = dataclasses.field(default_factory=list)
+    # re-admissions of preempted requests (kept out of ``admissions`` so
+    # queue-depth / TTFT / mid-flight summaries stay honest under churn —
+    # a resumed victim is pool pressure, not fresh demand)
+    readmissions: List[Dict] = dataclasses.field(default_factory=list)
     slot_releases: List[Dict] = dataclasses.field(default_factory=list)
     preemptions: List[Dict] = dataclasses.field(default_factory=list)
+    # SLO load-sheds: fresh requests past their TTFT budget rejected at
+    # a boundary instead of queueing unboundedly
+    sheds: List[Dict] = dataclasses.field(default_factory=list)
+    # resource-controller reconciliation: plan count + action histogram
+    plans: int = 0
+    plan_actions: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # decode tokens emitted per tenant (fairness witness)
+    tenant_tokens: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # wall-clock TTFT per tenant (summary only, never in counters)
+    ttft_by_tenant: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
     swap_out_bytes: int = 0
     swap_in_bytes: int = 0
     # host-offloaded expert buckets (repro.serving.offload)
@@ -115,20 +129,54 @@ class ServingMetrics:
     # ------------------------------------------------------------ record
     def record_admission(
         self, rid: int, slot: int, step_idx: int, active_before: int,
-        queue_depth: int, resumed: bool = False,
+        queue_depth: int, resumed: bool = False, tenant: str = "default",
+        priority: int = 0, wait_steps: int = -1,
     ) -> None:
         """``queue_depth`` is the waiting-queue depth *at admission time*,
         i.e. including the request being admitted (the engine samples it
-        before the scheduler pops the queue head)."""
-        self.admissions.append(
-            {"rid": rid, "slot": slot, "step": step_idx,
-             "active_before": active_before, "queue_depth": queue_depth,
-             "resumed": resumed}
+        before the scheduler pops the queue head). ``resumed=True``
+        delegates to :meth:`record_readmission` — a preempted request
+        re-entering is not fresh demand and must not distort queue-depth
+        or TTFT bookkeeping (its TTFT anchor stays the original
+        ``arrival_s``)."""
+        rec = {"rid": rid, "slot": slot, "step": step_idx,
+               "active_before": active_before, "queue_depth": queue_depth,
+               "resumed": resumed, "tenant": tenant, "priority": priority,
+               "wait_steps": wait_steps}
+        if resumed:
+            self.record_readmission(rec)
+        else:
+            self.admissions.append(rec)
+
+    def record_readmission(self, rec: Dict) -> None:
+        """A preempted request re-acquired a slot (churn, not demand)."""
+        self.readmissions.append(dict(rec, resumed=True))
+
+    def record_shed(self, rid: int, step_idx: int, tenant: str = "default",
+                    priority: int = 0, wait_steps: int = 0) -> None:
+        """One fresh request rejected past its TTFT budget."""
+        self.sheds.append(
+            {"rid": rid, "step": step_idx, "tenant": tenant,
+             "priority": priority, "wait_steps": wait_steps}
         )
 
-    def record_ttft(self, seconds: float, prefill_seconds: float) -> None:
+    def record_plan(self, n_actions: int, **kind_counts: int) -> None:
+        """One non-empty controller plan: total actions plus the
+        per-kind histogram (admits/preempts/grows/…)."""
+        self.plans += 1
+        for k, v in kind_counts.items():
+            if v:
+                self.plan_actions[k] = self.plan_actions.get(k, 0) + int(v)
+
+    def record_tenant_tokens(self, tenant: str, n: int) -> None:
+        if n > 0:
+            self.tenant_tokens[tenant] = self.tenant_tokens.get(tenant, 0) + int(n)
+
+    def record_ttft(self, seconds: float, prefill_seconds: float,
+                    tenant: str = "default") -> None:
         self.ttft_s.append(seconds)
         self.prefill_s.append(prefill_seconds)
+        self.ttft_by_tenant.setdefault(tenant, []).append(seconds)
 
     def record_decode_step(
         self, seconds: float, n_active: int, expert_activation: float,
@@ -182,11 +230,16 @@ class ServingMetrics:
 
     def record_preemption(
         self, rid: int, slot: int, step_idx: int, mode: str,
-        swap_bytes: int = 0,
+        swap_bytes: int = 0, tenant: str = "default", for_rid: int = -1,
+        for_tenant: str = "",
     ) -> None:
+        """``for_rid``/``for_tenant`` identify the beneficiary — the
+        growing/admitting request the freed pages serve (cross-tenant
+        preemption is visible as ``tenant != for_tenant``)."""
         self.preemptions.append(
             {"rid": rid, "slot": slot, "step": step_idx, "mode": mode,
-             "swap_bytes": swap_bytes}
+             "swap_bytes": swap_bytes, "tenant": tenant,
+             "for_rid": for_rid, "for_tenant": for_tenant}
         )
         self.swap_out_bytes += swap_bytes
 
@@ -267,6 +320,11 @@ class ServingMetrics:
         deterministic-replay test asserts dict equality on this)."""
         return {
             "admissions": list(self.admissions),
+            "readmissions": list(self.readmissions),
+            "sheds": list(self.sheds),
+            "plans": self.plans,
+            "plan_actions": dict(sorted(self.plan_actions.items())),
+            "tenant_tokens": dict(sorted(self.tenant_tokens.items())),
             "slot_releases": list(self.slot_releases),
             "preemptions": list(self.preemptions),
             "swap_out_bytes": self.swap_out_bytes,
@@ -321,6 +379,15 @@ class ServingMetrics:
             "mid_flight_admissions": self.mid_flight_admissions,
             "slot_releases": len(self.slot_releases),
             "preemptions": len(self.preemptions),
+            "readmissions": len(self.readmissions),
+            "sheds": len(self.sheds),
+            "plans": int(self.plans),
+            "plan_actions": dict(sorted(self.plan_actions.items())),
+            "tenant_tokens": dict(sorted(self.tenant_tokens.items())),
+            "ttft_p95_s_by_tenant": {
+                t: _p95(xs)
+                for t, xs in sorted(self.ttft_by_tenant.items())
+            },
             "swap_out_bytes": int(self.swap_out_bytes),
             "swap_in_bytes": int(self.swap_in_bytes),
             "swap_bytes": int(self.swap_out_bytes + self.swap_in_bytes),

@@ -366,19 +366,20 @@ class ExpertOffloadManager:
         d = self.ema_decay
         self.ema = d * self.ema + (1.0 - d) * counts.astype(np.float64)
 
-    def prefetch(self) -> Tuple[int, int]:
-        """Upload the EMA-hottest slots ahead of need (between steps).
+    def residency_targets(self) -> Tuple[Tuple[int, int, Tuple[int, ...]], ...]:
+        """Pure target-set computation: the declarative half of prefetch.
 
-        Per (layer, bucket): the top-``R_i`` slots by EMA score become
-        the desired resident set; missing ones are uploaded over the
-        coldest undesired residents. Stable ranking (score desc, slot
-        asc) keeps the selection deterministic and churn-free on ties.
-        Returns ``(uploads, bytes)``.
+        Per (layer, bucket): the top-``R_i`` slots by EMA score are the
+        *desired* resident set. Stable ranking (score desc, slot asc)
+        keeps the selection deterministic and churn-free on ties.
+        Returns one ``(bucket_idx, layer, desired_slots)`` triple for
+        every (layer, bucket) whose desired set is not fully resident —
+        an empty tuple means residency already matches the target.
+        Reads routing EMA and residency maps; mutates **nothing** (the
+        controller calls this at planning time; convergence happens in
+        :meth:`apply_residency`).
         """
-        t0 = self.tracer.now_us()
-        ups = 0
-        nbytes = 0
-        pending = {bk: [] for bk in self._bkeys}
+        targets = []
         for l in range(self.num_layers):
             for i, bk in enumerate(self._bkeys):
                 m = self.meta[i]
@@ -386,18 +387,40 @@ class ExpertOffloadManager:
                 if r_i >= m.count:
                     continue
                 scores = self.ema[l, m.start:m.start + m.count]
-                desired = set(
+                desired = tuple(
                     int(s) for s in np.argsort(-scores, kind="stable")[:r_i]
                 )
-                want = sorted(
-                    s for s in desired if self.slot_row[bk][l, s] < 0
-                )
-                if not want:
-                    continue
-                placed = self._place(i, l, want, desired,
-                                     lambda s, scores=scores: scores[s])
-                pending[bk].extend(placed)
-                ups += len(placed)
+                if any(self.slot_row[bk][l, s] < 0 for s in desired):
+                    targets.append((i, l, desired))
+        return tuple(targets)
+
+    def apply_residency(
+        self, targets: Tuple[Tuple[int, int, Tuple[int, ...]], ...]
+    ) -> Tuple[int, int]:
+        """Converge residency toward :meth:`residency_targets` output:
+        missing desired slots are uploaded over the coldest undesired
+        residents (one batched upload + device-map refresh per bucket).
+        Returns ``(uploads, bytes)``.
+        """
+        if not targets:
+            return 0, 0
+        t0 = self.tracer.now_us()
+        ups = 0
+        nbytes = 0
+        pending = {bk: [] for bk in self._bkeys}
+        for i, l, desired in targets:
+            bk = self._bkeys[i]
+            m = self.meta[i]
+            scores = self.ema[l, m.start:m.start + m.count]
+            want = sorted(
+                s for s in desired if self.slot_row[bk][l, s] < 0
+            )
+            if not want:
+                continue
+            placed = self._place(i, l, want, set(desired),
+                                 lambda s, scores=scores: scores[s])
+            pending[bk].extend(placed)
+            ups += len(placed)
         for bk in self._bkeys:  # one batched upload + map per bucket
             if pending[bk]:
                 nbytes += self._upload_batch(bk, pending[bk])
@@ -408,3 +431,13 @@ class ExpertOffloadManager:
                 args={"kind": "prefetch", "uploads": ups, "bytes": nbytes},
             )
         return ups, nbytes
+
+    def prefetch(self) -> Tuple[int, int]:
+        """Upload the EMA-hottest slots ahead of need (between steps):
+        :meth:`residency_targets` (pure) followed by
+        :meth:`apply_residency` (converge). Kept as the one-call form
+        for direct drivers and tests; the engine goes through the
+        resource controller, which folds the target set into its
+        boundary plan as an ``upload_experts`` action.
+        """
+        return self.apply_residency(self.residency_targets())

@@ -11,12 +11,41 @@ default): decode pages are granted on demand via
 :meth:`repro.serving.kvcache.PagedKVCache.grow`, so the pool can be
 sized far below the worst-case ``Σ (prompt + max_new)``. When growth
 hits an empty free list the engine **preempts** a victim instead of
-failing: the youngest-admitted / least-progress request is swapped out
-(or dropped for re-prefill) and re-queued **at the head** of the FCFS
-queue, so it is the first to reclaim freed pages. ``reserve_full=True``
-restores the PR-1 behavior (pages for ``prompt + max_new`` reserved at
-admission, growth and preemption never trigger) — the conservative
-baseline the ``--pool-blocks`` benchmark sweep compares against.
+failing: the victim is swapped out (or dropped for re-prefill) and
+re-queued **at the head** of the queue, so it is the first to reclaim
+freed pages. ``reserve_full=True`` restores the PR-1 behavior (pages
+for ``prompt + max_new`` reserved at admission, growth and preemption
+never trigger) — the conservative baseline the ``--pool-blocks``
+benchmark sweep compares against.
+
+**Tenant-aware policy** (see docs/serving_scheduling.md). Every request
+carries a ``tenant`` label and an integer ``priority`` class (higher =
+more urgent). Three scheduling policies:
+
+* ``fcfs`` — the historical single-tenant behavior: queue order
+  admission, youngest-admitted victim. Tenant/priority are recorded but
+  ignored.
+* ``priority`` — admission considers higher classes first (stable
+  within a class, so FCFS inside each class); preemption victimizes the
+  *lowest* class first, youngest within the class.
+* ``fair`` — ``priority`` ordering refined by per-tenant token-rate
+  fairness: a weighted deficit round-robin over decode-token grants.
+  Each megastep boundary every backlogged tenant earns
+  ``weight × horizon`` grant tokens; emitting tokens debits the
+  tenant's deficit; among equal-priority waiters the tenant with the
+  largest deficit (most underserved relative to its weight) admits
+  first.
+
+Policies only reorder *when* requests run — per-request outputs stay
+bit-identical to the dense reference under every policy (the
+batch-composition-independence invariant; fuzzed in
+``tests/test_serving_sim.py``).
+
+**SLO shed.** With a TTFT budget configured, a fresh request that
+cannot be admitted at a boundary *and* has already waited past the
+budget is shed (removed from the queue with an empty output and a
+``shed`` lifecycle event) instead of queueing unboundedly. Preempted
+requests are never shed — they have tokens invested.
 """
 from __future__ import annotations
 
@@ -28,7 +57,10 @@ import numpy as np
 
 from .kvcache import PagedKVCache, PoolExhausted, SwappedKV
 
-__all__ = ["Request", "Scheduler"]
+__all__ = ["Request", "Scheduler", "VALID_POLICIES"]
+
+#: scheduling policies accepted by :class:`Scheduler` / ``EngineConfig``
+VALID_POLICIES = ("fcfs", "priority", "fair")
 
 
 @dataclasses.dataclass
@@ -40,6 +72,9 @@ class Request:
     # token itself is kept in ``out``); -1 disables. The fused decode
     # horizon folds this into its on-device per-slot stop mask.
     eos_id: int = -1
+    # ---- multi-tenant policy (ignored under policy="fcfs") ----
+    tenant: str = "default"
+    priority: int = 0  # higher = more urgent; victim selection walks up
     # ---- filled in by scheduler/engine ----
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
@@ -47,6 +82,7 @@ class Request:
     submit_step: int = -1
     admit_step: int = -1
     admit_seq: int = -1  # monotone admission counter (victim ordering)
+    shed_step: int = -1  # step the request was SLO-shed at (-1: not shed)
     preempt_count: int = 0
     swapped: Optional[SwappedKV] = None  # host KV while preempted (swap mode)
     arrival_s: float = 0.0  # wall-clock submit time (TTFT anchor)
@@ -96,9 +132,18 @@ class Scheduler:
     page reservations cover every KV write of the coming megastep)."""
 
     def __init__(self, cache: PagedKVCache, *, reserve_full: bool = False,
-                 horizon: int = 1, tracer=None):
+                 horizon: int = 1, tracer=None, policy: str = "fcfs",
+                 tenant_weights: Optional[Dict[str, float]] = None):
         if horizon < 1:
             raise ValueError(f"horizon must be ≥ 1, got {horizon}")
+        if policy not in VALID_POLICIES:
+            raise ValueError(
+                f"unknown policy {policy!r}; expected one of {VALID_POLICIES}"
+            )
+        if tenant_weights is not None:
+            for t, w in tenant_weights.items():
+                if w <= 0:
+                    raise ValueError(f"tenant weight for {t!r} must be > 0, got {w}")
         if tracer is None:
             from .trace import NULL_TRACER
 
@@ -107,9 +152,16 @@ class Scheduler:
         self.reserve_full = reserve_full
         self.horizon = horizon
         self.tracer = tracer
+        self.policy = policy
+        self.tenant_weights = dict(tenant_weights or {})
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}  # slot -> request
         self._admit_seq = 0
+        # WDRR over decode-token grants (policy="fair"): tenant -> deficit.
+        # Integer token counts with float weights; entries exist only for
+        # currently-backlogged tenants (classic DRR: an idle tenant does
+        # not bank credit).
+        self._deficit: Dict[str, float] = {}
 
     # ---------------------------------------------------------- queue
     def submit(self, req: Request, step_idx: int = 0) -> None:
@@ -161,48 +213,119 @@ class Scheduler:
             )
         return need
 
-    def try_admit(self, step_idx: int) -> Optional[Request]:
-        """FCFS admission: head of queue starts iff slot + pages free.
+    # ------------------------------------------------- policy ordering
+    def admission_order(self) -> List[Request]:
+        """Waiting requests in the order the controller should consider
+        them for admission this boundary.
 
-        Fresh requests need pages for the prompt **plus the writes of
-        their first decode megastep** (``context +
-        min(horizon, budget)`` tokens — ``context + 1`` at ``H = 1``,
-        today's policy); preempted requests the same over their
-        accumulated context; ``reserve_full`` needs ``prompt + max_new``
-        either way. Pages already promised to active slots' growth
-        (:meth:`growth_reserve`) are off limits.
+        ``fcfs``: queue order. ``priority``: higher classes first,
+        stable (FCFS within a class). ``fair``: priority classes first,
+        then the tenant with the largest WDRR deficit (most underserved
+        relative to its weight), then queue order — ``sorted`` is stable,
+        so equal keys preserve FCFS.
+        """
+        waiting = list(self.waiting)
+        if self.policy == "fcfs":
+            return waiting
+        if self.policy == "priority":
+            return sorted(waiting, key=lambda r: -r.priority)
+        return sorted(
+            waiting,
+            key=lambda r: (-r.priority, -self._deficit.get(r.tenant, 0.0)),
+        )
+
+    def refresh_grants(self) -> None:
+        """WDRR grant refresh, called once per megastep boundary.
+
+        Every *backlogged* tenant (has a waiting or active request)
+        earns ``weight × horizon`` decode-token credit; idle tenants are
+        dropped (no banked credit). Deficits are clamped to
+        ``8 × weight × horizon`` so a tenant that is backlogged but
+        unschedulable (e.g. huge requests) cannot accumulate unbounded
+        claim over future boundaries.
+        """
+        if self.policy != "fair":
+            return
+        backlogged = {r.tenant for r in self.waiting}
+        backlogged.update(r.tenant for r in self.active.values())
+        quantum = float(self.horizon)
+        for t in sorted(backlogged):
+            w = self.tenant_weights.get(t, 1.0)
+            d = self._deficit.get(t, 0.0) + w * quantum
+            self._deficit[t] = min(d, 8.0 * w * quantum)
+        for t in list(self._deficit):
+            if t not in backlogged:
+                del self._deficit[t]
+
+    def note_tokens(self, tenant: str, n: int) -> None:
+        """Debit ``n`` emitted decode tokens against a tenant's grant."""
+        if self.policy != "fair" or n <= 0:
+            return
+        if tenant in self._deficit:
+            self._deficit[tenant] -= float(n)
+
+    def deficits(self) -> Dict[str, float]:
+        """Snapshot of per-tenant WDRR deficits (observability)."""
+        return dict(self._deficit)
+
+    # ------------------------------------------------------- admission
+    @staticmethod
+    def _is_fresh(req: Request) -> bool:
+        """Never admitted: no KV context, no swap image, no output."""
+        return req.pos == 0 and req.swapped is None and not req.out
+
+    def peek_prefix(self, req: Request):
+        """Prefix-cache probe for a fresh request, with the full-match
+        demotion rule (a full-prompt hit without cached logits is
+        demoted to ``prompt[:-1]`` — at least one token must stream
+        through prefill to produce first-token logits, and its KV
+        rewrite must land on a private page, never a shared one).
+        Mutates cache LRU/hit state; the controller's planning-time
+        equivalent is the non-mutating ledger peek.
+        """
+        if not self._is_fresh(req):
+            return None
+        entry = self.cache.prefix_lookup(req.prompt)
+        if (
+            entry is not None
+            and entry.n_tokens == len(req.prompt)
+            and entry.last_logits is None
+        ):
+            entry = self.cache.prefix_lookup(req.prompt[:-1])
+        return entry
+
+    def admit_tokens(self, req: Request) -> int:
+        """KV entries an admission must reserve pages for: context plus
+        the writes of the first decode megastep (``prompt + max_new``
+        under ``reserve_full``)."""
+        return (
+            req.total_tokens if self.reserve_full
+            else req.context_tokens + req.next_decode_writes(self.horizon)
+        )
+
+    def admit_planned(self, req: Request, step_idx: int) -> Optional[Request]:
+        """Admit a specific waiting request (controller plan execution).
+
+        Re-validates against live pool state — pages for the admission
+        tokens (:meth:`admit_tokens`) minus any shared-prefix pages,
+        leaving :meth:`growth_reserve` headroom untouched so a new
+        request never starves a running one into preempting it right
+        back out. Returns ``None`` if the request no longer fits (the
+        plan step is dropped; the request stays queued).
 
         **Shared-prefix reuse.** A fresh request (never preempted —
         resumed requests rebuild private pages, so swap-in never writes
         a shared one) probes the prefix cache first: a hit shares the
         match's page-aligned pages copy-on-write, shrinking both the
-        page bill and the prefill work to the non-cached suffix. A
-        full-prompt match without cached logits is *demoted* to
-        ``prompt[:-1]`` — at least one token must stream through prefill
-        to produce first-token logits, and its KV rewrite must land on a
-        private page, never a shared one.
+        page bill and the prefill work to the non-cached suffix.
         """
-        if not self.waiting:
-            return None
-        req = self.waiting[0]
-        entry = None
-        if req.pos == 0 and req.swapped is None:
-            entry = self.cache.prefix_lookup(req.prompt)
-            if (
-                entry is not None
-                and entry.n_tokens == len(req.prompt)
-                and entry.last_logits is None
-            ):
-                entry = self.cache.prefix_lookup(req.prompt[:-1])
-        tokens = (
-            req.total_tokens if self.reserve_full
-            else req.context_tokens + req.next_decode_writes(self.horizon)
-        )
+        entry = self.peek_prefix(req)
+        tokens = self.admit_tokens(req)
         if not self.cache.can_admit(
             tokens, headroom=self.growth_reserve(), prefix_entry=entry
         ):
             return None
-        self.waiting.popleft()
+        self.waiting.remove(req)
         req.slot = self.cache.acquire_slot(
             tokens, prefix_entry=entry, rid=req.rid
         )
@@ -218,16 +341,50 @@ class Scheduler:
         self.active[req.slot] = req
         return req
 
-    # ------------------------------------------------------- preemption
-    def pick_victim(self) -> int:
-        """Deterministic victim: the youngest admission — the request
-        that has had the least time to make progress, so eviction wastes
-        the least work. ``admit_seq`` is unique and monotone, so the
-        choice needs no tiebreaker and the oldest-admitted active request
-        is never victimized while others run — the page contest always
-        has a winner and the engine cannot livelock.
+    def try_admit(self, step_idx: int) -> Optional[Request]:
+        """Head-of-queue admission (FCFS semantics; kept for direct
+        drivers and tests — the engine now admits via controller plans,
+        which reduce to exactly this under ``policy="fcfs"``)."""
+        if not self.waiting:
+            return None
+        return self.admit_planned(self.waiting[0], step_idx)
+
+    def shed(self, req: Request, step_idx: int) -> Request:
+        """SLO load-shed: remove a waiting request from the queue.
+
+        Only fresh (never-admitted) requests are shed — preempted ones
+        have decode tokens invested and always resume. The caller emits
+        the ``shed`` lifecycle event and records the empty result.
         """
-        slot, _ = max(self.active.items(), key=lambda kv: kv[1].admit_seq)
+        if not self._is_fresh(req):
+            raise ValueError(f"request {req.rid}: only fresh requests shed")
+        self.waiting.remove(req)
+        req.shed_step = step_idx
+        return req
+
+    # ------------------------------------------------------- preemption
+    def victim_key(self, req: Request):
+        """Victim ordering: ``max`` over actives picks the victim.
+
+        ``fcfs``: the youngest admission — least progress, so eviction
+        wastes the least work (``admit_seq`` is unique and monotone, so
+        the oldest-admitted active is never victimized while others run
+        — the page contest always has a winner, no livelock).
+        ``priority``/``fair``: lowest priority class first, youngest
+        within the class — a high-priority grower evicts background work
+        before peers. The same no-livelock argument holds on the
+        refined order: the (highest-class, oldest) active is never
+        victimized while others run.
+        """
+        if self.policy == "fcfs":
+            return (0, req.admit_seq)
+        return (-req.priority, req.admit_seq)
+
+    def pick_victim(self) -> int:
+        """Deterministic policy-ordered victim (see :meth:`victim_key`)."""
+        slot, _ = max(
+            self.active.items(), key=lambda kv: self.victim_key(kv[1])
+        )
         return slot
 
     def preempt(self, slot: int, *, swap: bool) -> Request:

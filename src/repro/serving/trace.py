@@ -326,6 +326,9 @@ class MetricsConsumer:
             m.record_admission(
                 f["rid"], f["slot"], f["step"], f["active_before"],
                 f["queue_depth"], resumed=f.get("resumed", False),
+                tenant=f.get("tenant", "default"),
+                priority=f.get("priority", 0),
+                wait_steps=f.get("wait_steps", -1),
             )
         elif kind == "release":
             m.record_release(f["rid"], f["slot"], f["step"])
@@ -333,6 +336,25 @@ class MetricsConsumer:
             m.record_preemption(
                 f["rid"], f["slot"], f["step"], f["mode"],
                 swap_bytes=f.get("swap_bytes", 0),
+                tenant=f.get("tenant", "default"),
+                for_rid=f.get("for_rid", -1),
+                for_tenant=f.get("for_tenant", ""),
+            )
+        elif kind == "shed":
+            m.record_shed(
+                f["rid"], f["step"], tenant=f.get("tenant", "default"),
+                priority=f.get("priority", 0),
+                wait_steps=f.get("wait_steps", 0),
+            )
+        elif kind == "plan":
+            m.record_plan(
+                f.get("actions", 0),
+                admits=f.get("admits", 0),
+                preempts=f.get("preempts", 0),
+                grows=f.get("grows", 0),
+                prefix_evictions=f.get("prefix_evictions", 0),
+                sheds=f.get("sheds", 0),
+                expert_uploads=f.get("expert_uploads", 0),
             )
         elif kind == "swap_in":
             m.record_swap_in(f["nbytes"])

@@ -322,14 +322,15 @@ def test_offload_megastep_replay_counts(compressed_model):
     reqs = make_requests(cfg, 2, 0, max_new=6)
     for r in reqs:
         eng.submit(r)
-    eng._admit_all()  # prefill uploads the prompt working set
+    eng._converge()  # admission plan: prefill uploads the prompt working set
     # force-evict bucket b1 entirely (its budget row goes free): any b1
     # traffic in the coming megasteps must miss inside the fused program;
-    # prefetch is disabled so it cannot quietly undo the eviction
+    # the controller's residency convergence is disabled so prefetch
+    # cannot quietly undo the eviction
     mgr = eng.offload
     mgr.slot_row["b1"][:, :] = -1
     mgr.row_slot["b1"][:, :] = -1
-    eng._prefetch_experts = lambda: None
+    eng.controller.offload = None
     eng.run()
     assert {r.rid: eng.results[r.rid] for r in reqs} == out0
     c = eng.metrics.counters()

@@ -35,7 +35,12 @@ from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.models.registry import get_model
-from repro.serving import EngineConfig, PagedServingEngine, Request
+from repro.serving import (
+    EngineConfig,
+    PagedServingEngine,
+    Request,
+    VALID_POLICIES,
+)
 from repro.serving.engine import dense_greedy_reference
 
 TINY_DENSE = ModelConfig(
@@ -80,6 +85,21 @@ BLOCK = 4
 MAX_TICKS = 10_000  # liveness bound: a trace that won't drain is a bug
 
 
+@pytest.fixture(autouse=True)
+def _bound_live_executables():
+    """Per-test jax cache clear, tighter than conftest's per-module one.
+
+    The policy-invariance sweeps serve each trace once per policy, so
+    this module now compiles ~3x the engines it used to; keeping every
+    executable alive across the whole module segfaults the XLA CPU
+    compiler on small runners (same failure mode the per-module clear
+    was added for). Cross-test shape reuse is minimal here — traces are
+    test-unique and the dense references are memoized by output in
+    ``_REF_CACHE`` — so the clear costs little."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="module")
 def dense_model():
     bundle = get_model(TINY_DENSE)
@@ -103,7 +123,12 @@ class Trace:
     ``prompt_lens[i]`` random suffix tokens — the workload the
     shared-prefix KV cache (``prefix_cache=True``) is built for, and
     the adversarial one for it when the cache is off. Suffixes of
-    length 0 repeat a template verbatim (full-prompt hits)."""
+    length 0 repeat a template verbatim (full-prompt hits).
+
+    ``tenants``/``priorities`` label request ``i`` for the multi-tenant
+    scheduler policies (empty → everyone is ``"default"`` at priority
+    0, the single-tenant traces above); ``policy``/``tenant_weights``/
+    ``ttft_budget_steps`` pass straight through to ``EngineConfig``."""
 
     prompt_lens: tuple
     max_news: tuple
@@ -115,6 +140,11 @@ class Trace:
     template_len: int = 0  # shared-prefix template tokens (0 = disjoint)
     n_templates: int = 1
     prefix_cache: bool = False
+    tenants: tuple = ()  # per-request tenant label (() = all "default")
+    priorities: tuple = ()  # per-request priority class (() = all 0)
+    policy: str = "fcfs"  # admission-order policy (fcfs/priority/fair)
+    tenant_weights: tuple = ()  # (("tenant", weight), ...) for "fair"
+    ttft_budget_steps: int = -1  # SLO shed budget in steps (-1 = off)
 
     @property
     def full_lens(self) -> tuple:
@@ -133,7 +163,11 @@ class Trace:
                 np.concatenate([templates[i % self.n_templates], suffix])
                 if self.template_len else suffix
             )
-            reqs.append(Request(rid=i, prompt=prompt, max_new=m))
+            reqs.append(Request(
+                rid=i, prompt=prompt, max_new=m,
+                tenant=self.tenants[i] if self.tenants else "default",
+                priority=self.priorities[i] if self.priorities else 0,
+            ))
         return reqs
 
     @property
@@ -187,6 +221,12 @@ def run_trace(cfg, params, trace: Trace, **ecfg_kw):
             preempt_mode=trace.preempt_mode,
             decode_horizon=trace.horizon,
             prefix_cache=trace.prefix_cache,
+            policy=trace.policy,
+            tenant_weights=trace.tenant_weights or None,
+            ttft_budget_steps=(
+                trace.ttft_budget_steps if trace.ttft_budget_steps >= 0
+                else None
+            ),
             **ecfg_kw,
         ),
     )
@@ -235,10 +275,17 @@ def reference_tokens(cfg, params, prompt: np.ndarray, max_new: int):
 
 def assert_outputs_match_reference(cfg, params, engine, trace):
     # the reference runs at the engine's drop-free expert capacity so the
-    # comparison isolates paging/preemption from MoE token dropping
+    # comparison isolates paging/preemption from MoE token dropping.
+    # Shed requests (SLO budget exceeded before first admission) are the
+    # one sanctioned deviation: they must emit *nothing* — a shed that
+    # leaks tokens would be a silent partial result.
     mcfg = engine.model_cfg
+    shed_rids = {rec["rid"] for rec in engine.metrics.sheds}
     for req in trace.requests(cfg.vocab_size):
         got = engine.results[req.rid]
+        if req.rid in shed_rids:
+            assert got == [], f"rid={req.rid} was shed but emitted tokens"
+            continue
         ref = reference_tokens(mcfg, params, req.prompt, req.max_new)
         assert got == ref, (
             f"rid={req.rid} pool={trace.pool_blocks} mode={trace.preempt_mode}: "
@@ -549,3 +596,212 @@ def test_deterministic_replay_identical_outputs_and_counters(dense_model):
     (out_a, ctr_a), (out_b, ctr_b) = runs
     assert out_a == out_b
     assert ctr_a == ctr_b
+
+
+# ------------------------------------------------ multi-tenant scheduling
+FAIR_WEIGHTS = (("batch", 1.0), ("chat", 2.0), ("interactive", 4.0))
+
+
+def _tenant_mix_trace(rng: np.random.Generator) -> Trace:
+    """The three-tenant production mix: a long-document **batch** tenant
+    (big prompts + long decodes, all submitted at step 0, priority 0), a
+    bursty **chat** tenant (medium requests arriving in one burst,
+    priority 1), and a latency-floor **interactive** tenant (tiny
+    requests trickling in, priority 2)."""
+    batch_n = int(rng.integers(2, 4))
+    chat_n = int(rng.integers(3, 6))
+    inter_n = int(rng.integers(2, 5))
+    lens, news, submits, tenants, prios = [], [], [], [], []
+    for _ in range(batch_n):
+        lens.append(int(rng.integers(8, 13)))
+        news.append(int(rng.integers(6, 11)))
+        submits.append(0)
+        tenants.append("batch")
+        prios.append(0)
+    burst_at = int(rng.integers(0, 3))
+    for _ in range(chat_n):
+        lens.append(int(rng.integers(2, 6)))
+        news.append(int(rng.integers(2, 7)))
+        submits.append(burst_at)
+        tenants.append("chat")
+        prios.append(1)
+    for _ in range(inter_n):
+        lens.append(int(rng.integers(1, 4)))
+        news.append(int(rng.integers(1, 5)))
+        submits.append(int(rng.integers(1, 6)))
+        tenants.append("interactive")
+        prios.append(2)
+    t = Trace(
+        tuple(lens), tuple(news), tuple(submits), 0,
+        str(rng.choice(["swap", "recompute"])),
+        max_slots=4,
+        horizon=int(rng.choice([1, 2, 4])),
+        tenants=tuple(tenants), priorities=tuple(prios),
+        tenant_weights=FAIR_WEIGHTS,
+    )
+    pool = int(rng.integers(t.min_pool, max(t.min_pool + 1,
+                                            (3 * t.demand) // 4)))
+    return dataclasses.replace(t, pool_blocks=pool)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_policy_invariance_tenant_mix(dense_model, seed):
+    """Acceptance: the same tenant-mix trace served under fcfs,
+    priority, and fair produces **bit-identical per-request outputs**
+    (and each matches the dense reference) — scheduling policy may
+    reorder *when* a request runs, never *what* it decodes. Invariants
+    are checked after every step by ``run_trace``."""
+    cfg, params = dense_model
+    base = _tenant_mix_trace(np.random.default_rng(100 + seed))
+    runs = {}
+    for policy in VALID_POLICIES:
+        trace = dataclasses.replace(base, policy=policy)
+        engine = run_trace(cfg, params, trace)
+        assert_outputs_match_reference(cfg, params, engine, trace)
+        runs[policy] = dict(engine.results)
+    assert runs["priority"] == runs["fcfs"]
+    assert runs["fair"] == runs["fcfs"]
+
+
+@pytest.mark.parametrize("preempt_mode", ["swap", "recompute"])
+@pytest.mark.parametrize("horizon", [1, 4])
+def test_policy_invariance_across_horizon_and_preempt(
+    dense_model, horizon, preempt_mode
+):
+    """The policy-invariance sweep crossed with decode horizon and
+    preemption mode on one pressured tenant mix: outputs identical
+    across all three policies in every cell."""
+    cfg, params = dense_model
+    base = _tenant_mix_trace(np.random.default_rng(7))
+    base = dataclasses.replace(
+        base, horizon=horizon, preempt_mode=preempt_mode,
+        pool_blocks=max(base.min_pool, (2 * base.demand) // 3),
+    )
+    outs = []
+    for policy in VALID_POLICIES:
+        trace = dataclasses.replace(base, policy=policy)
+        engine = run_trace(cfg, params, trace)
+        assert_outputs_match_reference(cfg, params, engine, trace)
+        outs.append(dict(engine.results))
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_slo_shed_under_saturation(dense_model):
+    """A single-slot engine pinned by one long batch request must shed
+    the interactive requests stuck behind it once they exceed the TTFT
+    step budget: they leave the queue with empty outputs, the lifecycle
+    stream records each shed with its wait, and the surviving request
+    still matches the reference."""
+    cfg, params = dense_model
+    trace = Trace(
+        prompt_lens=(6, 4, 4), max_news=(12, 4, 4),
+        submit_steps=(0, 1, 1), pool_blocks=5, preempt_mode="swap",
+        max_slots=1, horizon=1,
+        tenants=("batch", "interactive", "interactive"),
+        priorities=(0, 2, 2), policy="priority", ttft_budget_steps=3,
+    )
+    engine = run_trace(cfg, params, trace)
+    assert_outputs_match_reference(cfg, params, engine, trace)
+    m = engine.metrics
+    shed_rids = sorted(rec["rid"] for rec in m.sheds)
+    assert shed_rids == [1, 2], "both blocked interactive requests shed"
+    for rec in m.sheds:
+        assert rec["tenant"] == "interactive"
+        assert rec["wait_steps"] > trace.ttft_budget_steps
+        assert engine.results[rec["rid"]] == []
+    assert m.counters()["sheds"] == list(m.sheds)
+    assert m.summary()["sheds"] == 2
+    # nothing was ever admitted for the shed rids: exactly one admission
+    assert [a["rid"] for a in m.admissions] == [0]
+
+
+def test_slo_shed_in_fuzzed_tenant_mix(dense_model):
+    """Fuzz leg with a live SLO budget: a tight pool + tiny TTFT budget
+    over the tenant mix triggers ≥ 1 shed, and every request either
+    shed cleanly (no tokens) or decoded bit-identically to the
+    reference — partial results are impossible."""
+    cfg, params = dense_model
+    base = _tenant_mix_trace(np.random.default_rng(11))
+    trace = dataclasses.replace(
+        base, pool_blocks=base.min_pool, max_slots=2, horizon=1,
+        policy="fcfs", ttft_budget_steps=2,
+    )
+    engine = run_trace(cfg, params, trace)
+    assert_outputs_match_reference(cfg, params, engine, trace)
+    assert len(engine.metrics.sheds) >= 1, (
+        "saturated pool + 2-step TTFT budget must shed at least once"
+    )
+
+
+def test_cross_tenant_preemption_for_higher_class(dense_model):
+    """Under ``policy="priority"`` pool pressure lands on the lowest
+    class first: the interactive request arrives while the batch tenant
+    is mid-decode, and when its growth hits a dry pool the batch slot is
+    preempted *for* it — visible in the preemption record as
+    ``tenant != for_tenant`` — and both requests still finish with
+    reference-identical outputs."""
+    cfg, params = dense_model
+    trace = Trace(
+        prompt_lens=(4, 3), max_news=(16, 12), submit_steps=(0, 2),
+        pool_blocks=5, preempt_mode="swap", max_slots=2, horizon=1,
+        tenants=("batch", "interactive"), priorities=(0, 2),
+        policy="priority",
+    )
+    engine = run_trace(cfg, params, trace)
+    assert_outputs_match_reference(cfg, params, engine, trace)
+    cross = [
+        p for p in engine.metrics.preemptions
+        if p["for_tenant"] and p["tenant"] != p["for_tenant"]
+    ]
+    assert cross, "expected a cross-tenant preemption under priority"
+    assert all(
+        p["tenant"] == "batch" and p["for_tenant"] == "interactive"
+        for p in cross
+    ), "priority policy must never evict the higher class for the lower"
+
+
+def test_fair_policy_tracks_tenant_tokens(dense_model):
+    """``policy="fair"`` (WDRR over decode-token grants) keeps an exact
+    per-tenant token ledger: the recorded ``tenant_tokens`` equal each
+    tenant's summed finished-output lengths, and the deficit state never
+    leaks into outputs (reference-identical, checked above per step)."""
+    cfg, params = dense_model
+    base = _tenant_mix_trace(np.random.default_rng(23))
+    trace = dataclasses.replace(base, policy="fair")
+    engine = run_trace(cfg, params, trace)
+    assert_outputs_match_reference(cfg, params, engine, trace)
+    want: dict = {}
+    for req in trace.requests(cfg.vocab_size):
+        want[req.tenant] = (
+            want.get(req.tenant, 0) + len(engine.results[req.rid])
+        )
+    got = engine.metrics.counters()["tenant_tokens"]
+    assert got == {t: n for t, n in want.items() if n > 0}
+
+
+def test_readmission_accounting_under_churn(dense_model):
+    """Regression (re-admission accounting): a churny trace counts each
+    request's *first* admission exactly once in ``admissions`` — swap-in
+    and re-prefill returns land in ``readmissions`` — so queue-depth
+    and TTFT summaries are per-request, not per-churn-event. TTFT stays
+    anchored at arrival: one sample per request no matter how often it
+    was preempted."""
+    cfg, params = dense_model
+    trace = Trace(
+        prompt_lens=(4, 4, 4), max_news=(10, 10, 10),
+        submit_steps=(0, 0, 0), pool_blocks=4, preempt_mode="swap",
+        max_slots=3, horizon=1,
+    )
+    engine = run_trace(cfg, params, trace)
+    assert_outputs_match_reference(cfg, params, engine, trace)
+    m = engine.metrics
+    n = len(trace.prompt_lens)
+    assert m.summary()["preemptions"] >= 1, "trace must actually churn"
+    assert sorted(a["rid"] for a in m.admissions) == list(range(n))
+    assert all(not a.get("resumed") for a in m.admissions)
+    assert all(r["resumed"] for r in m.readmissions)
+    # every preemption of a finishing request is balanced by a re-entry
+    assert len(m.readmissions) == len(m.preemptions)
+    # TTFT: one sample per request, measured from original arrival
+    assert len(m.ttft_s) == n
+    assert m.summary()["readmissions"] == len(m.preemptions)
