@@ -348,6 +348,167 @@ def smoke() -> List[str]:
     return rows
 
 
+# ------------------------------------------------------- chaos smoke leg
+CHAOS_OUT_PATH = os.path.join("results", "BENCH_serving_chaos.json")
+
+
+def _drive_chaos(engine, pending, cancel_at: Dict[int, int]):
+    """The step-driven submission loop plus client cancellations:
+    ``cancel_at`` maps rid → tick. Deterministic — same trace, same
+    fault plan, same tick grid ⇒ same outcome."""
+    pending = sorted(pending, key=lambda t: t[0])
+    tick = 0
+    while pending or engine.scheduler.has_work():
+        while pending and pending[0][0] <= tick:
+            engine.submit(pending.pop(0)[1])
+        for rid, t in cancel_at.items():
+            if t == tick:
+                engine.cancel(rid)
+        if engine.scheduler.has_work():
+            engine.step()
+        tick += 1
+    return dict(engine.results)
+
+
+def _chaos_trace(cfg, n_requests: int = 6, seed: int = 23):
+    """Staggered arrivals, mixed lengths — enough churn that cold
+    expert rows get routed to (upload path) while staying CI-sized."""
+    rng = np.random.default_rng(seed)
+    return [
+        (i, Request(
+            rid=i,
+            prompt=rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(10, 21))
+            ).astype(np.int32),
+            max_new=int(rng.integers(8, 13)),
+        ))
+        for i in range(n_requests)
+    ]
+
+
+def chaos() -> List[str]:
+    """CI chaos leg: the smoke MoE PMQ-compressed with offloaded experts,
+    served under a seeded ``FaultPlan`` (transient expert-upload
+    failures) plus one client cancellation, gating the fail-closed
+    contract end-to-end (docs/serving_robustness.md):
+
+    * every non-cancelled request's greedy tokens are **bit-identical**
+      to the fault-free leg, and the cancelled request's partial output
+      is a prefix of its fault-free tokens;
+    * at least one upload failure was injected *and recovered by retry*
+      (``fault_injected`` ≥ 1, ``upload_retries`` ≥ 1, no degradation,
+      no engine errors besides the cancellation);
+    * the cancellation terminated typed and clean (``cancelled`` == 1,
+      pool drained to consistency);
+    * the trace artifacts pass ``python -m repro.serving.trace`` schema
+      validation.
+    """
+    from repro.serving import FaultPlan, FaultSpec, RequestCancelled
+    from repro.serving.trace import main as validate_traces
+
+    print("== serving_latency --chaos (fail-closed serving under faults) ==")
+    cfg, params = _smoke_model()
+    calib = calibration(cfg, params, n=4, seq=64)
+    params_c, avg_bits = _stacked_compressed_params(cfg, params, calib)
+    num_slots = params_c["blocks"]["moe_ce"].num_slots
+    resident = max(1, num_slots - 1)  # ≥1 cold row: uploads must happen
+    max_new = 12
+    mb = -(-(20 + max_new) // BLOCK_SIZE) + 1
+    slots = 3
+    ecfg = EngineConfig(
+        max_slots=slots, block_size=BLOCK_SIZE, num_blocks=slots * mb,
+        max_blocks_per_slot=mb, prefill_chunk=BLOCK_SIZE, decode_horizon=4,
+        preempt_mode="swap", resident_experts=resident,
+    )
+    cancel_rid, cancel_tick = 5, 5  # cancelled the tick it arrives
+
+    # fault-free reference leg (no cancels — the bit-identity anchor)
+    ref_engine = PagedServingEngine(cfg, params_c, ecfg)
+    ref = _drive_chaos(ref_engine, _chaos_trace(cfg), {})
+
+    # chaos leg: every expert upload fails twice, then a cancellation
+    plan = FaultPlan([
+        FaultSpec(site="upload", mode="fail", count=2),
+        FaultSpec(site="upload", mode="corrupt", count=1, step=2),
+    ])
+    engine = PagedServingEngine(
+        cfg, params_c,
+        dataclasses.replace(ecfg, trace_level="full"),
+        faults=plan,
+    )
+    outs = _drive_chaos(engine, _chaos_trace(cfg),
+                        {cancel_rid: cancel_tick})
+    ctr = engine.metrics.counters()
+
+    # gate 1: bit-exact-or-typed-error against the fault-free leg
+    assert set(engine.errors) == {cancel_rid}, (
+        f"chaos leg errored unexpectedly: "
+        f"{ {r: type(e).__name__ for r, e in engine.errors.items()} }"
+    )
+    assert isinstance(engine.errors[cancel_rid], RequestCancelled)
+    for rid, toks in ref.items():
+        if rid == cancel_rid:
+            assert outs[rid] == toks[:len(outs[rid])], (
+                "cancelled request's partial output is not a prefix of "
+                "its fault-free tokens"
+            )
+        else:
+            assert outs[rid] == toks, (
+                f"request {rid} diverged from the fault-free leg under "
+                "recovered upload faults"
+            )
+    # gate 2: faults actually fired and were recovered by retry
+    assert plan.injected >= 1, "fault plan never fired"
+    assert ctr["fault_injected"] == plan.injected
+    assert ctr["upload_retries"] >= 1, "no upload retry was exercised"
+    assert ctr.get("degraded_serves", 0) == 0, (
+        "transient faults must recover at full precision"
+    )
+    # gate 3: the cancellation terminated typed and the pool is clean
+    assert ctr["cancelled"] == 1
+    assert not engine.scheduler.active and not engine.scheduler.waiting
+    engine.cache.check_consistency()
+
+    # gate 4: artifacts pass the schema validator CI also runs
+    os.makedirs("results", exist_ok=True)
+    base = os.path.join("results", "BENCH_serving_chaos")
+    report = engine.routing_report()
+    engine.tracer.write_chrome(
+        base + ".trace.json",
+        extra={"routing_report": report} if report else None,
+    )
+    engine.tracer.write_jsonl(base + ".trace.jsonl")
+    rc = validate_traces([base + ".trace.json", base + ".trace.jsonl"])
+    assert rc == 0, "chaos trace artifacts failed schema validation"
+
+    leg = {
+        "label": "chaos",
+        "avg_bits": round(float(avg_bits), 3),
+        "resident_experts": resident,
+        "num_slots": num_slots,
+        "fault_injected": ctr["fault_injected"],
+        "faults_by_site": ctr.get("faults_by_site", {}),
+        "upload_retries": ctr["upload_retries"],
+        "cancelled": ctr["cancelled"],
+        "degraded_serves": ctr.get("degraded_serves", 0),
+    }
+    with open(CHAOS_OUT_PATH, "w") as fh:
+        json.dump({"bench": "serving_chaos",
+                   "note": "chaos smoke: recovered upload faults + clean "
+                           "cancellation, bit-identical to fault-free",
+                   "legs": [leg]}, fh, indent=1)
+    print(f"  wrote {CHAOS_OUT_PATH}")
+    print(f"  chaos OK: {ctr['fault_injected']} faults injected, "
+          f"{ctr['upload_retries']} upload retries recovered, "
+          f"1 clean cancellation; outputs bit-identical to fault-free")
+    return [csv_row(
+        "serving/chaos",
+        engine.metrics.summary()["decode_step_mean_s"] * 1e6,
+        f"faults={ctr['fault_injected']};retries={ctr['upload_retries']};"
+        f"cancelled={ctr['cancelled']};degraded={ctr.get('degraded_serves', 0)}",
+    )]
+
+
 # --------------------------------------------------- pool pressure sweep
 def _pressure_requests(cfg, n_requests: int, seed: int = 0) -> List[Request]:
     """Mixed-length trace: short prompts + long decodes, the shape that
@@ -815,6 +976,12 @@ def main() -> None:
                    help="CI-sized horizon A/B on a tiny random MoE: "
                         "asserts H=1 vs H=8 greedy-output equivalence + "
                         "dispatch amortization, writes the JSON artifact")
+    p.add_argument("--chaos", action="store_true",
+                   help="CI chaos leg: the smoke MoE with offloaded PMQ "
+                        "experts served under a seeded FaultPlan — gates "
+                        "bit-identical recovery from injected upload "
+                        "faults, one clean typed cancellation, and trace-"
+                        "artifact schema validation")
     p.add_argument("--horizons", type=int, nargs="+", default=None,
                    metavar="H",
                    help="explicit decode horizons for the fused-megastep "
@@ -856,8 +1023,11 @@ def main() -> None:
         # pressure/residency sweeps build engines through shared helpers;
         # the process default reaches all of them (trace-time static)
         os.environ["REPRO_FFN_BACKEND"] = args.ffn_backend
-    if args.smoke:
-        smoke()
+    if args.smoke or args.chaos:
+        if args.smoke:
+            smoke()
+        if args.chaos:
+            chaos()
         return
     if args.horizons is not None:
         cfg, params = trained_model()

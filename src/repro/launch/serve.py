@@ -31,7 +31,12 @@ The default path is :class:`repro.serving.engine.PagedServingEngine`:
   ``--ttft-budget-ms`` for SLO load shedding) executed through the
   declarative resource controller — every admit/preempt/grow/shed/
   expert-upload is a reconciliation plan step
-  (:mod:`repro.serving.controller`, docs/serving_scheduling.md).
+  (:mod:`repro.serving.controller`, docs/serving_scheduling.md),
+* the fail-closed fault plane (``--chaos-seed N`` attaches a seeded
+  deterministic FaultPlan, ``--deadline-steps N`` bounds every request):
+  injected faults recover bit-exact (retry / re-fetch / degrade) or
+  terminate typed — never wrong tokens (:mod:`repro.serving.faults`,
+  docs/serving_robustness.md).
 
 :class:`BatchedServer` is the legacy static *wave* batcher kept for
 comparison (``--legacy``): it pads every wave with dummy requests and
@@ -260,6 +265,16 @@ def main() -> None:
                    help="SLO admission budget: shed (reject with empty "
                         "output) any never-admitted request that has "
                         "waited longer than MS for its first token")
+    p.add_argument("--chaos-seed", type=int, default=None, metavar="SEED",
+                   help="attach a seeded deterministic FaultPlan (expert-"
+                        "upload / KV-swap / pool / logits faults) to the "
+                        "engine and print the fault-plane counters after "
+                        "the run — every request still finishes bit-exact "
+                        "or with a typed error (docs/serving_robustness.md)")
+    p.add_argument("--deadline-steps", type=int, default=None, metavar="N",
+                   help="per-request deadline in engine steps; requests "
+                        "not finished within N steps of submission "
+                        "terminate typed with DeadlineExceeded")
     p.add_argument("--legacy", action="store_true",
                    help="run the static wave batcher instead of the paged engine")
     p.add_argument("--trace-out", type=str, default=None, metavar="PATH",
@@ -282,6 +297,14 @@ def main() -> None:
         # silently emit an empty trace
         raise SystemExit("--trace-out/--trace-level require the paged "
                          "engine (drop --legacy)")
+    if args.legacy and (args.chaos_seed is not None
+                        or args.deadline_steps is not None):
+        # the fault plane and request deadlines live in the paged
+        # engine's step loop — the wave batcher has neither
+        raise SystemExit("--chaos-seed/--deadline-steps require the "
+                         "paged engine (drop --legacy)")
+    if args.deadline_steps is not None and args.deadline_steps < 1:
+        raise SystemExit("--deadline-steps must be >= 1")
     if args.legacy and (args.policy or args.tenant_weights
                         or args.ttft_budget_ms is not None):
         # scheduling policy lives in the controller loop the wave
@@ -332,6 +355,17 @@ def main() -> None:
         print(f"served {len(out)} requests; stats: {server.summary()}")
         return
     blocks_per_req = (24 + args.max_new) // args.block_size + 2
+    plan = None
+    if args.chaos_seed is not None:
+        from ..serving import FaultPlan
+
+        sites = ("swap_out", "swap_in", "pool", "logits")
+        if args.resident_experts is not None:
+            sites = ("upload",) + sites
+        plan = FaultPlan.generate(
+            args.chaos_seed, n_faults=8, max_step=4 * args.max_new,
+            sites=sites, rids=list(range(args.requests)),
+        )
     engine = PagedServingEngine(
         cfg, params,
         EngineConfig(
@@ -357,6 +391,7 @@ def main() -> None:
             **({"decode_horizon": args.decode_horizon}
                if args.decode_horizon is not None else {}),
         ),
+        faults=plan,
     )
     if engine.offload is not None:
         # the engine's tree holds the resident partition + host store;
@@ -369,7 +404,8 @@ def main() -> None:
     out = engine.serve(
         [
             PagedRequest(rid=i, prompt=prompts[i], max_new=args.max_new,
-                         tenant=tenant_names[i % len(tenant_names)])
+                         tenant=tenant_names[i % len(tenant_names)],
+                         deadline_steps=args.deadline_steps)
             for i in range(args.requests)
         ]
     )
@@ -398,6 +434,23 @@ def main() -> None:
             f"({m['expert_upload_bytes']} B), "
             f"{engine.offload.grows} budget grows"
         )
+    if plan is not None or args.deadline_steps is not None:
+        ctr = engine.metrics.counters()
+        print(
+            f"fault plane: {ctr['fault_injected']} injected "
+            f"{dict(ctr['faults_by_site'])}; "
+            f"{ctr['upload_retries']} upload retries, "
+            f"{ctr['degraded_serves']} degraded serves, "
+            f"{ctr['swap_fallbacks']} swap fallbacks, "
+            f"{ctr['cancelled']} cancelled, "
+            f"{ctr['deadline_exceeded']} deadline-exceeded, "
+            f"{ctr['poisoned']} poisoned"
+        )
+        if engine.errors:
+            print("typed errors: " + ", ".join(
+                f"rid {r}: {type(e).__name__}"
+                for r, e in sorted(engine.errors.items())
+            ))
     report = engine.routing_report()
     if report is not None:
         corr = report["mean_freq_bits_corr"]

@@ -24,15 +24,24 @@ __all__ = ["HeartbeatTable", "StragglerMonitor", "ResilientLoop", "FailurePolicy
 
 
 class HeartbeatTable:
-    def __init__(self, hosts: List[int], timeout: float = 60.0):
+    """Deadline failure detector over an injectable clock.
+
+    ``clock`` (default ``time.monotonic``) supplies the timestamps for
+    every call that omits an explicit ``now`` — the serving watchdog and
+    the unit tests drive the table with a fake clock, so expiry is
+    deterministic and never sleeps."""
+
+    def __init__(self, hosts: List[int], timeout: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.timeout = timeout
-        self._last: Dict[int, float] = {h: time.monotonic() for h in hosts}
+        self.clock = clock
+        self._last: Dict[int, float] = {h: clock() for h in hosts}
 
     def beat(self, host: int, now: Optional[float] = None) -> None:
-        self._last[host] = now if now is not None else time.monotonic()
+        self._last[host] = now if now is not None else self.clock()
 
     def failed(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.monotonic()
+        now = now if now is not None else self.clock()
         return [h for h, t in self._last.items() if now - t > self.timeout]
 
     def alive(self, now: Optional[float] = None) -> List[int]:
@@ -41,7 +50,9 @@ class HeartbeatTable:
 
 
 class StragglerMonitor:
-    """Rolling median step times per host; flags slow hosts."""
+    """Rolling median step times per host; flags slow hosts. Step times
+    come from the caller's clock of choice (``record`` takes durations,
+    not timestamps), so the monitor is deterministic by construction."""
 
     def __init__(self, window: int = 16, threshold: float = 1.5):
         self.window = window

@@ -39,7 +39,16 @@ The production serving substrate around the MC# compressed model path
   free projection is bit-identical across replays) and expert-routing
   telemetry: per-(layer, slot) dispatch histograms, EMA-drift and Gini
   load gauges, and the bit-misallocation report joining observed routing
-  frequency against the PMQ bit assignment (see docs/observability.md).
+  frequency against the PMQ bit assignment (see docs/observability.md),
+* :mod:`repro.serving.faults` — the deterministic fault plane: seeded,
+  replayable :class:`FaultPlan` schedules injected at the real seams
+  (expert uploads, KV swaps, page pool, logits) and the typed
+  :class:`ServingFault` hierarchy backing the engine's
+  bit-exact-or-typed-error contract — checksummed host payloads with
+  re-fetch on mismatch, bounded upload retries that degrade down the
+  PMQ precision ladder, request deadlines + cancellation, and a
+  megastep watchdog / livelock guard that fails closed
+  (docs/serving_robustness.md).
 """
 from .controller import (
     Observation,
@@ -51,6 +60,20 @@ from .engine import (
     EngineConfig,
     PagedServingEngine,
     quantized_greedy_reference,
+)
+from .faults import (
+    DeadlineExceeded,
+    ExpertUploadFailed,
+    FaultPlan,
+    FaultSpec,
+    InvalidRequest,
+    LivelockDetected,
+    PoisonedRequest,
+    RequestCancelled,
+    ServingFault,
+    SwapFault,
+    WatchdogTimeout,
+    checksum_tree,
 )
 from .kvcache import (
     BlockAllocator,
@@ -73,11 +96,18 @@ from .trace import (
 
 __all__ = [
     "BlockAllocator",
+    "DeadlineExceeded",
     "EngineConfig",
     "ExpertOffloadManager",
     "ExpertRoutingTelemetry",
+    "ExpertUploadFailed",
+    "FaultPlan",
+    "FaultSpec",
+    "InvalidRequest",
+    "LivelockDetected",
     "MetricsConsumer",
     "Observation",
+    "PoisonedRequest",
     "PagedKVCache",
     "PagedServingEngine",
     "PlanAction",
@@ -85,14 +115,19 @@ __all__ = [
     "PrefixCache",
     "PrefixEntry",
     "Request",
+    "RequestCancelled",
     "ResourceController",
     "quantized_greedy_reference",
     "Scheduler",
+    "ServingFault",
     "ServingMetrics",
     "SpanTracer",
+    "SwapFault",
     "SwappedKV",
     "TargetState",
     "VALID_POLICIES",
+    "WatchdogTimeout",
+    "checksum_tree",
     "validate_chrome_trace",
     "validate_events",
 ]

@@ -101,6 +101,13 @@ class Observation:
     waiting: Tuple[Request, ...]              # policy admission order
     tenants: Dict[str, Dict[str, int]]        # tenant → queue composition
     deficits: Dict[str, float]                # tenant → WDRR deficit
+    # injected transient page-pool exhaustion (``pool`` fault site):
+    # admission behaves as if this many free pages were unavailable.
+    # Planning-only — held pages are real and growth is untouched, so
+    # the penalty defers admissions (output-invariant by the
+    # batch-composition-independence contract) without ever invalidating
+    # the ledger's exactness for pages the pool actually holds.
+    pool_penalty: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,7 +262,7 @@ class ResourceController:
 
     def __init__(self, scheduler: Scheduler, offload=None, tracer=None,
                  *, ttft_budget_steps: Optional[int] = None,
-                 ttft_budget_s: Optional[float] = None):
+                 ttft_budget_s: Optional[float] = None, faults=None):
         if ttft_budget_steps is not None and ttft_budget_steps < 0:
             raise ValueError("ttft_budget_steps must be ≥ 0")
         if ttft_budget_s is not None and ttft_budget_s < 0:
@@ -270,6 +277,8 @@ class ResourceController:
         self.tracer = tracer
         self.ttft_budget_steps = ttft_budget_steps
         self.ttft_budget_s = ttft_budget_s
+        self.faults = faults
+        self.last_pool_penalty = 0
 
     # ---------------------------------------------------------- observe
     def observe(self, step_idx: int, now_s: float = 0.0) -> Observation:
@@ -304,6 +313,19 @@ class ResourceController:
                 r.tenant, {"waiting": 0, "active": 0, "queued_tokens": 0}
             )
             t["active"] += 1
+        pool_penalty = 0
+        if self.faults is not None:
+            spec = self.faults.fire("pool")
+            if spec is not None:
+                pool_penalty = max(0, int(spec.arg))
+                self.tracer.lifecycle(
+                    "fault", track="pool", site="pool", mode=spec.mode,
+                    pages=pool_penalty, step=step_idx,
+                )
+        # the engine's thrash circuit-breaker consults this: an injected
+        # penalty makes "nothing admitted though the queue has work" a
+        # legitimate *transient* state, not a livelock
+        self.last_pool_penalty = pool_penalty
         return Observation(
             step_idx=step_idx,
             now_s=now_s,
@@ -318,6 +340,7 @@ class ResourceController:
             waiting=waiting,
             tenants=tenants,
             deficits=sched.deficits(),
+            pool_penalty=pool_penalty,
         )
 
     # -------------------------------------------------------- reconcile
@@ -415,7 +438,11 @@ class ResourceController:
                 fits = (
                     ledger.free_slots > 0
                     and n <= cache.max_blocks_per_slot
+                    # pool_penalty: injected transient exhaustion defers
+                    # admission this boundary (planning-only, see
+                    # Observation)
                     and fresh_pages <= ledger.available(protect)
+                    - obs.pool_penalty
                 )
             if fits:
                 if ledger.free < fresh_pages:

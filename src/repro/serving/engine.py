@@ -95,6 +95,17 @@ import numpy as np
 
 from ..models import transformer as tf
 from .controller import PlanAction, ResourceController
+from .faults import (
+    DeadlineExceeded,
+    ExpertUploadFailed,
+    FaultPlan,
+    LivelockDetected,
+    PoisonedRequest,
+    RequestCancelled,
+    ServingFault,
+    SwapFault,
+    WatchdogTimeout,
+)
 from .kvcache import PagedKVCache, PoolExhausted
 from .metrics import ServingMetrics
 from .scheduler import Request, Scheduler, VALID_POLICIES
@@ -262,6 +273,24 @@ class EngineConfig:
     # instead of queueing unboundedly. None disables shedding.
     ttft_budget_steps: Optional[int] = None
     ttft_budget_s: Optional[float] = None
+    # ---- fault plane (docs/serving_robustness.md) ----
+    # Precision-ladder degradation: when an expert row's target-bit
+    # upload persistently fails (past upload_max_retries), serve a
+    # lower-bit copy of that row (codes snapped to the next ladder rung,
+    # scale/zero kept) instead of failing closed. Off by default — the
+    # bit-exact contract then holds unconditionally: recovery either
+    # reproduces the fault-free run or raises ExpertUploadFailed.
+    degrade_experts: bool = False
+    # Bounded miss-path retries per expert row before degrade/fail.
+    upload_max_retries: int = 3
+    # Wall-clock megastep watchdog: a megastep slower than this fails
+    # the engine closed with WatchdogTimeout (None = off; tests drive it
+    # through the engine's injectable ``_clock``).
+    watchdog_timeout_s: Optional[float] = None
+    # No-progress livelock guard: this many consecutive megastep
+    # boundaries with work but zero emitted tokens / finished requests
+    # fail closed with LivelockDetected. Logical steps — deterministic.
+    livelock_steps: int = 4096
 
 
 @functools.lru_cache(maxsize=None)
@@ -318,7 +347,8 @@ def _jitted_steps(model_cfg, use_otp: bool, ffn_backend: Optional[str] = None,
 class PagedServingEngine:
     """Serve requests against a transformer-family model bundle tree."""
 
-    def __init__(self, cfg, params, engine_cfg: Optional[EngineConfig] = None):
+    def __init__(self, cfg, params, engine_cfg: Optional[EngineConfig] = None,
+                 faults: Optional[FaultPlan] = None):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError(
                 f"paged serving supports transformer families, got {cfg.family}"
@@ -363,6 +393,13 @@ class PagedServingEngine:
             raise ValueError(
                 f"ttft_budget_s must be ≥ 0, got {self.ecfg.ttft_budget_s}"
             )
+        if self.ecfg.livelock_steps < 1:
+            raise ValueError(
+                f"livelock_steps must be ≥ 1, got {self.ecfg.livelock_steps}"
+            )
+        # fault plane: the plan is mutable/unhashable, so it rides next
+        # to the frozen EngineConfig rather than inside it
+        self.faults = faults
         cfg = self.model_cfg
         # metrics + tracer come first: every downstream component
         # (offload, cache, scheduler) records through the tracer, and the
@@ -389,6 +426,9 @@ class PagedServingEngine:
                 resident_slots=self.ecfg.resident_experts,
                 ema_decay=self.ecfg.prefetch_ema,
                 tracer=self.tracer,
+                faults=faults,
+                degrade=self.ecfg.degrade_experts,
+                max_retries=self.ecfg.upload_max_retries,
             )
             params = dict(params, blocks=dict(blocks, moe_ce=self.offload.ce))
         self.params = params
@@ -402,6 +442,7 @@ class PagedServingEngine:
             prefix_cache=self.ecfg.prefix_cache,
         )
         self.cache.set_tracer(self.tracer)
+        self.cache.faults = faults
         self.scheduler = Scheduler(
             self.cache, reserve_full=self.ecfg.reserve_full,
             horizon=self.ecfg.decode_horizon, tracer=self.tracer,
@@ -418,8 +459,25 @@ class PagedServingEngine:
             self.scheduler, offload=self.offload, tracer=self.tracer,
             ttft_budget_steps=self.ecfg.ttft_budget_steps,
             ttft_budget_s=self.ecfg.ttft_budget_s,
+            faults=faults,
         )
         self.results: Dict[int, List[int]] = {}
+        # rid → the typed ServingFault a request terminated with; its
+        # results[rid] entry holds whatever tokens it emitted before
+        self.errors: Dict[int, ServingFault] = {}
+        self._cancel_requests: set = set()
+        self._no_progress = 0
+        # injectable wall clock (watchdog tests swap in a fake); the
+        # watchdog itself is a HeartbeatTable over the single "megastep"
+        # host, beaten at each megastep's start and checked at its end
+        self._clock = time.time
+        self._watchdog = None
+        if self.ecfg.watchdog_timeout_s is not None:
+            from ..runtime.fault_tolerance import HeartbeatTable
+
+            self._watchdog = HeartbeatTable(
+                ["megastep"], timeout=float(self.ecfg.watchdog_timeout_s),
+            )
         self._step_idx = 0  # logical decode steps completed
         self._megastep_idx = 0  # fused megasteps run (sampling-key index)
         # two independent key streams off sample_seed: decode megasteps
@@ -463,12 +521,33 @@ class PagedServingEngine:
         PMQ-compressed and tracing collected routing traffic."""
         if self.routing is None or self._ce_meta is None:
             return None
-        return self.routing.bit_misallocation_report(self._ce_meta)
+        degraded = None
+        if self.offload is not None and self.offload.degraded:
+            degraded = {
+                k: to_bits for k, (_, to_bits) in self.offload.degraded.items()
+            }
+        return self.routing.bit_misallocation_report(
+            self._ce_meta, degraded=degraded
+        )
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
         req.arrival_s = time.time()
         self.scheduler.submit(req, self._step_idx)
+
+    def cancel(self, rid: int) -> bool:
+        """Request cancellation of a live request. Marked immediately;
+        applied at the next safe point — the next megastep boundary, or
+        between prefill chunks if the request is mid-prefill — where its
+        slot, pages, and prefix-cache refs are released atomically and
+        ``errors[rid]`` records a :class:`RequestCancelled`. Returns
+        whether ``rid`` was live (waiting or active) when called."""
+        live = {r.rid for r in self.scheduler.waiting}
+        live.update(r.rid for r in self.scheduler.active.values())
+        if rid not in live:
+            return False
+        self._cancel_requests.add(rid)
+        return True
 
     def serve(self, requests: Iterable[Request]) -> Dict[int, List[int]]:
         """Submit + run; returns outputs for *this* batch only (``run``'s
@@ -495,24 +574,153 @@ class PagedServingEngine:
         ``decode_horizon`` tokens in one fused jitted program. Returns
         whether work remains — the simulation harness drives this
         directly to interleave arrivals with decode.
+
+        The fault plane hooks in here: the boundary advances the
+        :class:`FaultPlan`'s logical step, applies pending cancellations
+        and expired deadlines (typed per-request termination with an
+        atomic release), and runs the watchdog + livelock guards that
+        fail the whole engine closed (:meth:`_fail_closed`) rather than
+        hang or serve silently corrupted state.
         """
+        if self.faults is not None:
+            self.faults.at_step(self._step_idx)
+        self._apply_cancellations()
+        self._apply_deadlines()
         if not self.scheduler.has_work():
             return False
-        self._converge()
-        if not self.scheduler.active:
-            if self.scheduler.waiting:
-                # unreachable for pools that admit the largest request
-                # (submit guards that); kept as a thrash circuit-breaker
-                head = self.scheduler.waiting[0]
-                raise PoolExhausted(
-                    f"request {head.rid} needs "
-                    f"{self.cache.blocks_needed(head.context_tokens)} blocks "
-                    f"but cannot be admitted "
-                    f"({self.cache.allocator.num_free} free)"
-                )
-            return False
-        self._decode_megastep()
+        progress0 = (
+            self._step_idx,
+            sum(len(v) for v in self.results.values()),
+        )
+        try:
+            self._converge()
+            if not self.scheduler.active:
+                if not self.scheduler.waiting:
+                    return False
+                if self.controller.last_pool_penalty <= 0:
+                    held = (
+                        self.cache.prefix.pages_held
+                        if self.cache.prefix is not None else frozenset()
+                    )
+                    if not held:
+                        # unreachable for pools that admit the largest
+                        # request (submit guards that); kept as a thrash
+                        # circuit-breaker
+                        head = self.scheduler.waiting[0]
+                        raise PoolExhausted(
+                            f"request {head.rid} needs "
+                            f"{self.cache.blocks_needed(head.context_tokens)} "
+                            f"blocks but cannot be admitted "
+                            f"({self.cache.allocator.num_free} free)"
+                        )
+                    # blocked head on an otherwise idle pool: the prefix
+                    # cache is pure optimization, and the hit-entry
+                    # protect set can pin pages the eviction walk will
+                    # never reclaim — drop the cache and retry admission
+                    # next boundary instead of declaring exhaustion
+                    self.cache.clear_prefix_cache()
+                # no megastep this boundary (transient pool pressure or a
+                # just-cleared cache), but fall through to the no-progress
+                # accounting — a *persistent* stall must eventually fail
+                # closed as a livelock, not spin forever
+            else:
+                t_start = self._clock()
+                if self._watchdog is not None:
+                    self._watchdog.beat("megastep", now=t_start)
+                self._decode_megastep()
+                if self._watchdog is not None and self._watchdog.failed(
+                    now=self._clock()
+                ):
+                    raise WatchdogTimeout(
+                        f"megastep exceeded the "
+                        f"{self.ecfg.watchdog_timeout_s}s watchdog budget"
+                    )
+        except (ExpertUploadFailed, WatchdogTimeout) as exc:
+            self._fail_closed(exc)
+        progress1 = (
+            self._step_idx,
+            sum(len(v) for v in self.results.values()),
+        )
+        if self.scheduler.has_work() and progress1 == progress0:
+            self._no_progress += 1
+            if self._no_progress >= self.ecfg.livelock_steps:
+                self._fail_closed(LivelockDetected(
+                    f"{self._no_progress} consecutive megastep boundaries "
+                    f"with work but no progress"
+                ))
+        else:
+            self._no_progress = 0
         return self.scheduler.has_work()
+
+    # --------------------------------------------------- typed termination
+    def _terminate(self, req: Request, exc: ServingFault, kind: str) -> None:
+        """Terminate one request with a typed error: release every
+        resource it holds atomically (slot, pages, prefix-cache refs,
+        swap image), record its partial output and the error, and emit
+        the lifecycle event. The released pool passes check_consistency
+        — a terminated request can never leak pages or refcounts."""
+        track = f"slot{req.slot}" if req.slot >= 0 else "queue"
+        self.scheduler.cancel_release(req)
+        self._cancel_requests.discard(req.rid)
+        self.errors[req.rid] = exc
+        self.results[req.rid] = req.out
+        self.tracer.lifecycle(
+            kind, track=track, rid=req.rid, step=self._step_idx,
+            tokens=len(req.out),
+        )
+        self.tracer.flow("f", req.rid, track=track)
+
+    def _find_live(self, rid: int) -> Optional[Request]:
+        for r in self.scheduler.active.values():
+            if r.rid == rid:
+                return r
+        return self._find_waiting(rid)
+
+    def _apply_cancellations(self) -> None:
+        for rid in sorted(self._cancel_requests):
+            req = self._find_live(rid)
+            if req is None:
+                self._cancel_requests.discard(rid)
+                continue
+            self._terminate(
+                req, RequestCancelled(f"request {rid} cancelled", rid=rid),
+                "cancel",
+            )
+
+    def _apply_deadlines(self) -> None:
+        live = list(self.scheduler.active.values())
+        live.extend(self.scheduler.waiting)
+        for req in live:
+            if req.deadline_steps is None:
+                continue
+            if self._step_idx - req.submit_step >= req.deadline_steps:
+                self._terminate(
+                    req,
+                    DeadlineExceeded(
+                        f"request {req.rid} missed its "
+                        f"{req.deadline_steps}-step deadline",
+                        rid=req.rid,
+                    ),
+                    "deadline",
+                )
+
+    def _fail_closed(self, exc: ServingFault) -> None:
+        """Engine-level fatal: terminate *every* live request with the
+        typed error, releasing all slots, pages, and prefix refs so the
+        pool drains clean (check_consistency passes, zero leaks), then
+        re-raise. Never hang, never serve silent corruption."""
+        live = list(self.scheduler.active.values())
+        live.extend(self.scheduler.waiting)
+        for req in live:
+            self.scheduler.cancel_release(req)
+            self.errors[req.rid] = exc
+            self.results[req.rid] = req.out
+        self._cancel_requests.clear()
+        self.tracer.lifecycle(
+            "fail_closed", track="engine", step=self._step_idx,
+            error=type(exc).__name__, requests=len(live),
+        )
+        raise exc
 
     # ----------------------------------------------------- reconciliation
     def _converge(self) -> None:
@@ -594,22 +802,46 @@ class PagedServingEngine:
                 self.tracer.lifecycle(
                     "prefix_miss", track=track, rid=req.rid,
                 )
-        if req.swapped is not None:  # swap-restore a preempted slot
-            self.tracer.lifecycle(
-                "swap_in", track=track, rid=req.rid, slot=req.slot,
-                nbytes=self.cache.swap_in(req.slot, req.swapped),
+        try:
+            if req.swapped is not None:  # swap-restore a preempted slot
+                try:
+                    nbytes = self.cache.swap_in(
+                        req.slot, req.swapped, rid=req.rid
+                    )
+                except SwapFault:
+                    # corrupted/failed swap payload: discard it and fall
+                    # back to recompute re-prefill — bit-exact, so the
+                    # recovery is invisible to outputs
+                    self.tracer.lifecycle(
+                        "swap_fallback", track=track, rid=req.rid,
+                        site="swap_in",
+                    )
+                    req.swapped = None
+                    self._prefill_request(req, resume=True)
+                else:
+                    self.tracer.lifecycle(
+                        "swap_in", track=track, rid=req.rid, slot=req.slot,
+                        nbytes=nbytes,
+                    )
+                    req.swapped = None
+            elif req.pos > 0:  # recompute-restore: re-prefill the context
+                self._prefill_request(req, resume=True)
+            else:
+                t0 = time.time()
+                self._prefill_request(req)
+                now = time.time()
+                self.metrics.record_ttft(
+                    now - req.arrival_s, now - t0, tenant=req.tenant
+                )
+                self.results[req.rid] = req.out
+        except (RequestCancelled, PoisonedRequest) as exc:
+            # per-request faults mid-prefill terminate exactly this
+            # request; any KV it wrote dies with its released pages
+            self._terminate(
+                req, exc,
+                "cancel" if isinstance(exc, RequestCancelled) else "poisoned",
             )
-            req.swapped = None
-        elif req.pos > 0:  # recompute-restore: re-prefill the context
-            self._prefill_request(req, resume=True)
-        else:
-            t0 = time.time()
-            self._prefill_request(req)
-            now = time.time()
-            self.metrics.record_ttft(
-                now - req.arrival_s, now - t0, tenant=req.tenant
-            )
-            self.results[req.rid] = req.out
+            return
         if req.done:  # max_new == 1: first token is the only token
             slot = req.slot
             self.scheduler.finish(slot)
@@ -672,6 +904,14 @@ class PagedServingEngine:
             )
             logits = None
             for off in range(off0, p_len, c):
+                if req.rid in self._cancel_requests:
+                    # mid-prefill cancellation: stop streaming chunks
+                    # now; the caller releases the slot (and any KV
+                    # already written dies with the pages)
+                    raise RequestCancelled(
+                        f"request {req.rid} cancelled mid-prefill",
+                        rid=req.rid,
+                    )
                 n = min(c, p_len - off)
                 chunk = np.zeros((1, c), np.int32)
                 chunk[0, :n] = seq[off : off + n]
@@ -695,6 +935,23 @@ class PagedServingEngine:
                 return
             jax.block_until_ready(logits)
             last = np.asarray(logits)[0, -1]
+        if self.faults is not None:
+            spec = self.faults.fire("logits", req.rid)
+            if spec is not None:
+                self.tracer.lifecycle(
+                    "fault", track=track, site="logits", mode=spec.mode,
+                    rid=req.rid,
+                )
+                last = np.array(last, copy=True)
+                last[0] = np.nan
+        # finite guard: non-finite first-token logits (a poisoned
+        # request) must never reach sampling or the prefix cache — the
+        # request terminates with a typed error and a clean release
+        if not np.all(np.isfinite(last)):
+            raise PoisonedRequest(
+                f"request {req.rid}: non-finite prefill logits",
+                rid=req.rid,
+            )
         self.cache.register_prefix(req.prompt, req.slot, last_logits=last)
         if self.ecfg.temperature > 0.0:
             # the TTFT token is sampled too — same categorical draw the
@@ -707,6 +964,9 @@ class PagedServingEngine:
             tok = int(np.argmax(last))
         req.out.append(tok)
         req.pos = p_len
+        # the TTFT token is tenant output too — without this the
+        # per-tenant ledger undercounts every request by exactly one
+        self.metrics.record_tenant_tokens(req.tenant, 1)
         self.tracer.instant(
             "first_token", track=track, cat="prefill", rid=req.rid, token=tok
         )

@@ -1,0 +1,258 @@
+"""Deterministic fault injection + the typed serving-failure taxonomy.
+
+The serving stack's core contract — greedy outputs bit-identical to
+``dense_greedy_reference`` under any batch composition — is proven on
+the happy path by the sim harness. This module supplies the *unhappy*
+path: a seeded, replayable :class:`FaultPlan` that injects failures at
+the real seams of the engine, and the typed error hierarchy the engine
+fails closed with when recovery is impossible.
+
+Fault sites (see docs/serving_robustness.md for the recovery ladder):
+
+``upload``
+    Host→device copy of a PMQ expert-bucket row
+    (``offload._upload_batch``). Key: ``(layer, slot)``.
+    ``corrupt`` = payload damaged in transit (caught by the per-row
+    checksum, re-fetched); ``fail`` = transient/persistent I/O error
+    (retried with logical-step backoff, then degraded to a lower-bit
+    copy or failed closed).
+``swap_out`` / ``swap_in``
+    KV page traffic for preempted slots (``kvcache.swap_out`` /
+    ``swap_in``). Key: request id. ``corrupt`` damages the host payload
+    (caught by the :class:`~repro.serving.kvcache.SwappedKV` checksum);
+    ``fail`` raises. Both recover by falling back to bit-exact
+    recompute re-prefill.
+``pool``
+    Transient page-pool exhaustion: the controller's ``Observation``
+    sees ``arg`` fewer free pages than physically exist (planning-only
+    — batch-composition independence keeps outputs unchanged).
+    Key: ``None``.
+``logits``
+    A poisoned request: the final prefill logits row turns non-finite.
+    Key: request id. The engine's finite-guard terminates exactly that
+    request with :class:`PoisonedRequest` and a clean release.
+
+A plan is *replayable*: it is keyed on the logical step (the engine
+calls :meth:`FaultPlan.at_step` at every megastep boundary — never a
+wall clock) and the call sequence of ``fire(site, key)``, which is
+itself a deterministic function of the request trace and engine config.
+Two runs with equal plans inject byte-identical faults, so the fuzzed
+fail-closed invariant (bit-exact-or-typed-error, counters replay
+bit-identically) is checkable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FAULT_MODES",
+    "FAULT_SITES",
+    "DeadlineExceeded",
+    "ExpertUploadFailed",
+    "FaultPlan",
+    "FaultSpec",
+    "InvalidRequest",
+    "LivelockDetected",
+    "PoisonedRequest",
+    "RequestCancelled",
+    "ServingFault",
+    "SwapFault",
+    "WatchdogTimeout",
+    "checksum_tree",
+    "corrupt_tree",
+]
+
+FAULT_SITES = ("upload", "swap_out", "swap_in", "pool", "logits")
+FAULT_MODES = ("fail", "corrupt")
+
+
+# --------------------------------------------------------------- errors
+class ServingFault(RuntimeError):
+    """Base of every typed serving failure (the fail-closed contract:
+    a request either completes bit-identical to the fault-free run or
+    terminates with a subclass of this — never silent corruption)."""
+
+    def __init__(self, msg: str, *, rid: Optional[int] = None):
+        super().__init__(msg)
+        self.rid = rid
+
+
+class RequestCancelled(ServingFault):
+    """Client called ``engine.cancel(rid)`` mid-flight."""
+
+
+class DeadlineExceeded(ServingFault):
+    """``Request.deadline_steps`` elapsed before completion."""
+
+
+class PoisonedRequest(ServingFault):
+    """Non-finite logits surfaced for this request (finite-guard)."""
+
+
+class ExpertUploadFailed(ServingFault):
+    """An expert row's target-bit upload failed past the retry budget
+    and precision-ladder degradation was disabled or impossible."""
+
+
+class SwapFault(ServingFault):
+    """KV swap payload failed its checksum or I/O (internal: the engine
+    recovers by recompute re-prefill; surfaces only on double faults)."""
+
+
+class WatchdogTimeout(ServingFault):
+    """A megastep exceeded the wall-clock watchdog budget."""
+
+
+class LivelockDetected(ServingFault):
+    """The engine had work but made no progress for too many
+    consecutive megastep boundaries."""
+
+
+class InvalidRequest(ServingFault, ValueError):
+    """Rejected at ``Scheduler.submit`` time (empty prompt,
+    non-positive ``max_new``, negative priority, duplicate live rid,
+    non-positive deadline). Also a ``ValueError`` so callers predating
+    the typed taxonomy keep working."""
+
+
+# ----------------------------------------------------------- fault plan
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault. ``key=None`` is a wildcard (first matching
+    call fires it); ``count=-1`` never exhausts (persistent)."""
+
+    site: str
+    mode: str = "fail"
+    key: Optional[Hashable] = None
+    step: int = 0  # arms at logical step >= step
+    until: Optional[int] = None  # disarms at logical step >= until
+    count: int = 1  # max firings; -1 = persistent
+    arg: int = 0  # site-specific magnitude (pool: pages hidden)
+
+    def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(f"fault site {self.site!r} not in {FAULT_SITES}")
+        if self.mode not in FAULT_MODES:
+            raise ValueError(f"fault mode {self.mode!r} not in {FAULT_MODES}")
+
+
+class FaultPlan:
+    """A deterministic, replayable fault schedule.
+
+    The engine advances :attr:`step` at every megastep boundary
+    (:meth:`at_step`); injection sites call :meth:`fire` with their
+    site name and key and act on the returned spec (or ``None``).
+    Matching consumes the spec's ``count``, so a plan's firings are a
+    pure function of the (deterministic) call sequence.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec] = ()):
+        self.specs: List[FaultSpec] = list(specs)
+        self.step = 0
+        self._fired = [0] * len(self.specs)
+        self.injected = 0
+        # (step, site, key, mode) per firing — the replay-checkable log
+        self.log: List[Tuple[int, str, Optional[Hashable], str]] = []
+
+    def at_step(self, step: int) -> None:
+        self.step = int(step)
+
+    def fire(self, site: str, key: Optional[Hashable] = None
+             ) -> Optional[FaultSpec]:
+        """Consume and return the first armed spec matching
+        ``(site, key)`` at the current logical step, else ``None``."""
+        for i, s in enumerate(self.specs):
+            if s.site != site:
+                continue
+            if s.key is not None and s.key != key:
+                continue
+            if self.step < s.step:
+                continue
+            if s.until is not None and self.step >= s.until:
+                continue
+            if s.count >= 0 and self._fired[i] >= s.count:
+                continue
+            self._fired[i] += 1
+            self.injected += 1
+            self.log.append((self.step, site, key, s.mode))
+            return s
+        return None
+
+    def replay(self) -> "FaultPlan":
+        """A fresh plan with the same schedule (for replay runs)."""
+        return FaultPlan(self.specs)
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        *,
+        n_faults: int = 4,
+        max_step: int = 24,
+        sites: Sequence[str] = FAULT_SITES,
+        rids: Sequence[int] = (),
+        expert_keys: Sequence[Tuple[int, int]] = (),
+        persistent: bool = False,
+        max_count: int = 2,
+    ) -> "FaultPlan":
+        """Seeded random schedule for fuzzing. ``rids`` feeds the
+        swap/logits keys, ``expert_keys`` the ``(layer, slot)`` upload
+        keys (empty = wildcard faults). ``persistent=False`` keeps every
+        fault transient — the regime where recovery must reproduce the
+        fault-free run bit-identically."""
+        rng = np.random.default_rng(seed)
+        specs = []
+        for _ in range(int(n_faults)):
+            site = str(sites[int(rng.integers(len(sites)))])
+            if site == "pool":
+                mode = "fail"
+            elif site == "logits":
+                mode = "corrupt"
+            else:
+                mode = FAULT_MODES[int(rng.integers(2))]
+            key: Optional[Hashable] = None
+            if site == "upload" and expert_keys:
+                key = tuple(expert_keys[int(rng.integers(len(expert_keys)))])
+            elif site in ("swap_out", "swap_in", "logits") and rids:
+                key = int(rids[int(rng.integers(len(rids)))])
+            count = -1 if persistent else int(rng.integers(1, max_count + 1))
+            specs.append(FaultSpec(
+                site=site, mode=mode, key=key,
+                step=int(rng.integers(0, max_step)), count=count,
+                arg=int(rng.integers(1, 9)),
+            ))
+        return cls(specs)
+
+
+# ------------------------------------------------------------ checksums
+def checksum_tree(tree) -> int:
+    """CRC32 folded over every array leaf of ``tree`` in deterministic
+    (tree-flatten) order — the integrity tag carried by host-side
+    payloads (expert bucket rows, ``SwappedKV`` pages)."""
+    import jax
+
+    crc = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        crc = zlib.crc32(np.ascontiguousarray(leaf).tobytes(), crc)
+    return crc
+
+
+def corrupt_tree(tree):
+    """A structurally identical copy of ``tree`` with the first leaf's
+    leading byte bit-flipped — the canonical injected payload
+    corruption (guaranteed to break :func:`checksum_tree`)."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = []
+    for i, leaf in enumerate(leaves):
+        a = np.array(leaf, copy=True)
+        if i == 0 and a.size:
+            raw = a.view(np.uint8).reshape(-1)
+            raw[0] ^= 0xFF
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out)

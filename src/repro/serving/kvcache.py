@@ -35,6 +35,8 @@ from typing import Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import SwapFault, checksum_tree
+
 __all__ = [
     "BlockAllocator", "PagedKVCache", "PoolExhausted", "SwappedKV",
     "PrefixCache", "PrefixEntry",
@@ -154,6 +156,16 @@ class SwappedKV:
     v: np.ndarray
     n_tokens: int  # valid kv entries covered by the saved pages
     quant: Optional[Dict[str, np.ndarray]] = None  # [L, n_pages, BS, Hkv] × 4
+    # CRC of the pristine payload at swap-out time; swap-in verifies it
+    # and raises SwapFault on mismatch (engine recovers by recompute
+    # re-prefill — docs/serving_robustness.md)
+    checksum: Optional[int] = None
+
+    def payload_checksum(self) -> int:
+        tree = {"k": self.k, "v": self.v}
+        if self.quant is not None:
+            tree["quant"] = self.quant
+        return checksum_tree(tree)
 
     @property
     def n_pages(self) -> int:
@@ -414,6 +426,9 @@ class PagedKVCache:
     # shared-prefix page cache (None = disabled); admission shares its
     # page runs copy-on-write via the refcounted allocator
     prefix: Optional[PrefixCache] = None
+    # optional FaultPlan (repro.serving.faults): swap_out / swap_in
+    # consult it to inject payload corruption and I/O errors
+    faults: object = None
     # device copy of block_tables, rebuilt only after admission/release —
     # the per-token decode loop must not pay a host→device upload
     _tables_device: object = None
@@ -657,18 +672,34 @@ class PagedKVCache:
         return blocks
 
     # ------------------------------------------------------------- swap
-    def swap_out(self, slot: int, n_tokens: int) -> SwappedKV:
+    def swap_out(self, slot: int, n_tokens: int, rid: int = -1) -> SwappedKV:
         """Move a victim slot's pages to host memory and free the slot.
 
         Device→host copy of the slot's whole pages, then the pages and
         the slot return to the free lists — the caller re-queues the
-        request and restores via :meth:`swap_in` at re-admission.
+        request and restores via :meth:`swap_in` at re-admission. The
+        payload carries a CRC of its pristine bytes. An injected
+        ``swap_out``/``fail`` fault raises :class:`SwapFault` *before*
+        any state moves (the engine falls back to recompute-mode
+        preemption); ``corrupt`` damages the host payload after the CRC
+        is taken, so swap-in's verification catches it.
         """
+        spec = self.faults.fire("swap_out", rid) if self.faults else None
+        if spec is not None:
+            self.tracer.lifecycle(
+                "fault", track="pool", site="swap_out", mode=spec.mode,
+                rid=int(rid), slot=int(slot),
+            )
+            if spec.mode == "fail":
+                raise SwapFault(
+                    f"injected swap-out I/O failure (slot {slot})",
+                    rid=(int(rid) if rid >= 0 else None),
+                )
         blocks = self.slot_blocks[slot]
         idx = np.asarray(blocks, np.int32)
         t0 = self.tracer.now_us()
         swapped = SwappedKV(
-            k=np.asarray(self.k[:, idx]),
+            k=np.array(self.k[:, idx]),
             v=np.asarray(self.v[:, idx]),
             n_tokens=n_tokens,
             quant=(
@@ -676,6 +707,11 @@ class PagedKVCache:
                 if self.quant is not None else None
             ),
         )
+        swapped.checksum = swapped.payload_checksum()
+        if spec is not None and spec.mode == "corrupt":
+            # in-transit damage: the checksum above describes the
+            # pristine payload, so swap-in's verification must trip
+            swapped.k.view(np.uint8).reshape(-1)[0] ^= 0xFF
         self.release_slot(slot)
         self.tracer.complete(
             "kv_swap_out", track="pool", cat="kv", start_us=t0,
@@ -684,12 +720,16 @@ class PagedKVCache:
         )
         return swapped
 
-    def swap_in(self, slot: int, swapped: SwappedKV) -> int:
+    def swap_in(self, slot: int, swapped: SwappedKV, rid: int = -1) -> int:
         """Restore swapped pages into a freshly acquired slot.
 
         The slot must already hold at least ``swapped.n_pages`` pages
         (admission sizes it from the request's context length). Returns
         the bytes uploaded (host→device) for the swap-traffic metric.
+        The payload's CRC is verified before any device state moves; a
+        mismatch (real corruption, or an injected ``swap_in`` fault)
+        raises :class:`SwapFault` and leaves the slot untouched — the
+        engine discards the swap and recovers by recompute re-prefill.
         """
         blocks = self.slot_blocks[slot][: swapped.n_pages]
         if len(blocks) < swapped.n_pages:
@@ -697,13 +737,33 @@ class PagedKVCache:
                 f"slot {slot} holds {len(self.slot_blocks[slot])} pages, "
                 f"swap-in needs {swapped.n_pages}"
             )
+        if self.quant is not None and swapped.quant is None:
+            raise ValueError("quantized pool restored from fp swap")
+        spec = self.faults.fire("swap_in", rid) if self.faults else None
+        if spec is not None:
+            self.tracer.lifecycle(
+                "fault", track="pool", site="swap_in", mode=spec.mode,
+                rid=int(rid), slot=int(slot),
+            )
+            if spec.mode == "fail":
+                raise SwapFault(
+                    f"injected swap-in I/O failure (slot {slot})",
+                    rid=(int(rid) if rid >= 0 else None),
+                )
+            # corrupt: damage the host payload right before the verify
+            swapped.k = np.array(swapped.k, copy=True)
+            swapped.k.view(np.uint8).reshape(-1)[0] ^= 0xFF
+        if (swapped.checksum is not None
+                and swapped.payload_checksum() != swapped.checksum):
+            raise SwapFault(
+                f"swap payload failed checksum for slot {slot}",
+                rid=(int(rid) if rid >= 0 else None),
+            )
         idx = jnp.asarray(np.asarray(blocks, np.int32))
         t0 = self.tracer.now_us()
         self.k = self.k.at[:, idx].set(jnp.asarray(swapped.k, self.k.dtype))
         self.v = self.v.at[:, idx].set(jnp.asarray(swapped.v, self.v.dtype))
         if self.quant is not None:
-            if swapped.quant is None:
-                raise ValueError("quantized pool restored from fp swap")
             self.quant = {
                 n: a.at[:, idx].set(jnp.asarray(swapped.quant[n]))
                 for n, a in self.quant.items()

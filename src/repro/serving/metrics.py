@@ -116,6 +116,18 @@ class ServingMetrics:
     prefix_full_hits: int = 0
     prefix_tokens_saved: int = 0
     cow_copies: int = 0
+    # fault plane (repro.serving.faults): injections observed per site,
+    # recoveries (upload retries / swap recompute fallbacks / degraded
+    # serves) and typed terminations (cancel / deadline / poisoned) —
+    # all integer counts so they replay bit-identically
+    fault_injected: int = 0
+    faults_by_site: Dict[str, int] = dataclasses.field(default_factory=dict)
+    upload_retries: int = 0
+    degraded_serves: int = 0
+    swap_fallbacks: int = 0
+    cancelled: int = 0
+    deadline_exceeded: int = 0
+    poisoned: int = 0
     megasteps: int = 0
     megastep_logical_steps: List[int] = dataclasses.field(default_factory=list)
     decode_compute_s: List[float] = dataclasses.field(default_factory=list)
@@ -288,6 +300,39 @@ class ServingMetrics:
         """One copy-on-write duplication of a shared partial tail page."""
         self.cow_copies += 1
 
+    # ------------------------------------------------------- fault plane
+    def record_fault(self, site: str) -> None:
+        """One injected fault fired at ``site`` (FaultPlan.fire)."""
+        self.fault_injected += 1
+        self.faults_by_site[site] = self.faults_by_site.get(site, 0) + 1
+
+    def record_upload_retry(self) -> None:
+        """One expert-upload attempt repeated after a transient fault or
+        checksum mismatch (the recovered attempt, not the failure)."""
+        self.upload_retries += 1
+
+    def record_degrade(self) -> None:
+        """One expert row pinned to a lower rung of the PMQ precision
+        ladder after its target-bit upload persistently failed."""
+        self.degraded_serves += 1
+
+    def record_swap_fallback(self) -> None:
+        """One preempted request whose KV swap payload failed checksum
+        or I/O and fell back to bit-exact recompute re-prefill."""
+        self.swap_fallbacks += 1
+
+    def record_cancel(self) -> None:
+        """One request terminated by client ``cancel(rid)``."""
+        self.cancelled += 1
+
+    def record_deadline(self) -> None:
+        """One request terminated past its ``deadline_steps``."""
+        self.deadline_exceeded += 1
+
+    def record_poisoned(self) -> None:
+        """One request terminated by the non-finite logits guard."""
+        self.poisoned += 1
+
     # ----------------------------------------------------------- derived
     @property
     def mid_flight_admissions(self) -> int:
@@ -346,6 +391,14 @@ class ServingMetrics:
             "prefix_full_hits": self.prefix_full_hits,
             "prefix_tokens_saved": self.prefix_tokens_saved,
             "cow_copies": self.cow_copies,
+            "fault_injected": self.fault_injected,
+            "faults_by_site": dict(sorted(self.faults_by_site.items())),
+            "upload_retries": self.upload_retries,
+            "degraded_serves": self.degraded_serves,
+            "swap_fallbacks": self.swap_fallbacks,
+            "cancelled": self.cancelled,
+            "deadline_exceeded": self.deadline_exceeded,
+            "poisoned": self.poisoned,
             "megasteps": self.megasteps,
             "megastep_logical_steps": list(self.megastep_logical_steps),
             "decode_dispatches": self.decode_dispatches,
@@ -415,6 +468,13 @@ class ServingMetrics:
                 if (self.prefix_hits + self.prefix_misses) else None
             ),
             "cow_copies": int(self.cow_copies),
+            "fault_injected": int(self.fault_injected),
+            "upload_retries": int(self.upload_retries),
+            "degraded_serves": int(self.degraded_serves),
+            "swap_fallbacks": int(self.swap_fallbacks),
+            "cancelled": int(self.cancelled),
+            "deadline_exceeded": int(self.deadline_exceeded),
+            "poisoned": int(self.poisoned),
             "megasteps": int(self.megasteps),
             "decode_compute_mean_s": _mean(self.decode_compute_s),
             "decode_offload_mean_s": _mean(self.decode_offload_s),

@@ -39,20 +39,82 @@ Residency is managed per ``(layer, bucket, expert slot)``:
   budget, the manager grows that bucket's resident buffer to fit (a
   one-time retrace) rather than serving wrong tokens — ``grows`` counts
   how often the configured budget was too small to be honored.
+* **Faults** (:mod:`repro.serving.faults`): with a :class:`FaultPlan`
+  attached, every upload runs the recovery ladder of
+  docs/serving_robustness.md — each staged payload is CRC-checked
+  against the host row's checksum and re-fetched on mismatch; transient
+  I/O failures retry (immediately and bounded on the miss path, with
+  deterministic logical-step backoff on the prefetch path); a row whose
+  target-bit upload persistently fails is **degraded**: its codes are
+  snapped to the next lower rung of the PMQ precision ladder
+  (:func:`degrade_expert_row` — same packed container, strictly fewer
+  levels, scale/zero kept) and served from there permanently, emitting
+  a ``degrade`` lifecycle event, or the manager fails closed with
+  :class:`~repro.serving.faults.ExpertUploadFailed` when degradation is
+  disabled or impossible (1-bit floor).
 """
 from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core.compressed_moe import CompressedExperts
+from .faults import (
+    ExpertUploadFailed,
+    FaultPlan,
+    checksum_tree,
+    corrupt_tree,
+)
 
-__all__ = ["ExpertOffloadManager"]
+__all__ = ["ExpertOffloadManager", "degrade_expert_row"]
+
+
+def degrade_expert_row(row: Dict, bits: int, to_bits: int) -> Dict:
+    """Snap one packed expert row's codes onto the ``2^to_bits`` grid,
+    re-encoded in the same ``bits``-wide container (shapes unchanged, so
+    the degraded payload drops into the resident buffer like any other
+    upload). Scale/zero tables are kept — the row keeps its calibrated
+    dynamic range but only ``2^to_bits`` distinct levels survive, i.e.
+    the next rung down the PMQ precision ladder. ``row`` is the
+    ``{w_gate/w_up/w_down: {data|hi+lo, scale, zero}}`` sub-tree of one
+    ``(layer, slot)`` host row (packed axis 0)."""
+    from ..core.packing import pack_bits, unpack_bits
+
+    if not 1 <= to_bits < bits:
+        raise ValueError(f"cannot degrade {bits}-bit codes to {to_bits}")
+    maxq = (1 << bits) - 1
+    maxt = (1 << to_bits) - 1
+
+    def snap(q):
+        q = np.asarray(q, np.float64)
+        q2 = np.rint(q * maxt / maxq)
+        return np.rint(q2 * maxq / maxt).astype(np.uint8)
+
+    out: Dict = {}
+    for wname, parts in row.items():
+        new = dict(parts)
+        if bits == 3:
+            q = np.asarray(unpack_bits(
+                (jnp.asarray(parts["hi"]), jnp.asarray(parts["lo"])),
+                3, axis=0,
+            ))
+            hi, lo = pack_bits(jnp.asarray(snap(q)), 3, axis=0)
+            new["hi"], new["lo"] = np.asarray(hi), np.asarray(lo)
+        elif bits == 8:
+            new["data"] = snap(parts["data"])
+        else:
+            q = np.asarray(unpack_bits(jnp.asarray(parts["data"]), bits,
+                                       axis=0))
+            new["data"] = np.asarray(
+                pack_bits(jnp.asarray(snap(q)), bits, axis=0)
+            )
+        out[wname] = new
+    return out
 
 
 class ExpertOffloadManager:
@@ -69,7 +131,9 @@ class ExpertOffloadManager:
     """
 
     def __init__(self, ce: CompressedExperts, *, resident_slots: int,
-                 ema_decay: float = 0.8, tracer=None):
+                 ema_decay: float = 0.8, tracer=None,
+                 faults: Optional[FaultPlan] = None, degrade: bool = False,
+                 max_retries: int = 3):
         if ce.resident_map is not None:
             raise ValueError("CompressedExperts is already host-offloaded")
         if tracer is None:
@@ -77,6 +141,19 @@ class ExpertOffloadManager:
 
             tracer = NULL_TRACER
         self.tracer = tracer
+        # fault plane (docs/serving_robustness.md): with a FaultPlan
+        # attached every upload is checksum-verified and runs the
+        # retry -> re-fetch -> degrade -> fail-closed recovery ladder
+        self.faults = faults
+        self.degrade_enabled = bool(degrade)
+        self.max_retries = int(max_retries)
+        self._host_crc: Dict[Tuple[str, int, int], int] = {}
+        self._degraded_rows: Dict[Tuple[str, int, int], Dict] = {}
+        # (layer, global slot) -> (from_bits, to_bits), engine-lifetime
+        self.degraded: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        self._attempts: Dict[Tuple[str, int, int], int] = {}
+        # prefetch backoff: key -> logical step before which no re-attempt
+        self._retry_after: Dict[Tuple[str, int, int], int] = {}
         self.meta = ce.meta
         self.num_slots = ce.num_slots
         self.ema_decay = float(ema_decay)
@@ -182,11 +259,167 @@ class ExpertOffloadManager:
         }
 
     # ----------------------------------------------------------- plumbing
-    def _upload_batch(self, bk: str, triples) -> int:
+    def _row_tree(self, bk: str, layer: int, slot: int) -> Dict:
+        """The pristine host payload of one (layer, bucket-local slot)
+        row: the ``{w_gate/w_up/w_down: {...}}`` sub-tree sliced from the
+        ``[L, count, ...]`` backing-store leaves (numpy views)."""
+        return jax.tree.map(lambda a: a[layer, slot], self.host[bk])
+
+    def _row_crc(self, bk: str, layer: int, slot: int) -> int:
+        """Lazily computed/cached checksum of the pristine host row —
+        what every staged upload payload is verified against."""
+        key = (bk, int(layer), int(slot))
+        crc = self._host_crc.get(key)
+        if crc is None:
+            crc = checksum_tree(self._row_tree(bk, layer, slot))
+            self._host_crc[key] = crc
+        return crc
+
+    def _degrade_target_bits(self, i: int) -> Optional[int]:
+        """to_bits for bucket ``i``: the next lower rung of the mixed-
+        precision ladder (the largest smaller bucket width, else half
+        this bucket's width). ``None`` means no rung below (1-bit floor)."""
+        bits = self.meta[i].bits
+        lower = [m.bits for m in self.meta if m.bits < bits]
+        if lower:
+            return max(lower)
+        return bits // 2 if bits // 2 >= 1 else None
+
+    def _degrade_or_raise(self, i: int, layer: int, slot: int) -> Dict:
+        """A row's target-bit upload failed past the retry budget: build
+        (and permanently cache) its precision-degraded payload, or fail
+        closed with :class:`ExpertUploadFailed` when degradation is
+        disabled or the row is already at the 1-bit floor."""
+        bk = self._bkeys[i]
+        m = self.meta[i]
+        gslot = int(m.start + slot)
+        to_bits = self._degrade_target_bits(i) if self.degrade_enabled else None
+        if to_bits is None:
+            raise ExpertUploadFailed(
+                f"expert row (layer {layer}, slot {gslot}) upload failed "
+                f"past {self.max_retries} retries and degradation is "
+                + ("impossible at the 1-bit floor" if self.degrade_enabled
+                   else "disabled")
+            )
+        key = (bk, int(layer), int(slot))
+        if key not in self._degraded_rows:
+            self._degraded_rows[key] = degrade_expert_row(
+                self._row_tree(bk, layer, slot), m.bits, to_bits
+            )
+            self.degraded[(int(layer), gslot)] = (int(m.bits), int(to_bits))
+        return self._degraded_rows[key]
+
+    def _clear_for_upload(self, i: int, layer: int, slots, kind: str):
+        """Run the recovery ladder over bucket-local ``slots`` of one
+        layer before placement. Returns ``(cleared, payloads)`` —
+        ``payloads`` is ``None`` on the fault-free fast path (the caller
+        batch-gathers from the backing store), else one verified host
+        row per cleared slot. On the ``miss`` path every slot is cleared
+        (bounded immediate retries, then degrade-or-raise: the megastep
+        cannot proceed without the row); on the ``prefetch`` path a
+        transiently failing slot is deferred with deterministic
+        logical-step backoff and simply dropped from this boundary's
+        placement (a later boundary, or a miss, re-attempts)."""
+        bk = self._bkeys[i]
+        m = self.meta[i]
+        if self.faults is None and not self._degraded_rows:
+            return list(slots), None
+        cleared: List[int] = []
+        payloads: List[Dict] = []
+        for s in slots:
+            s = int(s)
+            key = (bk, int(layer), s)
+            gslot = int(m.start + s)
+            degraded = self._degraded_rows.get(key)
+            if degraded is not None:
+                # permanently degraded: serve the lower-bit copy. The
+                # fault models the *target-bit* payload's transport; the
+                # degraded substitute is a different payload and bypasses
+                # injection.
+                fb, tb = self.degraded[(int(layer), gslot)]
+                self.tracer.lifecycle(
+                    "degrade", track="experts", layer=int(layer),
+                    slot=gslot, from_bits=fb, to_bits=tb,
+                )
+                cleared.append(s)
+                payloads.append(degraded)
+                continue
+            if self.faults is None:
+                cleared.append(s)
+                payloads.append(self._row_tree(bk, layer, s))
+                continue
+            was_deferred = key in self._retry_after
+            if kind == "prefetch" and was_deferred:
+                if self.faults.step < self._retry_after[key]:
+                    continue  # still backing off — skip this boundary
+                del self._retry_after[key]
+                self.tracer.lifecycle(
+                    "retry", track="experts", path="prefetch",
+                    layer=int(layer), slot=gslot,
+                    attempt=int(self._attempts.get(key, 0)),
+                )
+            attempts = int(self._attempts.get(key, 0))
+            while True:
+                spec = self.faults.fire("upload", (int(layer), gslot))
+                if spec is not None:
+                    self.tracer.lifecycle(
+                        "fault", track="experts", site="upload",
+                        mode=spec.mode, layer=int(layer), slot=gslot,
+                        path=kind,
+                    )
+                if spec is None or spec.mode == "corrupt":
+                    row = self._row_tree(bk, layer, s)
+                    if spec is not None:
+                        row = corrupt_tree(row)
+                    if checksum_tree(row) != self._row_crc(bk, layer, s):
+                        # integrity check caught the damage: re-fetch the
+                        # pristine host payload (one recovered retry)
+                        self.tracer.lifecycle(
+                            "retry", track="experts", path="refetch",
+                            layer=int(layer), slot=gslot,
+                            attempt=attempts + 1,
+                        )
+                        row = self._row_tree(bk, layer, s)
+                    cleared.append(s)
+                    payloads.append(row)
+                    self._attempts.pop(key, None)
+                    break
+                # mode == "fail": transient/persistent I/O error
+                attempts += 1
+                self._attempts[key] = attempts
+                if attempts > self.max_retries:
+                    # persistent: degrade to the next ladder rung (or
+                    # fail closed). The degraded payload bypasses
+                    # injection — see above.
+                    row = self._degrade_or_raise(i, layer, s)
+                    fb, tb = self.degraded[(int(layer), gslot)]
+                    self.tracer.lifecycle(
+                        "degrade", track="experts", layer=int(layer),
+                        slot=gslot, from_bits=fb, to_bits=tb,
+                    )
+                    cleared.append(s)
+                    payloads.append(row)
+                    break
+                if kind == "prefetch":
+                    # deterministic backoff in logical steps, never
+                    # seconds — replay-identical across runs
+                    self._retry_after[key] = self.faults.step + (1 << attempts)
+                    break  # deferred; a later boundary re-attempts
+                # miss path: bounded immediate retries
+                self.tracer.lifecycle(
+                    "retry", track="experts", path="miss",
+                    layer=int(layer), slot=gslot, attempt=attempts,
+                )
+        return cleared, payloads
+
+    def _upload_batch(self, bk: str, triples, payloads=None) -> int:
         """Host→device copy of ``(layer, row, slot)`` placements — one
         batched scatter per packed leaf per bucket, regardless of how
         many layers the placements span (a per-layer ``.set`` would
-        rebuild the whole [L, R, ...] buffer once per layer)."""
+        rebuild the whole [L, R, ...] buffer once per layer).
+        ``payloads`` (one verified host-row tree per triple, from
+        :meth:`_clear_for_upload`) replaces the backing-store gather on
+        the fault path."""
         if not triples:
             return 0
         l_idx = np.asarray([t[0] for t in triples], np.int32)
@@ -194,13 +427,28 @@ class ExpertOffloadManager:
         s_idx = np.asarray([t[2] for t in triples], np.int32)
         nbytes = 0
 
-        def up(dev, host):
+        if payloads is None:
+            def up(dev, host):
+                nonlocal nbytes
+                src = host[l_idx, s_idx]  # [n, ...]
+                nbytes += src.nbytes
+                return dev.at[l_idx, r_idx].set(jnp.asarray(src))
+
+            self.ce.arrays[bk] = jax.tree.map(
+                up, self.ce.arrays[bk], self.host[bk]
+            )
+            return nbytes
+
+        stacked = jax.tree.map(lambda *rows: np.stack(rows), *payloads)
+
+        def up_rows(dev, src):
             nonlocal nbytes
-            src = host[l_idx, s_idx]  # [n, ...]
             nbytes += src.nbytes
             return dev.at[l_idx, r_idx].set(jnp.asarray(src))
 
-        self.ce.arrays[bk] = jax.tree.map(up, self.ce.arrays[bk], self.host[bk])
+        self.ce.arrays[bk] = jax.tree.map(
+            up_rows, self.ce.arrays[bk], stacked
+        )
         return nbytes
 
     def _refresh_map(self, bk: str) -> None:
@@ -320,6 +568,7 @@ class ExpertOffloadManager:
         ups = 0
         nbytes = 0
         pending = {bk: [] for bk in self._bkeys}
+        pend_rows = {bk: [] for bk in self._bkeys}
         for k in range(rows.shape[0]):
             l = int(layer_of[k])
             row_missed = False
@@ -334,6 +583,11 @@ class ExpertOffloadManager:
                 row_missed = True
                 if len(pin) > self._budgets[i]:
                     self._grow(i, len(pin))
+                # recovery ladder first: on the miss path every slot is
+                # cleared (retried, degraded) or a typed fault is raised
+                missing, rows_pay = self._clear_for_upload(
+                    i, l, missing, "miss"
+                )
                 # pin ≤ budget now, so every missing slot finds a row
                 placed = self._place(
                     i, l, missing, pin,
@@ -341,12 +595,16 @@ class ExpertOffloadManager:
                 )
                 assert len(placed) == len(missing), "pin set exceeds budget"
                 pending[bk].extend(placed)
+                if rows_pay is not None:
+                    pend_rows[bk].extend(rows_pay)
                 ups += len(placed)
             if row_missed:
                 break  # later rows routed on garbage — replay first
         for bk in self._bkeys:  # one batched upload + map per bucket
             if pending[bk]:
-                nbytes += self._upload_batch(bk, pending[bk])
+                nbytes += self._upload_batch(
+                    bk, pending[bk], pend_rows[bk] or None
+                )
                 self._refresh_map(bk)
         if ups:
             self.tracer.complete(
@@ -408,6 +666,7 @@ class ExpertOffloadManager:
         ups = 0
         nbytes = 0
         pending = {bk: [] for bk in self._bkeys}
+        pend_rows = {bk: [] for bk in self._bkeys}
         for i, l, desired in targets:
             bk = self._bkeys[i]
             m = self.meta[i]
@@ -417,13 +676,23 @@ class ExpertOffloadManager:
             )
             if not want:
                 continue
+            # recovery ladder: transiently failing prefetch uploads are
+            # deferred with logical-step backoff (dropped from this
+            # boundary's placement); the rest arrive verified
+            want, rows_pay = self._clear_for_upload(i, l, want, "prefetch")
+            if not want:
+                continue
             placed = self._place(i, l, want, set(desired),
                                  lambda s, scores=scores: scores[s])
             pending[bk].extend(placed)
+            if rows_pay is not None:
+                pend_rows[bk].extend(rows_pay)
             ups += len(placed)
         for bk in self._bkeys:  # one batched upload + map per bucket
             if pending[bk]:
-                nbytes += self._upload_batch(bk, pending[bk])
+                nbytes += self._upload_batch(
+                    bk, pending[bk], pend_rows[bk] or None
+                )
                 self._refresh_map(bk)
         if ups:
             self.tracer.complete(

@@ -55,6 +55,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from .faults import InvalidRequest, SwapFault
 from .kvcache import PagedKVCache, PoolExhausted, SwappedKV
 
 __all__ = ["Request", "Scheduler", "VALID_POLICIES"]
@@ -75,6 +76,11 @@ class Request:
     # ---- multi-tenant policy (ignored under policy="fcfs") ----
     tenant: str = "default"
     priority: int = 0  # higher = more urgent; victim selection walks up
+    # logical-step deadline: the request must finish within this many
+    # megastep boundaries of submission or it terminates with
+    # DeadlineExceeded (None = no deadline). Logical steps, never
+    # seconds — deadline expiry replays bit-identically.
+    deadline_steps: Optional[int] = None
     # ---- filled in by scheduler/engine ----
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
@@ -165,10 +171,36 @@ class Scheduler:
 
     # ---------------------------------------------------------- queue
     def submit(self, req: Request, step_idx: int = 0) -> None:
+        """Enqueue one request. Malformed inputs are rejected *here*
+        with :class:`InvalidRequest` (a ``ValueError`` subclass) —
+        typed, at submit time — instead of failing deep inside admission
+        or the jitted prefill."""
         if len(req.prompt) == 0:
-            raise ValueError(f"request {req.rid}: empty prompt")
+            raise InvalidRequest(
+                f"request {req.rid}: empty prompt", rid=req.rid
+            )
         if req.max_new < 1:
-            raise ValueError(f"request {req.rid}: max_new must be ≥ 1")
+            raise InvalidRequest(
+                f"request {req.rid}: max_new must be ≥ 1, got {req.max_new}",
+                rid=req.rid,
+            )
+        if req.priority < 0:
+            raise InvalidRequest(
+                f"request {req.rid}: negative priority {req.priority}",
+                rid=req.rid,
+            )
+        if req.deadline_steps is not None and req.deadline_steps < 1:
+            raise InvalidRequest(
+                f"request {req.rid}: deadline_steps must be ≥ 1, "
+                f"got {req.deadline_steps}",
+                rid=req.rid,
+            )
+        live = {r.rid for r in self.waiting}
+        live.update(r.rid for r in self.active.values())
+        if req.rid in live:
+            raise InvalidRequest(
+                f"request {req.rid}: rid already live", rid=req.rid
+            )
         if req.total_tokens > self.cache.max_slot_tokens():
             raise ValueError(
                 f"request {req.rid}: {req.total_tokens} tokens exceed the "
@@ -393,12 +425,22 @@ class Scheduler:
         ``swap=True`` moves its KV pages to the host backing store
         (bit-exact restore at re-admission); ``swap=False`` drops them —
         the engine re-prefills ``prompt + out[:-1]`` on resume. Either
-        way the pages and the slot are free when this returns.
+        way the pages and the slot are free when this returns. An
+        injected/real swap-out failure degrades the preemption to
+        recompute mode (``swap_fallback`` lifecycle event) — recompute
+        re-prefill is bit-exact, so recovery is invisible to outputs.
         """
         req = self.active.pop(slot)
         if swap:
-            req.swapped = self.cache.swap_out(slot, req.pos)
-        else:
+            try:
+                req.swapped = self.cache.swap_out(slot, req.pos, rid=req.rid)
+            except SwapFault:
+                self.tracer.lifecycle(
+                    "swap_fallback", track="queue", rid=req.rid,
+                    site="swap_out",
+                )
+                swap = False
+        if not swap:
             req.swapped = None
             self.cache.release_slot(slot)
         req.slot = -1
@@ -415,6 +457,28 @@ class Scheduler:
         req = self.active.pop(slot)
         self.cache.release_slot(slot)
         return req
+
+    def cancel_release(self, req: Request) -> None:
+        """Atomically release *everything* a cancelled/errored request
+        holds, wherever it is in its lifecycle: an active slot's pages
+        (prefix-shared pages just drop one refcount hold — the cache and
+        any co-holders are untouched), a waiting queue entry, a swap
+        image, and any prefix-admission state. Safe to call on a request
+        that holds nothing. The engine's cancel/deadline/fail-closed
+        paths all funnel through here so a terminated request can never
+        leak pages or refcounts."""
+        if req.slot >= 0 and req.slot in self.active:
+            if self.active[req.slot] is req:
+                self.active.pop(req.slot)
+                self.cache.release_slot(req.slot)
+        req.slot = -1
+        try:
+            self.waiting.remove(req)
+        except ValueError:
+            pass
+        req.swapped = None
+        req.cached_tokens = 0
+        req.cached_logits = None
 
     # ---------------------------------------------------------- state
     def has_work(self) -> bool:

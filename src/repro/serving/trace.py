@@ -366,6 +366,20 @@ class MetricsConsumer:
             m.record_prefix_miss()
         elif kind == "cow_copy":
             m.record_cow_copy()
+        elif kind == "fault":
+            m.record_fault(f["site"])
+        elif kind == "retry":
+            m.record_upload_retry()
+        elif kind == "degrade":
+            m.record_degrade()
+        elif kind == "swap_fallback":
+            m.record_swap_fallback()
+        elif kind == "cancel":
+            m.record_cancel()
+        elif kind == "deadline":
+            m.record_deadline()
+        elif kind == "poisoned":
+            m.record_poisoned()
         # other kinds (enqueue, first_token, …) carry no metric state
 
 
@@ -430,7 +444,9 @@ class ExpertRoutingTelemetry:
             "routing_gini": self.last_gini,
         }
 
-    def bit_misallocation_report(self, meta) -> Optional[Dict]:
+    def bit_misallocation_report(self, meta,
+                                 degraded: Optional[Dict] = None
+                                 ) -> Optional[Dict]:
         """Join observed routing frequency against the PMQ bit
         assignment (``meta`` = :class:`repro.core.compressed_moe
         .BucketMeta` tuple). Per (layer, slot): observed dispatch count,
@@ -440,9 +456,16 @@ class ExpertRoutingTelemetry:
         significance — the paper's §3.2 story holding at serve time) and
         the reallocation candidates: ``hot_low_bit`` slots carry an
         above-uniform share at the minimum width, ``cold_high_bit``
-        slots a below-uniform share at the maximum width."""
+        slots a below-uniform share at the maximum width.
+
+        ``degraded`` (optional) maps ``(layer, slot) → served bits`` for
+        experts pinned to a lower rung of the precision ladder after
+        persistent upload failures (docs/serving_robustness.md): each
+        entry gains a ``served_bits`` column (= allocated bits when not
+        degraded) and the report a top-level ``degraded_experts`` list."""
         if self.hist is None:
             return None
+        degraded = dict(degraded or {})
         num_layers, num_slots = self.hist.shape
         bits = np.zeros(num_slots, np.int64)
         for m in meta:
@@ -474,6 +497,7 @@ class ExpertRoutingTelemetry:
                 "cold_high_bit": cold_high if lo != hi else [],
                 "entries": [
                     {"slot": int(s), "bits": int(bits[s]),
+                     "served_bits": int(degraded.get((l, s), bits[s])),
                      "count": int(h[s]), "freq": float(freq[s]),
                      "freq_rank": int(rank[s])}
                     for s in range(num_slots)
@@ -487,6 +511,12 @@ class ExpertRoutingTelemetry:
             "mean_freq_bits_corr": (
                 float(np.mean(corrs)) if corrs else None
             ),
+            "degraded_experts": [
+                {"layer": int(l), "slot": int(s),
+                 "from_bits": int(bits[s]) if s < num_slots else None,
+                 "to_bits": int(tb)}
+                for (l, s), tb in sorted(degraded.items())
+            ],
             "layers": layers,
         }
 

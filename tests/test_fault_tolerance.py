@@ -1,0 +1,147 @@
+"""Direct unit tests for the fault-tolerance runtime primitives.
+
+The serving watchdog (PagedServingEngine) reuses HeartbeatTable with an
+injected clock; these tests drive every primitive with fake clocks and
+injected callbacks so expiry, straggler flagging, and restart policy are
+exercised deterministically — no sleeps, no wall time.
+"""
+import pytest
+
+from repro.runtime.fault_tolerance import (
+    FailurePolicy,
+    HeartbeatTable,
+    ResilientLoop,
+    StragglerMonitor,
+)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# ------------------------------------------------------- HeartbeatTable
+def test_heartbeat_expiry_via_injected_clock():
+    clk = FakeClock()
+    hb = HeartbeatTable([0, 1, 2], timeout=10.0, clock=clk)
+    assert hb.failed() == []
+    assert sorted(hb.alive()) == [0, 1, 2]
+    # host 1 keeps beating; 0 and 2 go silent
+    clk.advance(8.0)
+    hb.beat(1)
+    clk.advance(8.0)  # 0/2 last seen 16s ago; 1 seen 8s ago
+    assert sorted(hb.failed()) == [0, 2]
+    assert hb.alive() == [1]
+    # a late beat resurrects the host — deadline detectors hold no grudge
+    hb.beat(0)
+    assert hb.failed() == [2]
+    assert sorted(hb.alive()) == [0, 1]
+
+
+def test_heartbeat_explicit_now_overrides_clock():
+    clk = FakeClock(100.0)
+    hb = HeartbeatTable([7], timeout=5.0, clock=clk)
+    # explicit `now` wins over the injected clock in both beat and failed
+    hb.beat(7, now=200.0)
+    assert hb.failed(now=204.0) == []
+    assert hb.failed(now=206.0) == [7]
+    # and the injected clock (stuck at 100 < 200) sees the host alive
+    assert hb.failed() == []
+
+
+def test_heartbeat_boundary_is_strict():
+    clk = FakeClock()
+    hb = HeartbeatTable([0], timeout=10.0, clock=clk)
+    clk.advance(10.0)
+    assert hb.failed() == []  # exactly at the deadline: still alive
+    clk.advance(1e-9)
+    assert hb.failed() == [0]
+
+
+# ----------------------------------------------------- StragglerMonitor
+def test_straggler_flags_slow_host():
+    mon = StragglerMonitor(window=8, threshold=1.5)
+    for _ in range(6):
+        for h in (0, 1, 2):
+            mon.record(h, 1.0)
+        mon.record(3, 2.0)  # consistently 2x the fleet median
+    assert mon.stragglers() == [3]
+
+
+def test_straggler_needs_history_and_peers():
+    mon = StragglerMonitor(window=8, threshold=1.5)
+    # fewer than 4 samples per host: no verdicts
+    for h in (0, 1):
+        for _ in range(3):
+            mon.record(h, 1.0)
+    assert mon.stragglers() == []
+    # one host alone can never be a straggler relative to itself
+    solo = StragglerMonitor()
+    for _ in range(8):
+        solo.record(0, 9.0)
+    assert solo.stragglers() == []
+
+
+def test_straggler_recovers_as_window_slides():
+    mon = StragglerMonitor(window=4, threshold=1.5)
+    for _ in range(4):
+        mon.record(0, 1.0)
+        mon.record(1, 1.0)
+        mon.record(2, 4.0)
+    assert mon.stragglers() == [2]
+    # the slow host speeds up; the rolling window forgets the bad epoch
+    for _ in range(4):
+        mon.record(0, 1.0)
+        mon.record(1, 1.0)
+        mon.record(2, 1.0)
+    assert mon.stragglers() == []
+
+
+# ------------------------------------------------------- ResilientLoop
+def test_resilient_loop_restores_and_completes():
+    calls = {"restore": 0}
+    boom = {5: True}  # step 5 fails exactly once
+
+    def step(i):
+        if boom.pop(i, False):
+            raise RuntimeError("injected step fault")
+        return {"step": i}
+
+    loop = ResilientLoop(FailurePolicy(
+        max_restarts=3, restore_fn=lambda: calls.__setitem__(
+            "restore", calls["restore"] + 1),
+    ))
+    out = loop.run(step, start=0, steps=10)
+    assert out == {"step": 9}
+    assert loop.restarts == 1
+    assert calls["restore"] == 1
+    assert [e for e in loop.events if "error" in e] == [
+        {"step": 5, "error": repr(RuntimeError("injected step fault"))}
+    ]
+
+
+def test_resilient_loop_shrinks_then_gives_up():
+    actions = []
+    loop = ResilientLoop(FailurePolicy(
+        max_restarts=2, shrink_after=2,
+        restore_fn=lambda: actions.append("restore"),
+        shrink_fn=lambda: actions.append("shrink"),
+    ))
+
+    def always_fails(i):
+        raise ValueError("permanent fault")
+
+    with pytest.raises(RuntimeError, match="exceeded max_restarts=2"):
+        loop.run(always_fails, start=0, steps=4)
+    # restart 1: restore only; restart 2: shrink then restore; restart 3
+    # would exceed max_restarts → raises before any action
+    assert actions == ["restore", "shrink", "restore"]
+    assert loop.restarts == 3
+    shrink_events = [e for e in loop.events if e.get("action") == "shrink"]
+    assert len(shrink_events) == 1

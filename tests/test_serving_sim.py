@@ -36,10 +36,20 @@ from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
 from repro.configs.base import ModelConfig
 from repro.models.registry import get_model
 from repro.serving import (
+    DeadlineExceeded,
     EngineConfig,
+    ExpertUploadFailed,
+    FaultPlan,
+    FaultSpec,
+    InvalidRequest,
+    LivelockDetected,
     PagedServingEngine,
+    PoisonedRequest,
     Request,
+    RequestCancelled,
+    ServingFault,
     VALID_POLICIES,
+    WatchdogTimeout,
 )
 from repro.serving.engine import dense_greedy_reference
 
@@ -203,14 +213,12 @@ def check_invariants(engine: PagedServingEngine) -> None:
             assert req.swapped.n_tokens == req.pos
 
 
-def run_trace(cfg, params, trace: Trace, **ecfg_kw):
-    """Drive the engine step-by-step, interleaving arrivals, checking
-    invariants throughout. Returns the finished engine. ``ecfg_kw``
-    passes extra :class:`EngineConfig` fields through (e.g.
-    ``trace_level`` for the span-tracer determinism tests)."""
+def make_engine(cfg, params, trace: Trace, faults=None, **ecfg_kw):
+    """Build the engine a :class:`Trace` describes (shared by
+    :func:`run_trace` and the fault-plane drivers below)."""
     mb = -(-(max(p + m for p, m in zip(trace.full_lens, trace.max_news)))
            // BLOCK)
-    engine = PagedServingEngine(
+    return PagedServingEngine(
         cfg, params,
         EngineConfig(
             max_slots=trace.max_slots,
@@ -229,7 +237,36 @@ def run_trace(cfg, params, trace: Trace, **ecfg_kw):
             ),
             **ecfg_kw,
         ),
+        faults=faults,
     )
+
+
+def assert_drained_clean(engine, trace: Trace) -> None:
+    """Post-drain pool hygiene: everything finished (or terminated with
+    a typed error); every page is either free or held *only* by the
+    prefix cache (ready for the next batch), and a cache teardown
+    returns the pool to fully free."""
+    assert not engine.scheduler.active and not engine.scheduler.waiting
+    cache = engine.cache
+    held = cache.prefix.pages_held if cache.prefix is not None else frozenset()
+    assert cache.allocator.allocated == held, (
+        "drained pool holds pages unreachable from the prefix cache"
+    )
+    assert cache.allocator.num_free + len(held) == trace.pool_blocks
+    assert sorted(cache.free_slots) == list(range(trace.max_slots))
+    assert cache.slot_blocks == {}
+    cache.check_consistency()
+    cache.clear_prefix_cache()
+    assert cache.allocator.num_free == trace.pool_blocks
+
+
+def run_trace(cfg, params, trace: Trace, faults=None, **ecfg_kw):
+    """Drive the engine step-by-step, interleaving arrivals, checking
+    invariants throughout. Returns the finished engine. ``ecfg_kw``
+    passes extra :class:`EngineConfig` fields through (e.g.
+    ``trace_level`` for the span-tracer determinism tests);
+    ``faults`` attaches a :class:`FaultPlan` (the fault-plane fuzz)."""
+    engine = make_engine(cfg, params, trace, faults=faults, **ecfg_kw)
     pending = sorted(
         zip(trace.submit_steps, trace.requests(cfg.vocab_size)),
         key=lambda t: t[0],
@@ -243,21 +280,7 @@ def run_trace(cfg, params, trace: Trace, **ecfg_kw):
             engine.step()
             check_invariants(engine)
         tick += 1
-    # drained: everything finished; every page is either free or held
-    # *only* by the prefix cache (ready for the next batch), and a cache
-    # teardown returns the pool to fully free
-    assert not engine.scheduler.active and not engine.scheduler.waiting
-    cache = engine.cache
-    held = cache.prefix.pages_held if cache.prefix is not None else frozenset()
-    assert cache.allocator.allocated == held, (
-        "drained pool holds pages unreachable from the prefix cache"
-    )
-    assert cache.allocator.num_free + len(held) == trace.pool_blocks
-    assert sorted(cache.free_slots) == list(range(trace.max_slots))
-    assert cache.slot_blocks == {}
-    cache.check_consistency()
-    cache.clear_prefix_cache()
-    assert cache.allocator.num_free == trace.pool_blocks
+    assert_drained_clean(engine, trace)
     return engine
 
 
@@ -805,3 +828,482 @@ def test_readmission_accounting_under_churn(dense_model):
     # TTFT: one sample per request, measured from original arrival
     assert len(m.ttft_s) == n
     assert m.summary()["readmissions"] == len(m.preemptions)
+
+
+# ================================================== fail-closed serving
+# The headline invariant (docs/serving_robustness.md): under ANY fault
+# schedule every request either completes **bit-identical** to the
+# fault-free run or terminates with a **typed** ServingFault — and the
+# pool drains clean either way (zero leaked pages/slots/refcounts,
+# asserted by run_trace after every step and at drain).
+def assert_bit_exact_or_typed_error(cfg, params, engine, trace):
+    mcfg = engine.model_cfg
+    shed_rids = {rec["rid"] for rec in engine.metrics.sheds}
+    for req in trace.requests(cfg.vocab_size):
+        got = engine.results[req.rid]
+        ref = reference_tokens(mcfg, params, req.prompt, req.max_new)
+        if req.rid in engine.errors:
+            exc = engine.errors[req.rid]
+            assert isinstance(exc, ServingFault), exc
+            # greedy decode is deterministic, so whatever a terminated
+            # request did emit must be a prefix of its fault-free tokens
+            # — a non-prefix partial result would be silent corruption
+            assert got == ref[: len(got)], (
+                f"rid={req.rid}: partial output {got} is not a prefix "
+                f"of the fault-free tokens {ref}"
+            )
+            continue
+        if req.rid in shed_rids:
+            assert got == [], f"rid={req.rid} was shed but emitted tokens"
+            continue
+        assert got == ref, (
+            f"rid={req.rid}: {got} != fault-free reference {ref}"
+        )
+
+
+FUZZ_SITES = ("swap_out", "swap_in", "pool", "logits")
+
+
+@pytest.mark.parametrize("seed,horizon,preempt_mode", [
+    (0, 1, "swap"),
+    (1, 4, "recompute"),
+    (2, 8, "swap"),
+    (3, 4, "swap"),
+])
+def test_fault_fuzz_bit_exact_or_typed_error(
+    dense_model, seed, horizon, preempt_mode
+):
+    """Seeded fault-schedule fuzz over horizon × preemption mode on a
+    minimal pool (maximum churn): swap and pool faults must recover
+    bit-identically (checksum → recompute re-prefill; planning-only
+    admission pressure), poisoned logits must terminate exactly their
+    request with a typed error, and the whole schedule — outputs,
+    errors, AND the deterministic counters — replays bit-identically
+    from ``plan.replay()``."""
+    cfg, params = dense_model
+    base = _random_trace(np.random.default_rng(200 + seed))
+    trace = dataclasses.replace(
+        base, horizon=horizon, preempt_mode=preempt_mode,
+        pool_blocks=base.min_pool,
+    )
+    rids = list(range(len(trace.prompt_lens)))
+    plan = FaultPlan.generate(
+        400 + seed, n_faults=8, max_step=16, sites=FUZZ_SITES, rids=rids,
+    )
+    fault_free = run_trace(cfg, params, trace)
+    engine = run_trace(cfg, params, trace, faults=plan)
+    assert_bit_exact_or_typed_error(cfg, params, engine, trace)
+    # swap/pool faults are recoverable: the only typed terminations a
+    # schedule over these sites may produce are poisoned requests
+    for rid, exc in engine.errors.items():
+        assert isinstance(exc, PoisonedRequest), (rid, exc)
+    for rid, toks in fault_free.results.items():
+        if rid not in engine.errors:
+            assert engine.results[rid] == toks
+    ctr = engine.metrics.counters()
+    assert ctr["fault_injected"] == plan.injected
+    # replay: same schedule ⇒ bit-identical outcomes and counters
+    replay_plan = plan.replay()
+    engine2 = run_trace(cfg, params, trace, faults=replay_plan)
+    assert engine2.results == engine.results
+    assert {r: type(e) for r, e in engine2.errors.items()} == \
+        {r: type(e) for r, e in engine.errors.items()}
+    assert engine2.metrics.counters() == ctr
+    assert replay_plan.log == plan.log
+
+
+if HAS_HYPOTHESIS:
+    @given(trace=traces(), fault_seed=st.integers(0, 2**16))
+    @settings()  # example counts/deadline come from the conftest profiles
+    def test_property_faults_bit_exact_or_typed(dense_model, trace, fault_seed):
+        """Hypothesis: ANY trace × ANY transient fault schedule over the
+        dense-engine sites drains clean with every request bit-exact or
+        typed-errored."""
+        cfg, params = dense_model
+        plan = FaultPlan.generate(
+            fault_seed, n_faults=6, max_step=12, sites=FUZZ_SITES,
+            rids=list(range(len(trace.prompt_lens))),
+        )
+        engine = run_trace(cfg, params, trace, faults=plan)
+        assert_bit_exact_or_typed_error(cfg, params, engine, trace)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_faults_bit_exact_or_typed():
+        pass
+
+
+# ------------------------------------------- expert-upload fault plane
+@pytest.fixture(scope="module")
+def compressed_moe_model(moe_model):
+    """The sim MoE model PMQ-compressed into the serving layout with a
+    {2, 3}-bit ladder (no 1-bit floor: every bucket has a rung below)."""
+    from test_offload import compress_for_serving
+
+    cfg, params = moe_model
+    return cfg, compress_for_serving(cfg, params, bits=[2, 2, 3, 3])
+
+
+def _offload_trace(seed: int, horizon: int) -> Trace:
+    rng = np.random.default_rng(seed)
+    n = 4
+    t = Trace(
+        prompt_lens=tuple(int(x) for x in rng.integers(2, 6, n)),
+        max_news=tuple(int(x) for x in rng.integers(3, 7, n)),
+        submit_steps=(0,) * n, pool_blocks=0, preempt_mode="swap",
+        max_slots=3, horizon=horizon,
+    )
+    return dataclasses.replace(
+        t, pool_blocks=max(t.min_pool, (2 * t.demand) // 3)
+    )
+
+
+@pytest.mark.parametrize("budget,horizon,seed", [
+    (2, 1, 0), (2, 4, 1), (3, 4, 0),
+])
+def test_transient_upload_faults_recover_bit_identical(
+    compressed_moe_model, budget, horizon, seed
+):
+    """Transient upload faults (corrupt payloads caught by the per-row
+    CRC and re-fetched; I/O failures within the bounded retry budget)
+    across offload budgets: outputs bit-identical to the fault-free
+    offloaded run, zero typed errors, zero degraded serves — and the
+    retry/fault counters replay bit-identically."""
+    cfg, cparams = compressed_moe_model
+    trace = _offload_trace(50 + seed, horizon)
+    plan = FaultPlan.generate(
+        70 + seed, n_faults=6, max_step=10, sites=("upload",), max_count=2,
+    )
+    free = run_trace(cfg, cparams, trace, resident_experts=budget)
+    engine = run_trace(
+        cfg, cparams, trace, faults=plan, resident_experts=budget,
+    )
+    assert plan.injected >= 1, "schedule never fired — fuzz is vacuous"
+    assert engine.errors == {}
+    assert engine.results == free.results
+    ctr = engine.metrics.counters()
+    assert ctr["fault_injected"] == plan.injected
+    assert ctr["upload_retries"] >= 1
+    assert ctr["degraded_serves"] == 0
+    engine2 = run_trace(
+        cfg, cparams, trace, faults=plan.replay(), resident_experts=budget,
+    )
+    assert engine2.results == engine.results
+    assert engine2.metrics.counters() == ctr
+
+
+def test_persistent_upload_fail_fails_closed_without_degradation(
+    compressed_moe_model
+):
+    """With degradation off, an expert row whose upload fails past the
+    retry budget must fail the engine **closed**: step() raises
+    ExpertUploadFailed, every live request terminates with a typed
+    error, and the pool is fully released — never a hang, never silent
+    garbage."""
+    cfg, cparams = compressed_moe_model
+    trace = _offload_trace(5, 1)
+    plan = FaultPlan([FaultSpec(site="upload", mode="fail", count=-1)])
+    engine = make_engine(
+        cfg, cparams, trace, faults=plan, resident_experts=2,
+    )
+    for req in trace.requests(cfg.vocab_size):
+        engine.submit(req)
+    with pytest.raises(ExpertUploadFailed):
+        for _ in range(MAX_TICKS):
+            if not engine.step():
+                break
+    assert engine.errors, "fail-closed must record the typed error per rid"
+    assert all(
+        isinstance(e, ServingFault) for e in engine.errors.values()
+    )
+    assert_drained_clean(engine, trace)
+
+
+def test_degraded_requests_match_pinned_oracle(compressed_moe_model):
+    """Precision-ladder degradation: persistently failing the target-bit
+    upload of the one non-initially-resident 2-bit expert row (every
+    layer) with ``degrade_experts=True`` serves that row's 1-bit-snapped
+    copy from first use — and the run is **bit-identical** to an oracle
+    engine whose host params carry exactly that degraded row baked in
+    (pinned bit assignment, no faults). The degrade lifecycle/counter
+    and the routing report's ``served_bits`` column witness it."""
+    cfg, cparams = compressed_moe_model
+    ce = cparams["blocks"]["moe_ce"]
+    # resident_experts=3 over counts [2, 2] splits to [1, 2]: bucket b0
+    # (2-bit) seeds local slot 0 only, so global slot 1 is the single
+    # never-initially-resident row — its first serve must go through the
+    # upload path the persistent fault kills (the non-empty ``degraded``
+    # map below witnesses exactly that; final budgets may differ because
+    # demand overflow grows bucket buffers mid-trace)
+    target_gslot = 1
+    bucket_i, local = next(
+        (i, target_gslot - m.start) for i, m in enumerate(ce.meta)
+        if m.start <= target_gslot < m.start + m.count
+    )
+    from_bits = ce.meta[bucket_i].bits
+    num_layers = cfg.num_layers
+    plan = FaultPlan([
+        FaultSpec(site="upload", mode="fail", key=(l, target_gslot),
+                  count=-1)
+        for l in range(num_layers)
+    ])
+    trace = _offload_trace(9, 4)
+    engine = run_trace(
+        cfg, cparams, trace, faults=plan,
+        resident_experts=3, degrade_experts=True, trace_level="full",
+    )
+    assert engine.errors == {}
+    off = engine.offload
+    assert off.degraded, "the targeted row was never routed to"
+    assert set(off.degraded) <= {
+        (l, target_gslot) for l in range(num_layers)
+    }
+    assert all(v == (from_bits, 1) for v in off.degraded.values())
+    assert engine.metrics.counters()["degraded_serves"] >= 1
+    rep = engine.routing_report()
+    deg = {(d["layer"], d["slot"]) for d in rep["degraded_experts"]}
+    assert deg == set(off.degraded)
+    for layer_rep in rep["layers"]:
+        for e in layer_rep["entries"]:
+            want = 1 if (layer_rep["layer"], e["slot"]) in deg else e["bits"]
+            assert e["served_bits"] == want
+
+    # oracle: same engine/budget, no faults, the degraded row baked into
+    # the host params — the faulted run must reproduce it bit-for-bit
+    from repro.serving.offload import degrade_expert_row
+
+    bk = f"b{bucket_i}"
+    arrays = {
+        k: jax.tree.map(lambda a: np.array(a, copy=True), v)
+        for k, v in ce.arrays.items()
+    }
+    for l in range(num_layers):
+        row = jax.tree.map(lambda a: a[l, local], arrays[bk])
+        drow = degrade_expert_row(row, from_bits, 1)
+        flat_a = jax.tree_util.tree_leaves(arrays[bk])
+        flat_d = jax.tree_util.tree_leaves(drow)
+        for a, d in zip(flat_a, flat_d):
+            a[l, local] = d
+    oracle_params = dict(
+        cparams,
+        blocks=dict(
+            cparams["blocks"], moe_ce=dataclasses.replace(ce, arrays=arrays)
+        ),
+    )
+    oracle = run_trace(cfg, oracle_params, trace, resident_experts=3)
+    assert engine.results == oracle.results
+
+
+# --------------------------------------------- cancellation × COW pages
+def run_trace_with_cancels(cfg, params, trace: Trace, cancel_at,
+                           midprefill=(), **ecfg_kw):
+    """The run_trace loop plus client cancellations: ``cancel_at`` maps
+    rid → tick (boundary cancel); rids in ``midprefill`` are cancelled
+    from a tracer hook right after their *first prefill chunk* completes
+    — i.e. genuinely mid-prefill, with KV already written into pages
+    that may be COW-shared with the prefix cache."""
+    engine = make_engine(cfg, params, trace, **ecfg_kw)
+    orig_complete = engine.tracer.complete
+    mid = set(midprefill)
+
+    def complete(name, **kw):
+        orig_complete(name, **kw)
+        args = kw.get("args") or {}
+        if name == "prefill_chunk" and args.get("rid") in mid:
+            mid.discard(args["rid"])
+            assert engine.cancel(args["rid"])
+
+    engine.tracer.complete = complete
+    pending = sorted(
+        zip(trace.submit_steps, trace.requests(cfg.vocab_size)),
+        key=lambda t: t[0],
+    )
+    tick = 0
+    while pending or engine.scheduler.has_work():
+        assert tick < MAX_TICKS, "trace failed to drain (livelock?)"
+        while pending and pending[0][0] <= tick:
+            engine.submit(pending.pop(0)[1])
+        for rid, t in cancel_at.items():
+            if t == tick:
+                engine.cancel(rid)
+        if engine.scheduler.has_work():
+            engine.step()
+            check_invariants(engine)
+        tick += 1
+    assert_drained_clean(engine, trace)
+    return engine
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_cancellation_fuzz_with_prefix_cow(dense_model, seed):
+    """Satellite: fuzz cancellation against the COW prefix cache. A
+    shared-template trace under pool pressure gets one request cancelled
+    mid-prefill (between chunks, template pages COW-shared) and others
+    at random megastep boundaries (mid-decode). Every cancelled-live rid
+    terminates with RequestCancelled and a prefix-of-reference partial
+    output; every survivor decodes bit-identically; refcounts conserve
+    (checked after every step) and the pool drains to zero."""
+    cfg, params = dense_model
+    rng = np.random.default_rng(300 + seed)
+    n = 6
+    base = Trace(
+        prompt_lens=tuple(int(x) for x in rng.integers(1, 5, n)),
+        max_news=tuple(int(x) for x in rng.integers(3, 9, n)),
+        submit_steps=tuple(sorted(int(x) for x in rng.integers(0, 4, n))),
+        pool_blocks=0, preempt_mode=str(rng.choice(["swap", "recompute"])),
+        max_slots=4, horizon=int(rng.choice([1, 4])),
+        template_len=8, n_templates=2, prefix_cache=True,
+    )
+    trace = dataclasses.replace(
+        base, pool_blocks=max(base.min_pool, (2 * base.demand) // 3)
+    )
+    # mid-prefill victim = rid 0: first admitted, so it prefills the
+    # template cold (8 + suffix ≥ 9 tokens ≥ 3 chunks) and the hook
+    # cancels it *between* chunks deterministically. Two more boundary
+    # victims at random early ticks — those may already have finished,
+    # which must be a clean no-op.
+    victims = [0] + [int(x) for x in rng.choice(
+        np.arange(1, n), size=2, replace=False
+    )]
+    midprefill = (victims[0],)
+    cancel_at = {victims[1]: int(rng.integers(1, 4)),
+                 victims[2]: int(rng.integers(1, 6))}
+    engine = run_trace_with_cancels(
+        cfg, params, trace, cancel_at, midprefill=midprefill,
+    )
+    assert_bit_exact_or_typed_error(cfg, params, engine, trace)
+    assert all(
+        isinstance(e, RequestCancelled) for e in engine.errors.values()
+    )
+    # the mid-prefill victim was live by construction; its tokens never
+    # got as far as a first emit
+    assert victims[0] in engine.errors
+    assert engine.results[victims[0]] == []
+    assert engine.metrics.counters()["cancelled"] == len(engine.errors)
+    # cancelling a drained/unknown rid is a clean no-op
+    assert engine.cancel(victims[0]) is False
+    assert engine.cancel(10_000) is False
+
+
+# ------------------------------------------------- deadlines + validation
+def test_deadline_queued_and_active_terminate_typed(dense_model):
+    """``deadline_steps`` is enforced at megastep boundaries for queued
+    *and* running requests: a request stuck behind a single-slot hog
+    expires with zero tokens; a running request whose decode outlives
+    its deadline keeps a prefix-of-reference partial output. Both
+    terminate with DeadlineExceeded and release everything."""
+    cfg, params = dense_model
+    trace = Trace(
+        prompt_lens=(6, 4), max_news=(12, 8), submit_steps=(0, 0),
+        pool_blocks=8, preempt_mode="swap", max_slots=1, horizon=1,
+    )
+    reqs = trace.requests(cfg.vocab_size)
+    reqs[1] = dataclasses.replace(reqs[1], deadline_steps=3)
+    engine = make_engine(cfg, params, trace)
+    for r in reqs:
+        engine.submit(r)
+    ticks = 0
+    while engine.scheduler.has_work():
+        assert ticks < MAX_TICKS
+        engine.step()
+        check_invariants(engine)
+        ticks += 1
+    assert_drained_clean(engine, trace)
+    assert isinstance(engine.errors[1], DeadlineExceeded)
+    assert engine.results[1] == []  # expired before ever being admitted
+    ref0 = reference_tokens(engine.model_cfg, params, reqs[0].prompt, 12)
+    assert engine.results[0] == ref0
+    assert engine.metrics.counters()["deadline_exceeded"] == 1
+
+    # now the active-request flavor: generous pool, tight deadline
+    trace2 = Trace(
+        prompt_lens=(4,), max_news=(10,), submit_steps=(0,),
+        pool_blocks=8, preempt_mode="swap", max_slots=1, horizon=1,
+    )
+    req = dataclasses.replace(
+        trace2.requests(cfg.vocab_size)[0], deadline_steps=4
+    )
+    engine2 = make_engine(cfg, params, trace2)
+    engine2.submit(req)
+    while engine2.scheduler.has_work():
+        engine2.step()
+        check_invariants(engine2)
+    assert_drained_clean(engine2, trace2)
+    assert isinstance(engine2.errors[0], DeadlineExceeded)
+    got = engine2.results[0]
+    ref = reference_tokens(engine2.model_cfg, params, req.prompt, 10)
+    assert 0 < len(got) < 10, "mid-decode expiry must keep a partial prefix"
+    assert got == ref[: len(got)]
+
+
+def test_submit_validation_typed_errors(dense_model):
+    """Scheduler.submit rejects malformed requests with InvalidRequest —
+    which is both a ServingFault and a ValueError (back-compat) — and a
+    rejected submit leaves the engine fully serviceable."""
+    cfg, params = dense_model
+    trace = Trace((4,), (4,), (0,), 8, "swap")
+    engine = make_engine(cfg, params, trace)
+    good = trace.requests(cfg.vocab_size)[0]
+    bad = [
+        Request(rid=10, prompt=np.zeros(0, np.int32), max_new=4),
+        Request(rid=11, prompt=good.prompt, max_new=0),
+        Request(rid=12, prompt=good.prompt, max_new=4, priority=-1),
+        Request(rid=13, prompt=good.prompt, max_new=4, deadline_steps=0),
+    ]
+    for r in bad:
+        with pytest.raises(InvalidRequest) as ei:
+            engine.submit(r)
+        assert isinstance(ei.value, ServingFault)
+        assert isinstance(ei.value, ValueError)
+        assert ei.value.rid == r.rid
+    engine.submit(good)
+    # a duplicate of a *live* rid is rejected; the original is untouched
+    with pytest.raises(InvalidRequest):
+        engine.submit(Request(rid=good.rid, prompt=good.prompt, max_new=4))
+    while engine.scheduler.has_work():
+        engine.step()
+    assert engine.results[good.rid] == reference_tokens(
+        engine.model_cfg, params, good.prompt, good.max_new
+    )
+    assert_drained_clean(engine, trace)
+
+
+# ------------------------------------------------- watchdog + livelock
+def test_watchdog_fails_closed_on_slow_megastep(dense_model):
+    """A megastep slower than ``watchdog_timeout_s`` (driven through the
+    engine's injectable clock — no sleeping) raises WatchdogTimeout and
+    fails closed: typed errors for every live rid, pool fully clean."""
+    cfg, params = dense_model
+    trace = Trace((4, 3), (8, 6), (0, 0), 8, "swap", max_slots=2)
+    engine = make_engine(cfg, params, trace, watchdog_timeout_s=10.0)
+    t = [0.0]
+
+    def fake_clock():
+        t[0] += 100.0  # every megastep "takes" 100s > the 10s budget
+        return t[0]
+
+    engine._clock = fake_clock
+    for r in trace.requests(cfg.vocab_size):
+        engine.submit(r)
+    with pytest.raises(WatchdogTimeout):
+        while engine.scheduler.has_work():
+            engine.step()
+    assert set(engine.errors) == {0, 1}
+    assert all(isinstance(e, ServingFault) for e in engine.errors.values())
+    assert_drained_clean(engine, trace)
+
+
+def test_livelock_guard_fails_closed(dense_model):
+    """An engine with work that stops making progress (megasteps advance
+    nothing) must fail closed with LivelockDetected after
+    ``livelock_steps`` boundaries instead of spinning forever."""
+    cfg, params = dense_model
+    trace = Trace((4,), (8,), (0,), 8, "swap", max_slots=1)
+    engine = make_engine(cfg, params, trace, livelock_steps=5)
+    engine.submit(trace.requests(cfg.vocab_size)[0])
+    engine.step()  # admits + prefills; then the decode path stalls
+    engine._decode_megastep = lambda: None
+    with pytest.raises(LivelockDetected):
+        for _ in range(20):
+            engine.step()
+    assert isinstance(engine.errors[0], ServingFault)
+    assert_drained_clean(engine, trace)
