@@ -129,3 +129,16 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row)
     return row
+
+
+def platform_meta(ffn_backend: str | None = None) -> Dict[str, str]:
+    """Provenance stamp for every bench leg: which backend produced the
+    numbers. ``ffn_backend`` records the expert-FFN implementation the
+    leg ran (CLI flag or REPRO_FFN_BACKEND; 'default' when unpinned)."""
+    return {
+        "platform": str(jax.default_backend()),
+        "device_kind": str(jax.devices()[0].device_kind),
+        "ffn_backend": str(
+            ffn_backend or os.environ.get("REPRO_FFN_BACKEND") or "default"
+        ),
+    }

@@ -46,7 +46,7 @@ from repro.models.moe import (
     slot_fill_counts,
 )
 
-from .common import csv_row
+from .common import csv_row, platform_meta
 
 OUT_PATH = os.path.join("results", "BENCH_moe_ffn.json")
 
@@ -193,6 +193,12 @@ def run(quick: bool = False, smoke: bool = False) -> List[str]:
         s, g = legs[i], legs[i + 1]
         s["flops_reduction_vs_scan"] = 1.0
         g["flops_reduction_vs_scan"] = s["flops"] / max(g["flops"], 1)
+    # each leg pins its own expert-FFN implementation — stamp it as the
+    # provenance ffn_backend rather than the process-wide default
+    legs = [
+        {**platform_meta(ffn_backend=leg.get("backend")), **leg}
+        for leg in legs
+    ]
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as fh:
         json.dump(

@@ -19,6 +19,13 @@ The default path is :class:`repro.serving.engine.PagedServingEngine`:
   ``--pmq``): cold PMQ rows live in host memory, a router-stats EMA
   prefetches the hot set, misses upload synchronously and replay
   (:mod:`repro.serving.offload`),
+* async expert streaming (``--async-offload``): planner-driven uploads
+  stage into shadow device buffers while the current megastep computes
+  and commit at the next boundary — outputs stay bit-identical to the
+  synchronous path; ``--offload-dir DIR`` extends the store to a third
+  tier (mmap'd CRC-checked packed buckets on disk behind a
+  byte-budgeted pinned host cache, ``--host-expert-bytes B``)
+  (docs/serving_offload.md),
 * TTFT / per-token latency / queue depth / expert-activation metrics
   (:mod:`repro.serving.metrics`),
 * request-lifecycle tracing (``--trace-out trace.json`` writes a
@@ -206,6 +213,22 @@ def main() -> None:
                    help="per-layer device budget in expert slots; cold "
                         "PMQ rows are offloaded to host memory and "
                         "prefetched by router stats (implies --pmq)")
+    p.add_argument("--async-offload", action="store_true",
+                   help="double-buffer planner-driven expert uploads: "
+                        "residency targets stage into shadow device "
+                        "buffers while the current megastep computes and "
+                        "commit at the next boundary; outputs stay bit-"
+                        "identical (requires --resident-experts; see "
+                        "docs/serving_offload.md)")
+    p.add_argument("--offload-dir", type=str, default=None, metavar="DIR",
+                   help="spill the expert store to mmap'd packed buckets "
+                        "under DIR (three-tier disk <- host <- device "
+                        "residency; every row fetch is CRC-checked; "
+                        "requires --resident-experts)")
+    p.add_argument("--host-expert-bytes", type=int, default=None,
+                   metavar="B",
+                   help="byte budget for the pinned host row cache in "
+                        "front of --offload-dir (default: unbounded)")
     p.add_argument("--pool-blocks", type=int, default=None,
                    help="KV pool size in pages; undersize it to exercise "
                         "growth + preemption (default: worst-case demand)")
@@ -334,6 +357,14 @@ def main() -> None:
         # silently serve everything device-resident
         raise SystemExit("--resident-experts requires the paged engine "
                          "(drop --legacy)")
+    if ((args.async_offload or args.offload_dir is not None)
+            and args.resident_experts is None):
+        # both ride the offload manager's residency plan — nothing to
+        # overlap or tier without a device budget
+        raise SystemExit("--async-offload/--offload-dir require "
+                         "--resident-experts")
+    if args.host_expert_bytes is not None and args.offload_dir is None:
+        raise SystemExit("--host-expert-bytes requires --offload-dir")
     if args.pmq or args.resident_experts is not None:
         if not cfg.is_moe:
             flag = "--pmq" if args.pmq else "--resident-experts"
@@ -376,6 +407,9 @@ def main() -> None:
             preempt_mode=args.preempt_mode,
             reserve_full=args.no_preempt,
             resident_experts=args.resident_experts,
+            async_offload=args.async_offload,
+            offload_dir=args.offload_dir,
+            host_expert_bytes=args.host_expert_bytes,
             ffn_backend=args.ffn_backend,
             temperature=args.temperature,
             sample_seed=args.sample_seed,
@@ -434,6 +468,20 @@ def main() -> None:
             f"({m['expert_upload_bytes']} B), "
             f"{engine.offload.grows} budget grows"
         )
+        if args.async_offload:
+            print(
+                f"async offload: {m['uploads_overlapped']} overlapped "
+                f"({m['uploads_committed']} committed, "
+                f"{m['uploads_dropped_stale']} dropped stale), "
+                f"stall {m['upload_stall_s']:.4f} s, "
+                f"hidden {m['upload_hidden_s']:.4f} s"
+            )
+        if args.offload_dir is not None:
+            print(
+                f"expert tiers: {m['tier_host_hits']} host hits, "
+                f"{m['tier_disk_hits']} disk fetches "
+                f"({m['tier_disk_bytes']} B, CRC-checked)"
+            )
     if plan is not None or args.deadline_steps is not None:
         ctr = engine.metrics.counters()
         print(

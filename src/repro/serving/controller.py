@@ -499,6 +499,11 @@ class ResourceController:
         observe, reconcile, emit the ``plan`` lifecycle event (scalar
         action counts), and hand the ordered plan to the engine."""
         self.scheduler.refresh_grants()
+        if self.offload is not None:
+            # housekeeping before observing residency: drop prefetch-
+            # backoff entries for rows that degraded or became resident
+            # meanwhile, so the deferral map stays bounded
+            self.offload.prune_backoff()
         obs = self.observe(step_idx, now_s)
         _, actions = self.reconcile(obs)
         if actions:

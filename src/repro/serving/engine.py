@@ -207,6 +207,26 @@ class EngineConfig:
     resident_experts: Optional[int] = None
     # EMA decay of the per-(layer, slot) dispatch counts driving prefetch.
     prefetch_ema: float = 0.8
+    # Async expert streaming (docs/serving_offload.md): the controller's
+    # prefetch plan is *issued* right after each megastep's program
+    # dispatch (double-buffered — built against immutable jax arrays
+    # while the megastep computes on the live ones) and *committed* at
+    # the next boundary; stale batches (a miss/grow landed mid-flight)
+    # are dropped and re-planned. Outputs are bit-identical with this on
+    # or off (fuzzed in tests/test_serving_sim.py); only the timing —
+    # decode_offload_frac — changes. False keeps the synchronous PR-3
+    # path: apply_residency blocks the boundary.
+    async_offload: bool = False
+    # Three-tier expert store (repro.serving.tierstore): a directory to
+    # spill the packed PMQ buckets into as mmap'd .npy images (CRC
+    # manifest, verified on every read). The full in-memory host copies
+    # are dropped after the spill — cold rows are then served
+    # disk → host cache → device. None keeps the two-tier host store.
+    offload_dir: Optional[str] = None
+    # Byte budget of the warm host row cache between the disk images and
+    # the device partitions (only with offload_dir). None = unbounded;
+    # 0 = every fetch reads (and CRC-verifies) the mmap.
+    host_expert_bytes: Optional[int] = None
     # Compressed expert-FFN implementation inside the jitted programs:
     # "grouped" (default — bucket-at-a-time grouped GEMM, Pallas moe_gmm
     # on TPU / jnp oracle on CPU), "scan" (legacy per-expert scan, the
@@ -429,8 +449,18 @@ class PagedServingEngine:
                 faults=faults,
                 degrade=self.ecfg.degrade_experts,
                 max_retries=self.ecfg.upload_max_retries,
+                offload_dir=self.ecfg.offload_dir,
+                host_budget_bytes=self.ecfg.host_expert_bytes,
             )
             params = dict(params, blocks=dict(blocks, moe_ce=self.offload.ce))
+        elif self.ecfg.async_offload or self.ecfg.offload_dir is not None:
+            raise ValueError(
+                "async_offload/offload_dir require resident_experts "
+                "(there is no expert streaming to overlap or tier)"
+            )
+        # async expert streaming: upload_experts plan targets deferred
+        # from the boundary to right after the next program dispatch
+        self._pending_expert_targets: Tuple = ()
         self.params = params
         self.cache = PagedKVCache.create(
             cfg,
@@ -730,6 +760,16 @@ class PagedServingEngine:
         admit/preempt/grow/evict/upload decisions live in the plan; the
         executors below only carry them out (and emit the lifecycle
         events every action must flow through)."""
+        if self.offload is not None and self.ecfg.async_offload:
+            # flip the double buffer first: staged expert uploads from
+            # the megastep that just ran either commit (buffers, tables
+            # and maps swap together) or drop as stale — before the
+            # controller observes residency to plan this boundary
+            committed, dropped, nbytes, wait_s = self.offload.commit_async()
+            if committed or dropped:
+                self.metrics.record_async_commit(
+                    committed, dropped, nbytes, wait_s
+                )
         plan = self.controller.plan_boundary(self._step_idx, time.time())
         self._execute_plan(plan)
 
@@ -750,9 +790,22 @@ class PagedServingEngine:
             elif kind == "shed":
                 self._execute_shed(action)
             elif kind == "upload_experts":
-                uploads, nbytes = self.offload.apply_residency(action.targets)
-                if uploads:
-                    self.metrics.record_expert_prefetch(uploads, nbytes)
+                if self.ecfg.async_offload:
+                    # defer: issued right after the next program
+                    # dispatch (overlapped with its compute), committed
+                    # at the next boundary — one-boundary-stale targets,
+                    # which placement-invariance makes safe
+                    self._pending_expert_targets = action.targets
+                else:
+                    t0 = time.time()
+                    uploads, nbytes = self.offload.apply_residency(
+                        action.targets
+                    )
+                    if uploads:
+                        self.metrics.record_expert_prefetch(uploads, nbytes)
+                        # the boundary blocked on this upload — the
+                        # stall async streaming exists to hide
+                        self.metrics.record_upload_stall(time.time() - t0)
             else:
                 raise ValueError(f"unknown plan action kind {kind!r}")
 
@@ -1007,6 +1060,17 @@ class PagedServingEngine:
             if out[2] is not None:  # quantized pools: scale/zero tables
                 self.cache.quant = out[2]
             payload = out[3:-1]
+            if runs == 0 and self._pending_expert_targets:
+                # async expert streaming: the program is dispatched but
+                # its counts not yet fetched — stage the boundary's
+                # prefetch uploads now so the copies land while it
+                # computes; the flip happens at the next boundary
+                targets = self._pending_expert_targets
+                self._pending_expert_targets = ()
+                ti = time.time()
+                ups, _ = self.offload.issue_async(targets)
+                if ups:
+                    self.metrics.record_async_issue(ups, time.time() - ti)
             # the one host sync: dispatch counts ([L, num_slots] for a
             # prefill chunk, [H, L, num_slots] for a decode megastep;
             # trailing dim 0 outside PMQ) — fetched for the offload miss

@@ -101,6 +101,24 @@ class ServingMetrics:
     expert_miss_bytes: int = 0
     expert_prefetch_bytes: int = 0
     expert_resident_bytes: List[int] = dataclasses.field(default_factory=list)
+    # async expert streaming (offload.issue_async/commit_async): rows
+    # staged while a megastep computed, rows committed at the flip, and
+    # rows dropped because a mid-flight miss/grow staled the batch — all
+    # deterministic per trace. The seconds live in summary() only:
+    # upload_stall_s is boundary wall time *blocked* on uploads (the
+    # whole apply_residency call when synchronous, the residual
+    # commit wait when async), upload_hidden_s the issue-time staging
+    # cost overlapped with compute.
+    uploads_overlapped: int = 0
+    uploads_committed: int = 0
+    uploads_dropped_stale: int = 0
+    upload_stall_s: List[float] = dataclasses.field(default_factory=list)
+    upload_hidden_s: List[float] = dataclasses.field(default_factory=list)
+    # three-tier store (repro.serving.tierstore): per-tier fetch counts
+    # and disk bytes read, fed through tier_fetch lifecycle events
+    tier_host_hits: int = 0
+    tier_disk_hits: int = 0
+    tier_disk_bytes: int = 0
     # fused decode-horizon megasteps (one jitted dispatch + one host sync
     # covers up to H logical decode steps; replays are offload misses)
     # shared-prefix KV reuse (repro.serving.kvcache.PrefixCache): a *hit*
@@ -281,6 +299,40 @@ class ServingMetrics:
     def record_expert_residency(self, nbytes: int) -> None:
         self.expert_resident_bytes.append(int(nbytes))
 
+    def record_async_issue(self, uploads: int, hidden_s: float) -> None:
+        """One staged (double-buffered) upload batch issued while a
+        program computed: ``uploads`` rows overlapped; ``hidden_s`` is
+        the host-side staging time hidden behind the dispatch."""
+        self.uploads_overlapped += int(uploads)
+        self.upload_hidden_s.append(float(hidden_s))
+
+    def record_async_commit(self, committed: int, dropped: int,
+                            nbytes: int, wait_s: float) -> None:
+        """One boundary flip: ``committed`` staged rows swapped in (they
+        count as prefetch uploads — same traffic, different timing) or
+        ``dropped`` rows invalidated by a mid-flight miss/grow;
+        ``wait_s`` is the residual un-hidden transfer wait."""
+        self.uploads_committed += int(committed)
+        self.uploads_dropped_stale += int(dropped)
+        if committed:
+            self.record_expert_prefetch(int(committed), int(nbytes))
+        self.upload_stall_s.append(float(wait_s))
+
+    def record_upload_stall(self, seconds: float) -> None:
+        """Boundary wall time blocked on a synchronous prefetch upload
+        (the whole apply_residency call). Folded into
+        ``decode_offload_frac`` so the synchronous baseline's stall is
+        attributable — and erasable by async overlap."""
+        self.upload_stall_s.append(float(seconds))
+
+    def record_tier_fetch(self, tier: str, nbytes: int) -> None:
+        """One expert-row fetch through the tiered backing store."""
+        if tier == "host":
+            self.tier_host_hits += 1
+        else:
+            self.tier_disk_hits += 1
+            self.tier_disk_bytes += int(nbytes)
+
     def record_prefix_hit(self, tokens_saved: int, full: bool = False) -> None:
         """One fresh admission reused a cached prefix: ``tokens_saved``
         prompt tokens skipped prefill; ``full`` means the whole prompt
@@ -386,6 +438,12 @@ class ServingMetrics:
             "expert_miss_bytes": self.expert_miss_bytes,
             "expert_prefetch_bytes": self.expert_prefetch_bytes,
             "expert_resident_bytes": list(self.expert_resident_bytes),
+            "uploads_overlapped": self.uploads_overlapped,
+            "uploads_committed": self.uploads_committed,
+            "uploads_dropped_stale": self.uploads_dropped_stale,
+            "tier_host_hits": self.tier_host_hits,
+            "tier_disk_hits": self.tier_disk_hits,
+            "tier_disk_bytes": self.tier_disk_bytes,
             "prefix_hits": self.prefix_hits,
             "prefix_misses": self.prefix_misses,
             "prefix_full_hits": self.prefix_full_hits,
@@ -478,12 +536,27 @@ class ServingMetrics:
             "megasteps": int(self.megasteps),
             "decode_compute_mean_s": _mean(self.decode_compute_s),
             "decode_offload_mean_s": _mean(self.decode_offload_s),
+            # expert-streaming time a request actually waited for: miss
+            # uploads + replays (decode_offload_s) plus boundary upload
+            # stalls — synchronous prefetch pays the whole upload here,
+            # async overlap only its residual commit wait, which is what
+            # the async-offload bench leg gates on
             "decode_offload_frac": (
-                float(np.sum(self.decode_offload_s))
+                (float(np.sum(self.decode_offload_s))
+                 + float(np.sum(self.upload_stall_s)))
                 / max(float(np.sum(self.decode_compute_s))
-                      + float(np.sum(self.decode_offload_s)), 1e-12)
-                if self.decode_compute_s else 0.0
+                      + float(np.sum(self.decode_offload_s))
+                      + float(np.sum(self.upload_stall_s)), 1e-12)
+                if (self.decode_compute_s or self.upload_stall_s) else 0.0
             ),
+            "upload_stall_s": float(np.sum(self.upload_stall_s)),
+            "upload_hidden_s": float(np.sum(self.upload_hidden_s)),
+            "uploads_overlapped": int(self.uploads_overlapped),
+            "uploads_committed": int(self.uploads_committed),
+            "uploads_dropped_stale": int(self.uploads_dropped_stale),
+            "tier_host_hits": int(self.tier_host_hits),
+            "tier_disk_hits": int(self.tier_disk_hits),
+            "tier_disk_bytes": int(self.tier_disk_bytes),
             "decode_dispatches": int(self.decode_dispatches),
             "decode_replays": int(self.decode_replays),
             "decode_host_syncs": int(self.decode_host_syncs),

@@ -39,6 +39,22 @@ Residency is managed per ``(layer, bucket, expert slot)``:
   budget, the manager grows that bucket's resident buffer to fit (a
   one-time retrace) rather than serving wrong tokens — ``grows`` counts
   how often the configured budget was too small to be honored.
+* **Async overlap** (:meth:`issue_async` / :meth:`commit_async`): with
+  ``EngineConfig(async_offload=True)`` the controller's prefetch plan is
+  *issued* right after the megastep's program dispatch — the post-upload
+  device buffers are built against immutable jax arrays while the
+  megastep computes on the live ones — and *committed* (buffers, tables
+  and device maps flipped together) at the next megastep boundary.
+  Content versions invalidate stale batches: any miss upload or budget
+  grow between issue and commit bumps the touched bucket's version and
+  the commit drops the batch instead of installing stale buffers.
+  Placement is output-invariant and the miss backstop is untouched, so
+  outputs stay bit-identical with overlap on or off.
+* **Tiers** (:mod:`repro.serving.tierstore`): with ``offload_dir`` set
+  the backing store generalizes to disk → host → device — packed
+  buckets spilled once to mmap'd ``.npy`` images (CRC manifest, verified
+  on every read) with a byte-budgeted EMA-heat host row cache between
+  them, so host RAM no longer scales with total expert bytes.
 * **Faults** (:mod:`repro.serving.faults`): with a :class:`FaultPlan`
   attached, every upload runs the recovery ladder of
   docs/serving_robustness.md — each staged payload is CRC-checked
@@ -56,6 +72,7 @@ Residency is managed per ``(layer, bucket, expert slot)``:
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Dict, List, Optional, Tuple
 
@@ -70,6 +87,7 @@ from .faults import (
     checksum_tree,
     corrupt_tree,
 )
+from .tierstore import TieredExpertStore
 
 __all__ = ["ExpertOffloadManager", "degrade_expert_row"]
 
@@ -133,7 +151,8 @@ class ExpertOffloadManager:
     def __init__(self, ce: CompressedExperts, *, resident_slots: int,
                  ema_decay: float = 0.8, tracer=None,
                  faults: Optional[FaultPlan] = None, degrade: bool = False,
-                 max_retries: int = 3):
+                 max_retries: int = 3, offload_dir: Optional[str] = None,
+                 host_budget_bytes: Optional[int] = None):
         if ce.resident_map is not None:
             raise ValueError("CompressedExperts is already host-offloaded")
         if tracer is None:
@@ -180,6 +199,13 @@ class ExpertOffloadManager:
         # metrics cannot derive: budget growths (deterministic per trace)
         self.grows = 0
         self._pinned: List[Dict[str, set]] = []
+        # double-buffered async prefetch (issue_async/commit_async): the
+        # one staged upload batch in flight, validated against these
+        # per-bucket content versions at commit time — any mutation of a
+        # bucket's device buffer between issue and commit (miss upload,
+        # budget grow) bumps its version and invalidates the batch
+        self._bucket_version: Dict[str, int] = {}
+        self._inflight: Optional[Dict] = None
         self.begin_step()
 
         dev_arrays: Dict[str, Dict] = {}
@@ -198,10 +224,22 @@ class ExpertOffloadManager:
                 lambda a: jnp.asarray(a[:, :r]), self.host[bk]
             )
             maps[bk] = jnp.asarray(np.maximum(sr, 0))
+            self._bucket_version[bk] = 0
         self.ce = dataclasses.replace(
             ce, arrays=dev_arrays, resident_map=maps,
             resident_rows=tuple(self._budgets),
         )
+        # three-tier mode (docs/serving_offload.md): spill the packed
+        # buckets to mmap'd disk images and drop the full host copies —
+        # cold rows are then served disk → byte-budgeted host cache →
+        # device, and the process stops paying RAM for the whole model
+        self.store: Optional[TieredExpertStore] = None
+        if offload_dir is not None:
+            self.store = TieredExpertStore(
+                self.host, offload_dir=offload_dir,
+                host_budget_bytes=host_budget_bytes, tracer=tracer,
+            )
+            self.host = None
 
     # ---------------------------------------------------------- budgeting
     def _split_budget(self, resident_slots: int) -> List[int]:
@@ -246,6 +284,11 @@ class ExpertOffloadManager:
 
     @property
     def host_bytes(self) -> int:
+        """Bytes of the full backing store — the in-memory host copies,
+        or the mmap'd disk images when tiered (the host then holds only
+        the byte-budgeted warm cache)."""
+        if self.store is not None:
+            return self.store.disk_bytes
         return sum(
             a.nbytes for bk in self._bkeys
             for a in jax.tree.leaves(self.host[bk])
@@ -262,12 +305,24 @@ class ExpertOffloadManager:
     def _row_tree(self, bk: str, layer: int, slot: int) -> Dict:
         """The pristine host payload of one (layer, bucket-local slot)
         row: the ``{w_gate/w_up/w_down: {...}}`` sub-tree sliced from the
-        ``[L, count, ...]`` backing-store leaves (numpy views)."""
+        ``[L, count, ...]`` backing-store leaves (numpy views), or — in
+        three-tier mode — fetched through the disk → host-cache ladder
+        at the row's current routing heat (disk reads CRC-verify and
+        promote; see :mod:`repro.serving.tierstore`)."""
+        if self.store is not None:
+            i = self._bkeys.index(bk)
+            gslot = self.meta[i].start + int(slot)
+            return self.store.row(
+                bk, layer, slot, heat=float(self.ema[int(layer), gslot])
+            )
         return jax.tree.map(lambda a: a[layer, slot], self.host[bk])
 
     def _row_crc(self, bk: str, layer: int, slot: int) -> int:
         """Lazily computed/cached checksum of the pristine host row —
-        what every staged upload payload is verified against."""
+        what every staged upload payload is verified against. Tiered
+        stores carry the spill-time CRC manifest instead."""
+        if self.store is not None:
+            return self.store.crc(bk, layer, slot)
         key = (bk, int(layer), int(slot))
         crc = self._host_crc.get(key)
         if crc is None:
@@ -322,7 +377,11 @@ class ExpertOffloadManager:
         placement (a later boundary, or a miss, re-attempts)."""
         bk = self._bkeys[i]
         m = self.meta[i]
-        if self.faults is None and not self._degraded_rows:
+        if self.faults is None and not self._degraded_rows \
+                and self.store is None:
+            # fast path: the caller batch-gathers straight from the
+            # in-memory backing store (tiered stores always hand back
+            # per-row payloads — the gather goes through the ladder)
             return list(slots), None
         cleared: List[int] = []
         payloads: List[Dict] = []
@@ -412,16 +471,18 @@ class ExpertOffloadManager:
                 )
         return cleared, payloads
 
-    def _upload_batch(self, bk: str, triples, payloads=None) -> int:
-        """Host→device copy of ``(layer, row, slot)`` placements — one
-        batched scatter per packed leaf per bucket, regardless of how
-        many layers the placements span (a per-layer ``.set`` would
-        rebuild the whole [L, R, ...] buffer once per layer).
-        ``payloads`` (one verified host-row tree per triple, from
+    def _build_upload(self, bk: str, triples, payloads=None):
+        """Build the post-upload device buffers for ``(layer, row,
+        slot)`` placements — one batched scatter per packed leaf per
+        bucket, regardless of how many layers the placements span (a
+        per-layer ``.set`` would rebuild the whole [L, R, ...] buffer
+        once per layer). Pure with respect to the manager: jax arrays
+        are immutable, so ``.at[].set`` returns *new* buffers and the
+        live ones keep serving until the caller swaps them in — exactly
+        the double-buffering :meth:`issue_async` rides on. ``payloads``
+        (one verified host-row tree per triple, from
         :meth:`_clear_for_upload`) replaces the backing-store gather on
-        the fault path."""
-        if not triples:
-            return 0
+        the fault/tiered paths. Returns ``(new_arrays, nbytes)``."""
         l_idx = np.asarray([t[0] for t in triples], np.int32)
         r_idx = np.asarray([t[1] for t in triples], np.int32)
         s_idx = np.asarray([t[2] for t in triples], np.int32)
@@ -434,10 +495,9 @@ class ExpertOffloadManager:
                 nbytes += src.nbytes
                 return dev.at[l_idx, r_idx].set(jnp.asarray(src))
 
-            self.ce.arrays[bk] = jax.tree.map(
+            return jax.tree.map(
                 up, self.ce.arrays[bk], self.host[bk]
-            )
-            return nbytes
+            ), nbytes
 
         stacked = jax.tree.map(lambda *rows: np.stack(rows), *payloads)
 
@@ -446,9 +506,19 @@ class ExpertOffloadManager:
             nbytes += src.nbytes
             return dev.at[l_idx, r_idx].set(jnp.asarray(src))
 
-        self.ce.arrays[bk] = jax.tree.map(
+        return jax.tree.map(
             up_rows, self.ce.arrays[bk], stacked
-        )
+        ), nbytes
+
+    def _upload_batch(self, bk: str, triples, payloads=None) -> int:
+        """Synchronous host→device copy: build the new buffers and swap
+        them in immediately, invalidating any in-flight async batch for
+        this bucket (its staged buffers no longer contain these rows)."""
+        if not triples:
+            return 0
+        new_arrays, nbytes = self._build_upload(bk, triples, payloads)
+        self.ce.arrays[bk] = new_arrays
+        self._bucket_version[bk] += 1
         return nbytes
 
     def _refresh_map(self, bk: str) -> None:
@@ -480,6 +550,7 @@ class ExpertOffloadManager:
         )
         self._budgets[i] = new_r
         self.ce.resident_rows = tuple(self._budgets)
+        self._bucket_version[bk] += 1  # staged async buffers now stale
         self.grows += 1
         self.tracer.instant(
             "expert_budget_grow", track="experts", cat="offload",
@@ -710,3 +781,150 @@ class ExpertOffloadManager:
         boundary plan as an ``upload_experts`` action.
         """
         return self.apply_residency(self.residency_targets())
+
+    # ------------------------------------------- async double-buffering
+    def issue_async(self, targets) -> Tuple[int, int]:
+        """Stage one boundary's prefetch uploads *without touching the
+        live residency state* — the overlap half of async expert
+        streaming (docs/serving_offload.md).
+
+        The engine calls this right after dispatching a megastep: the
+        recovery ladder runs immediately (an in-flight transfer failure
+        is a prefetch failure — deferred with the same deterministic
+        backoff), payload rows are gathered through the tier ladder, and
+        the post-upload device buffers are *built* (``.at[].set`` on
+        immutable jax arrays returns new buffers, so the dispatch is
+        enqueued and the copy proceeds while the megastep computes) but
+        **not** swapped in. Placement runs on copies of the residency
+        tables; the live tables — and the live buffers the running
+        megastep (and any miss replay) uses — are untouched until
+        :meth:`commit_async` flips them at the next boundary. At most
+        one batch is in flight; a second issue before commit is a no-op.
+        Returns ``(uploads, bytes)`` staged.
+        """
+        if not targets or self._inflight is not None:
+            return 0, 0
+        t0_us = self.tracer.now_us()
+        live_sr, live_rs = self.slot_row, self.row_slot
+        # placement mutates the snapshot tables only: the in-flight
+        # megastep keeps a consistent (tables, buffers, map) view
+        self.slot_row = {bk: a.copy() for bk, a in live_sr.items()}
+        self.row_slot = {bk: a.copy() for bk, a in live_rs.items()}
+        versions = dict(self._bucket_version)
+        budgets = tuple(self._budgets)
+        pending = {bk: [] for bk in self._bkeys}
+        pend_rows = {bk: [] for bk in self._bkeys}
+        ups = 0
+        nbytes = 0
+        staged_arrays: Dict[str, Dict] = {}
+        try:
+            for i, l, desired in targets:
+                bk = self._bkeys[i]
+                m = self.meta[i]
+                scores = self.ema[l, m.start:m.start + m.count]
+                want = sorted(
+                    s for s in desired if self.slot_row[bk][l, s] < 0
+                )
+                if not want:
+                    continue
+                want, rows_pay = self._clear_for_upload(
+                    i, l, want, "prefetch"
+                )
+                if not want:
+                    continue
+                placed = self._place(i, l, want, set(desired),
+                                     lambda s, scores=scores: scores[s])
+                pending[bk].extend(placed)
+                if rows_pay is not None:
+                    pend_rows[bk].extend(rows_pay)
+                ups += len(placed)
+            for bk in self._bkeys:
+                if pending[bk]:
+                    staged_arrays[bk], nb = self._build_upload(
+                        bk, pending[bk], pend_rows[bk] or None
+                    )
+                    nbytes += nb
+        finally:
+            staged_sr, staged_rs = self.slot_row, self.row_slot
+            self.slot_row, self.row_slot = live_sr, live_rs
+        if ups == 0:
+            return 0, 0
+        self._inflight = {
+            "arrays": staged_arrays,
+            "slot_row": staged_sr,
+            "row_slot": staged_rs,
+            "versions": versions,
+            "budgets": budgets,
+            "uploads": ups,
+            "nbytes": nbytes,
+            "t0_us": t0_us,
+        }
+        return ups, nbytes
+
+    def commit_async(self) -> Tuple[int, int, int, float]:
+        """Flip the double buffer at a megastep boundary: swap the
+        staged device buffers, residency tables, and device maps in —
+        unless any bucket's content version moved since issue (a miss
+        upload or budget grow landed mid-flight), in which case the
+        whole staged batch is **dropped** (the stale buffers are missing
+        those rows; the next boundary re-plans from fresh targets).
+        Dropping can never corrupt outputs — residency placement is
+        output-invariant and the miss-replay backstop is unchanged.
+        Returns ``(committed_uploads, dropped_uploads, bytes, wait_s)``
+        where ``wait_s`` is the residual wall time spent waiting for
+        staged transfers that had not finished landing (the un-hidden
+        remainder; ~0 when the megastep fully covered the copy).
+        """
+        inf, self._inflight = self._inflight, None
+        if inf is None:
+            return 0, 0, 0, 0.0
+        if tuple(self._budgets) != inf["budgets"] or any(
+            self._bucket_version[bk] != v
+            for bk, v in inf["versions"].items()
+        ):
+            self.tracer.instant(
+                "expert_upload_dropped", track="experts", cat="offload",
+                uploads=inf["uploads"],
+            )
+            return 0, inf["uploads"], 0, 0.0
+        t0 = time.time()
+        for arrs in inf["arrays"].values():
+            jax.block_until_ready(jax.tree.leaves(arrs))
+        wait_s = time.time() - t0
+        for bk, arrs in inf["arrays"].items():
+            self.ce.arrays[bk] = arrs
+            self._bucket_version[bk] += 1
+        self.slot_row = inf["slot_row"]
+        self.row_slot = inf["row_slot"]
+        for bk in inf["arrays"]:
+            self._refresh_map(bk)
+        self.tracer.complete(
+            "expert_upload", track="experts", cat="offload",
+            start_us=inf["t0_us"],
+            args={"kind": "async", "uploads": inf["uploads"],
+                  "bytes": inf["nbytes"]},
+        )
+        return inf["uploads"], 0, inf["nbytes"], wait_s
+
+    # -------------------------------------------------------- housekeeping
+    def prune_backoff(self) -> int:
+        """Drop prefetch-backoff entries that can never be consumed
+        again: rows that were permanently **degraded** (their target-bit
+        upload is never re-attempted — ``_clear_for_upload`` serves the
+        cached lower-rung copy first) and rows that became **resident**
+        through another path (a miss upload landed them, proving the
+        transport; the deferral is moot). The controller calls this at
+        every plan boundary, so ``_retry_after`` stays bounded by the
+        set of live, non-resident, still-failing rows instead of
+        accumulating one entry per fault ever fired. Returns the number
+        of entries pruned."""
+        stale = [
+            key for key in self._retry_after
+            if key in self._degraded_rows
+            or self.slot_row[key[0]][key[1], key[2]] >= 0
+        ]
+        for key in stale:
+            del self._retry_after[key]
+            if key in self._degraded_rows:
+                self._attempts.pop(key, None)
+        return len(stale)

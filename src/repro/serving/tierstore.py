@@ -1,0 +1,234 @@
+"""Three-tier expert backing store: mmap'd disk → host cache → device.
+
+The PR-3 offload manager kept every packed PMQ bucket leaf as a full
+numpy copy in host memory — a *two*-tier ladder (host → device) whose
+host rung costs as much RAM as the model's expert bytes. This module
+adds the bottom rung: the pristine packed buckets are spilled once to
+``offload_dir`` as per-leaf ``.npy`` files and reopened **memory-mapped**
+(``np.load(mmap_mode="r")``), so the OS page cache — not the process —
+owns cold expert bytes, and a byte-budgeted host cache of hot rows sits
+between the disk images and the device partitions:
+
+* **Disk** (coldest): mmap'd ``[L, count, ...]`` leaves, read-only and
+  pristine at each bucket's *target* PMQ bit-width. Every row's CRC32
+  is recorded in a JSON manifest at spill time; every disk fetch is
+  verified against it (torn writes / bit rot fail closed with
+  :class:`~repro.serving.faults.ExpertUploadFailed` — silent corruption
+  can never reach the device).
+* **Host** (warm): an EMA-heat-aware row cache bounded by
+  ``host_budget_bytes``. Placement is **bit-width-aware** through byte
+  cost: at equal routing heat the cache evicts the row that frees the
+  most bytes first, so wide-bit (hot-assigned) rows must *earn* their
+  host residency with routing traffic while 1-bit rows are nearly free
+  to keep — the hierarchical-placement idea of "Collaborative
+  Compression for Large-Scale MoE Deployment on Edge" (PAPERS.md)
+  composed with MC#'s mixed-precision buckets. Rows are promoted on
+  fetch (a disk read installs the row at its current heat) and demoted
+  purely by eviction; the EMA heat comes from the offload manager's
+  routing statistics, so the ladder warms exactly as the router does.
+* **Device** (hottest): the budget-shaped resident partitions owned by
+  :class:`~repro.serving.offload.ExpertOffloadManager` — unchanged.
+
+Because the disk tier always serves the pristine target-bit payload,
+tiering is invisible to the bit-exactness contract: a row fetched
+through any rung is bitwise-identical to the PR-3 host copy, and the
+miss-replay / CRC / degrade ladder above this store behaves as before.
+
+Fetch accounting (host hits, disk hits, disk bytes) flows through the
+tracer's lifecycle stream (``tier_fetch`` events), so the counters are
+deterministic per trace and replay-identical — the same contract every
+other :meth:`ServingMetrics.counters` field obeys.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from .faults import ExpertUploadFailed, checksum_tree
+
+__all__ = ["TieredExpertStore"]
+
+_MANIFEST = "manifest.json"
+
+
+def _leaf_name(bk: str, path: Tuple[str, ...]) -> str:
+    return bk + "__" + "__".join(path) + ".npy"
+
+
+def _tree_paths(tree: Dict, prefix: Tuple[str, ...] = ()) -> List[Tuple[Tuple[str, ...], np.ndarray]]:
+    """Deterministic (path, leaf) pairs of a nested-dict tree — sorted
+    key order, matching jax's dict traversal."""
+    out = []
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            out.extend(_tree_paths(v, prefix + (k,)))
+        else:
+            out.append((prefix + (k,), np.asarray(v)))
+    return out
+
+
+def _set_path(tree: Dict, path: Tuple[str, ...], leaf) -> None:
+    for k in path[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[path[-1]] = leaf
+
+
+class TieredExpertStore:
+    """Disk-backed expert row store with a byte-budgeted host cache.
+
+    ``host`` maps bucket key → nested dict of ``[L, count, ...]`` numpy
+    leaves (the offload manager's backing store). The constructor spills
+    every leaf to ``offload_dir``, records the per-row CRC manifest, and
+    reopens the files memory-mapped; callers should then drop their
+    reference to ``host`` — the process no longer needs those bytes.
+    ``host_budget_bytes=None`` means an unbounded host cache (two-tier
+    behavior with a disk floor); ``0`` disables host caching entirely
+    (every fetch reads and verifies the mmap).
+    """
+
+    def __init__(self, host: Dict[str, Dict], *, offload_dir: str,
+                 host_budget_bytes: Optional[int] = None, tracer=None):
+        if tracer is None:
+            from .trace import NULL_TRACER
+
+            tracer = NULL_TRACER
+        self.tracer = tracer
+        self.dir = str(offload_dir)
+        self.host_budget_bytes = (
+            None if host_budget_bytes is None else int(host_budget_bytes)
+        )
+        os.makedirs(self.dir, exist_ok=True)
+        manifest = {"buckets": {}, "crc": {}}
+        self.disk: Dict[str, Dict] = {}
+        for bk in sorted(host):
+            files = []
+            for path, leaf in _tree_paths(host[bk]):
+                fname = _leaf_name(bk, path)
+                np.save(os.path.join(self.dir, fname), leaf)
+                files.append({"path": list(path), "file": fname})
+            manifest["buckets"][bk] = files
+            # per-row CRCs from the pristine in-memory tree, *before* the
+            # mmap reopen — a spill that tore is caught on first fetch
+            L = int(jax.tree.leaves(host[bk])[0].shape[0])
+            count = int(jax.tree.leaves(host[bk])[0].shape[1])
+            for layer in range(L):
+                for slot in range(count):
+                    row = jax.tree.map(lambda a: a[layer, slot], host[bk])
+                    manifest["crc"][f"{bk}/{layer}/{slot}"] = checksum_tree(row)
+        with open(os.path.join(self.dir, _MANIFEST), "w") as f:
+            json.dump(manifest, f, sort_keys=True)
+        self._crc = {
+            tuple(k.split("/")): v for k, v in manifest["crc"].items()
+        }
+        self._open_disk(manifest)
+        # host cache: key -> (row tree, nbytes, heat)
+        self._cache: Dict[Tuple[str, int, int], Tuple[Dict, int, float]] = {}
+        self._cache_bytes = 0
+
+    @classmethod
+    def reopen(cls, offload_dir: str, tracer=None) -> "TieredExpertStore":
+        """Reattach to an existing spill directory (no re-write): mmap
+        every leaf listed in the manifest and start with a cold host
+        cache. The CRC manifest travels with the directory, so a
+        reopened store verifies rows against the *original* spill."""
+        self = cls.__new__(cls)
+        if tracer is None:
+            from .trace import NULL_TRACER
+
+            tracer = NULL_TRACER
+        self.tracer = tracer
+        self.dir = str(offload_dir)
+        self.host_budget_bytes = None
+        with open(os.path.join(self.dir, _MANIFEST)) as f:
+            manifest = json.load(f)
+        self._crc = {
+            tuple(k.split("/")): v for k, v in manifest["crc"].items()
+        }
+        self._open_disk(manifest)
+        self._cache = {}
+        self._cache_bytes = 0
+        return self
+
+    def _open_disk(self, manifest: Dict) -> None:
+        self.disk = {}
+        for bk, files in manifest["buckets"].items():
+            tree: Dict = {}
+            for ent in files:
+                leaf = np.load(
+                    os.path.join(self.dir, ent["file"]), mmap_mode="r"
+                )
+                _set_path(tree, tuple(ent["path"]), leaf)
+            self.disk[bk] = tree
+
+    # ------------------------------------------------------------- sizing
+    @property
+    def disk_bytes(self) -> int:
+        return sum(
+            a.size * a.dtype.itemsize
+            for bk in self.disk for a in jax.tree.leaves(self.disk[bk])
+        )
+
+    @property
+    def host_cached_bytes(self) -> int:
+        return self._cache_bytes
+
+    # -------------------------------------------------------------- fetch
+    def crc(self, bk: str, layer: int, slot: int) -> int:
+        return self._crc[(bk, str(int(layer)), str(int(slot)))]
+
+    def row(self, bk: str, layer: int, slot: int, heat: float = 0.0) -> Dict:
+        """One ``(layer, slot)`` row tree of bucket ``bk``, served from
+        the warmest tier that holds it. A host-cache hit refreshes the
+        row's recorded heat; a disk fetch CRC-verifies the mmap'd bytes
+        against the spill manifest (fail closed on mismatch) and
+        promotes the row into the host cache at ``heat``."""
+        key = (bk, int(layer), int(slot))
+        hit = self._cache.get(key)
+        if hit is not None:
+            row, nbytes, _ = hit
+            self._cache[key] = (row, nbytes, float(heat))
+            self.tracer.lifecycle(
+                "tier_fetch", track="experts", tier="host", nbytes=0,
+            )
+            return row
+        # disk tier: materialize the row (np.array copies out of the
+        # mmap — the device upload needs contiguous host bytes anyway)
+        row = jax.tree.map(
+            lambda a: np.array(a[int(layer), int(slot)]), self.disk[bk]
+        )
+        if checksum_tree(row) != self.crc(bk, layer, slot):
+            raise ExpertUploadFailed(
+                f"disk-tier row ({bk}, layer {layer}, slot {slot}) failed "
+                f"CRC against the spill manifest — refusing to serve "
+                f"corrupt expert bytes"
+            )
+        nbytes = sum(a.nbytes for a in jax.tree.leaves(row))
+        self.tracer.lifecycle(
+            "tier_fetch", track="experts", tier="disk", nbytes=int(nbytes),
+        )
+        self._promote(key, row, nbytes, float(heat))
+        return row
+
+    def _promote(self, key, row: Dict, nbytes: int, heat: float) -> None:
+        budget = self.host_budget_bytes
+        if budget is not None and nbytes > budget:
+            return  # row alone exceeds the cache — serve disk-direct
+        self._cache[key] = (row, int(nbytes), heat)
+        self._cache_bytes += int(nbytes)
+        if budget is None:
+            return
+        while self._cache_bytes > budget and len(self._cache) > 1:
+            # bit-width-aware eviction: coldest heat first, widest
+            # (most bytes) first on ties — wide rows must earn their
+            # host residency, narrow rows are cheap to keep
+            victim = min(
+                (k for k in self._cache if k != key),
+                key=lambda k: (self._cache[k][2], -self._cache[k][1], k),
+            )
+            self._cache_bytes -= self._cache[victim][1]
+            del self._cache[victim]

@@ -374,6 +374,8 @@ class MetricsConsumer:
             m.record_degrade()
         elif kind == "swap_fallback":
             m.record_swap_fallback()
+        elif kind == "tier_fetch":
+            m.record_tier_fetch(f["tier"], f.get("nbytes", 0))
         elif kind == "cancel":
             m.record_cancel()
         elif kind == "deadline":
